@@ -1,0 +1,65 @@
+"""The paper's communication claim at the HLO level.
+
+Lowers ONLY the server aggregation op (``core.aggregation.aggregate``) for
+the production mesh and measures its collective bytes per federated mode.
+This is the traffic that crosses the client↔server boundary each round —
+the quantity Table 2 of the paper is about. (Inside one pod the TP
+activation all-reduces dwarf it; in a real cross-site FL deployment the
+WAN carries only these bytes.)
+
+  python -m benchmarks.comm_collectives [--arch deepseek-7b]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+
+def main():
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=512")
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.configs import AdapterConfig, get_config
+    from repro.core.aggregation import aggregate
+    from repro.launch.entry import abstract_adapters
+    from repro.launch.hlo_analysis import analyze
+    from repro.launch.mesh import make_production_mesh
+    from repro.sharding.rules import adapter_specs
+    from repro.launch.entry import sanitize_specs
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deepseek-7b")
+    args = ap.parse_args()
+
+    mesh = make_production_mesh()
+    cfg = get_config(args.arch)
+    out = {}
+    for mode in ["fedavg", "ffa", "fedsa", "feddpa"]:
+        acfg = AdapterConfig(mode=mode)
+        ad = abstract_adapters(cfg, acfg, n_clients=16)
+        specs = sanitize_specs(
+            ad, adapter_specs(cfg, ad, mesh, client_axis=True), mesh)
+        shardings = jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s), specs,
+            is_leaf=lambda x: isinstance(x, P))
+        fn = jax.jit(lambda a: aggregate(a, mode),  # noqa: B023
+                     in_shardings=(shardings,), out_shardings=shardings)
+        with mesh:
+            compiled = fn.lower(ad).compile()
+        res = analyze(compiled.as_text())
+        n_dev = mesh.devices.size
+        out[mode] = res["collective_bytes"]
+        print(f"comm_collectives/{args.arch}/{mode},0,"
+              f"aggregation_coll_bytes_per_dev={res['collective_bytes']:.0f}"
+              f";kinds={res['collectives']}", flush=True)
+    if out.get("fedavg") and out.get("fedsa"):
+        print(f"# fedsa/fedavg aggregation byte ratio: "
+              f"{out['fedsa']/out['fedavg']:.3f} (paper claims 0.5)",
+              flush=True)
+    return out
+
+
+if __name__ == "__main__":
+    main()

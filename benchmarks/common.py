@@ -1,0 +1,73 @@
+"""Shared harness for the paper-claims benchmarks.
+
+All accuracy experiments run the host federated runtime on a reduced
+RoBERTa-style encoder over the synthetic GLUE-proxy task (see
+``repro.data.synthetic`` for how general vs client-specific structure is
+planted). Every benchmark prints ``name,us_per_call,derived`` CSV rows and
+returns a dict for EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import AdapterConfig, FedConfig, get_config, reduced
+from repro.core import federation
+from repro.data.synthetic import make_classification_task
+
+N_CLASSES = 4
+SEQ = 24
+VOCAB = 512
+
+
+def encoder_cfg(n_layers=2, d_model=128):
+    return reduced(get_config("roberta-large"), n_layers=n_layers,
+                   d_model=d_model)
+
+
+def make_task(n_clients, alpha, seed=0, n_train=1536, n_test=512,
+              hetero_strength=0.35, concept_shift=None):
+    clients, tests = make_classification_task(
+        n_clients=n_clients, n_classes=N_CLASSES, vocab=VOCAB, seq=SEQ,
+        n_train=n_train, n_test=n_test, alpha=alpha,
+        hetero_strength=hetero_strength, concept_shift=concept_shift,
+        seed=seed)
+    test_batch = {k: jnp.asarray(np.stack([t[k][:256] for t in tests]))
+                  for k in tests[0]}
+    return clients, test_batch
+
+
+def run_fl(mode, variant="lora", *, n_clients=3, alpha=0.5, rounds=40,
+           rank=8, local_steps=5, batch_size=16, lr=None, seed=0,
+           client_sample_rate=1.0, clients=None, test_batch=None,
+           target_acc=None, cfg=None):
+    """One federated experiment → (final_acc, history, system, per-round s)."""
+    cfg = cfg or encoder_cfg()
+    if clients is None:
+        clients, test_batch = make_task(n_clients, alpha, seed=seed)
+    fed = FedConfig(n_clients=n_clients, local_steps=local_steps,
+                    client_sample_rate=client_sample_rate)
+    acfg = AdapterConfig(mode=mode, variant=variant, rank=rank,
+                         vera_rank=4 * rank)
+    if lr is None:
+        lr = 2e-3 if variant == "vera" else 5e-2
+    sys = federation.build(jax.random.PRNGKey(seed), cfg, acfg, fed,
+                           task="classification", n_classes=N_CLASSES,
+                           lr=lr)
+    t0 = time.time()
+    hist = federation.run_rounds(
+        sys, clients, rounds=rounds, batch_size=batch_size, seed=seed + 1,
+        eval_every=max(1, rounds // 8), test_batch=test_batch,
+        target_acc=target_acc)
+    wall = time.time() - t0
+    acc = hist["acc"][-1] if hist["acc"] else float("nan")
+    return {"acc": acc, "best_acc": max(hist["acc"]) if hist["acc"]
+            else float("nan"), "hist": hist, "system": sys,
+            "s_per_round": wall / rounds}
+
+
+def emit(name, us_per_call, derived):
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)

@@ -1,0 +1,61 @@
+"""Fig. 2 (+ Figs 5, 6): cross-client similarity of learned A vs B matrices
+under increasing heterogeneity, after LOCAL-ONLY fine-tuning.
+
+Claims reproduced:
+  (i)   sim(A) > sim(B) across clients, for LoRA, rsLoRA AND VeRA;
+  (ii)  sim(B) decreases as heterogeneity increases;
+  (iii) A moves away from its init (Fig. 4 — the updates are real).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, encoder_cfg, make_task
+from repro.configs import AdapterConfig, FedConfig
+from repro.core import federation
+from repro.core.similarity import pairwise_similarity, update_similarity
+from repro.data.synthetic import stack_client_batch
+
+SPLITS = [("iid", None, 0.1), ("dir1", 1.0, 0.35), ("dir0.5", 0.5, 0.6)]
+
+
+def local_train(variant, alpha, hetero, rounds=25, seed=0):
+    cfg = encoder_cfg()
+    clients, _ = make_task(3, alpha, seed=seed, hetero_strength=hetero)
+    fed = FedConfig(n_clients=3, local_steps=5)
+    acfg = AdapterConfig(mode="fedsa", variant=variant, rank=8, vera_rank=32)
+    lr = 2e-3 if variant == "vera" else 5e-2
+    sys = federation.build(jax.random.PRNGKey(seed), cfg, acfg, fed,
+                           task="classification", n_classes=4, lr=lr)
+    init_ad = jax.tree_util.tree_map(lambda x: x[0],
+                                     sys.trainables["adapters"])
+    tr, ost = sys.trainables, sys.opt_state
+    rng = np.random.default_rng(seed + 1)
+    part = jnp.zeros((3,), jnp.float32)        # no aggregation: local only
+    for _ in range(rounds):
+        steps = [stack_client_batch(clients, 16, rng) for _ in range(5)]
+        batches = {k: jnp.asarray(np.stack([s[k] for s in steps], 1))
+                   for k in steps[0]}
+        tr, ost, _ = sys.round_fn(tr, ost, batches, part)
+    sims = pairwise_similarity(tr["adapters"])
+    upd = update_similarity(tr["adapters"], init_ad)
+    return sims, upd
+
+
+def main(rounds=25):
+    out = {}
+    for variant in ["lora", "rslora", "vera"]:
+        a_name, b_name = ("d", "b") if variant == "vera" else ("A", "B")
+        for split, alpha, hetero in SPLITS:
+            sims, upd = local_train(variant, alpha, hetero, rounds=rounds)
+            out[(variant, split)] = {"sim": sims, "update_sim": upd}
+            emit(f"fig2/{variant}/{split}", 0,
+                 f"simA={sims[a_name]:.4f};simB={sims[b_name]:.4f};"
+                 f"A_vs_init={upd[a_name]:.4f}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

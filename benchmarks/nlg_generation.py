@@ -1,0 +1,39 @@
+"""§5.3 NLG proxy: federated next-token prediction on client-flavoured
+Markov chains (GSM8K/CodeSearchNet stand-in). Metric: held-out LM loss
+(lower = better), per-client personalized eval."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import AdapterConfig, FedConfig, get_config, reduced
+from repro.core import federation
+from repro.data.synthetic import make_lm_task
+
+
+def main(rounds=30):
+    cfg = reduced(get_config("deepseek-7b"), n_layers=2, d_model=128)
+    clients, tests = make_lm_task(n_clients=3, vocab=cfg.vocab_size, seq=32,
+                                  n_train=384, n_test=96,
+                                  hetero_strength=0.4, seed=0)
+    test_batch = {k: jnp.asarray(np.stack([t[k][:32] for t in tests]))
+                  for k in tests[0]}
+    fed = FedConfig(n_clients=3, local_steps=5)
+    out = {}
+    for mode in ["fedavg", "ffa", "fedsa"]:
+        acfg = AdapterConfig(mode=mode, rank=8)
+        sys = federation.build(jax.random.PRNGKey(0), cfg, acfg, fed,
+                               task="lm", lr=5e-2)
+        hist = federation.run_rounds(sys, clients, rounds=rounds,
+                                     batch_size=16, seed=1)
+        test_loss = float(jnp.mean(sys.eval_fn(sys.trainables, test_batch)))
+        out[mode] = test_loss
+        emit(f"nlg/{mode}", 0, f"test_lm_loss={test_loss:.4f};"
+             f"train_loss={hist['loss'][-1]:.4f}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,166 @@
+"""§Roofline: three-term analysis of every dry-run artifact.
+
+  compute    = HLO_FLOPs_total / (chips · 197e12 bf16 FLOP/s)
+  memory     = HLO_bytes_total / (chips · 819e9 B/s HBM)
+  collective = collective_bytes_total / (chips · 50e9 B/s per ICI link)
+
+``cost_analysis``/HLO parsing run on the post-SPMD per-device module, so
+per-device numbers ARE total/chips — the terms below divide per-device
+quantities by per-chip rates. Also reported: MODEL_FLOPS = 6·N_active·D
+(train) or 2·N_active·D (inference) and its ratio to compiled FLOPs
+(how much of the compiled compute is "useful").
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12          # bf16 / chip (TPU v5e-class target)
+HBM_BW = 819e9               # B/s / chip
+LINK_BW = 50e9               # B/s / ICI link
+
+_PARAMS_ACTIVE = {}          # arch → active param count (cached)
+
+
+def active_params(arch):
+    """Non-embedding active params (MoE: top-k routed + shared only)."""
+    if arch in _PARAMS_ACTIVE:
+        return _PARAMS_ACTIVE[arch]
+    import jax
+    from repro.configs import get_config
+    from repro.launch.entry import abstract_model
+    cfg = get_config(arch)
+    params = abstract_model(cfg)
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        names = [str(p.key) for p in path if hasattr(p, "key")]
+        if names[-1] == "embed":
+            continue
+        n = leaf.size
+        if "moe" in names and "shared" not in names and names[-1] in (
+                "w_gate", "w_up", "w_down"):
+            n = int(n * cfg.moe.top_k / cfg.moe.n_experts)
+        total += n
+    _PARAMS_ACTIVE[arch] = total
+    return total
+
+
+def tokens_processed(shape_name, local_steps=1):
+    from repro.configs import get_shape
+    s = get_shape(shape_name)
+    if s.kind == "train":
+        return s.global_batch * s.seq_len * local_steps
+    if s.kind == "prefill":
+        return s.global_batch * s.seq_len
+    return s.global_batch                      # decode: 1 token per row
+
+
+def model_flops(arch, shape_name):
+    from repro.configs import get_shape
+    n = active_params(arch)
+    d = tokens_processed(shape_name)
+    mult = 6 if get_shape(shape_name).kind == "train" else 2
+    return mult * n * d
+
+
+def analyze(rec):
+    """One dry-run record → roofline terms (seconds) + bottleneck.
+
+    Prefers the trip-count-weighted HLO analysis (rec["hlo"]); XLA's own
+    cost_analysis counts while bodies once and is kept only as fallback.
+    """
+    if rec.get("status") != "ok":
+        return None
+    hlo = rec.get("hlo", {})
+    cost = rec.get("cost", {})
+    if "flops" in hlo:
+        flops_dev = hlo["flops"]
+        bytes_dev = hlo["bytes"]
+        coll_dev = hlo["collective_bytes"]
+    else:
+        flops_dev = cost.get("flops", 0.0)
+        bytes_dev = cost.get("bytes accessed", 0.0)
+        coll_dev = rec.get("collectives", {}).get("total_bytes", 0)
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_dev / LINK_BW
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    n_dev = rec.get("n_devices", 256)
+    mf = model_flops(rec["arch"], rec["shape"])
+    hlo_total = flops_dev * n_dev
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops": mf, "hlo_flops_total": hlo_total,
+        "useful_ratio": (mf / hlo_total) if hlo_total else 0.0,
+        "bound_s": max(terms.values()),
+        "note": rec.get("note", ""),
+    }
+
+
+def load_all(dirpath="experiments/dryrun"):
+    out = []
+    for f in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        rec = json.load(open(f))
+        a = analyze(rec)
+        if a:
+            out.append(a)
+        elif rec.get("status") == "skipped":
+            out.append({"arch": rec["arch"], "shape": rec["shape"],
+                        "mesh": rec.get("mesh", "?"), "dominant": "SKIPPED",
+                        "note": rec.get("reason", "")})
+    return out
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.2f}ms"
+    return f"{x*1e6:.1f}µs"
+
+
+def markdown_table(rows, mesh="pod16x16"):
+    lines = ["| arch | shape | compute | memory | collective | dominant | "
+             "useful FLOP ratio |",
+             "|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["mesh"] != mesh:
+            continue
+        if r["dominant"] == "SKIPPED":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"skipped | {r['note']} |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(r['t_compute_s'])} | "
+            f"{fmt_s(r['t_memory_s'])} | {fmt_s(r['t_collective_s'])} | "
+            f"**{r['dominant']}** | {r['useful_ratio']:.3f} |")
+    return "\n".join(lines)
+
+
+def main():
+    rows = load_all()
+    for r in rows:
+        if r["dominant"] == "SKIPPED":
+            continue
+        print(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']},0,"
+              f"dom={r['dominant']};bound={fmt_s(r['bound_s'])};"
+              f"useful={r['useful_ratio']:.3f}", flush=True)
+    os.makedirs("experiments", exist_ok=True)
+    with open("experiments/roofline_table.md", "w") as f:
+        f.write("## Single-pod (16×16)\n\n")
+        f.write(markdown_table(rows, "pod16x16"))
+        f.write("\n\n## Multi-pod (2×16×16)\n\n")
+        f.write(markdown_table(rows, "pod2x16x16"))
+        f.write("\n")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Benchmark driver: one function per paper table. Prints
+``name,us_per_call,derived`` CSV rows.
+
+  python -m benchmarks.run [--quick] [--only table1,fig2,...]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer rounds (CI-speed)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset, e.g. table1,fig2")
+    args = ap.parse_args()
+
+    from benchmarks import (fig2_similarity, nlg_generation, roofline,
+                            table1_accuracy, table2_comm,
+                            table3_heterogeneity, table4_clients,
+                            table5_rank, table10_compression)
+
+    q = args.quick
+    suites = {
+        "table1": lambda: table1_accuracy.main(rounds=20 if q else 60),
+        "table2": lambda: table2_comm.main(rounds=30 if q else 80),
+        "table3": lambda: table3_heterogeneity.main(rounds=20 if q else 60),
+        "table4": lambda: table4_clients.main(rounds=10 if q else 40),
+        "table5": lambda: table5_rank.main(rounds=15 if q else 50),
+        "fig2": lambda: fig2_similarity.main(rounds=10 if q else 25),
+        "nlg": lambda: nlg_generation.main(rounds=10 if q else 30),
+        "table10": lambda: table10_compression.main(rounds=20 if q else 50),
+        "roofline": roofline.main,
+    }
+    only = set(args.only.split(",")) if args.only else set(suites)
+    for name, fn in suites.items():
+        if name not in only:
+            continue
+        t0 = time.time()
+        print(f"# --- {name} ---", flush=True)
+        fn()
+        print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+
+
+if __name__ == '__main__':
+    main()

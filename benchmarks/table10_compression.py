@@ -1,0 +1,85 @@
+"""Table 10 (Appendix A.7): FedSA-LoRA with count-sketch-compressed A
+updates. Clients sketch ΔA; the server averages sketches (linear), unsketches
+top-k, and applies the estimate — ~50% of the A bytes on the wire.
+
+Claim: accuracy ≈ uncompressed FedSA-LoRA at ~half the A communication.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, make_task
+from repro.configs import AdapterConfig, FedConfig
+from repro.core import federation
+from repro.core.sketch import make_sketch, sketch, unsketch
+from repro.core.strategies import SHARED, leaf_role
+from repro.data.synthetic import stack_client_batch
+from benchmarks.common import encoder_cfg
+
+
+def _sketched_aggregate(tr_before, tr_after, mode, compression, topk):
+    """Replace shared-leaf aggregation with sketch→mean→unsketch of deltas."""
+    flat_b = jax.tree_util.tree_flatten_with_path(tr_before)[0]
+    flat_a, treedef = jax.tree_util.tree_flatten_with_path(tr_after)
+    leaves = []
+    for i, ((path, before), (_, after)) in enumerate(zip(flat_b, flat_a)):
+        if leaf_role(path, mode) != SHARED:
+            leaves.append(after)
+            continue
+        C = after.shape[0]
+        dim = int(np.prod(after.shape[1:]))
+        state = make_sketch(i, dim, rows=5, compression=compression)
+        deltas = (after - before).reshape(C, dim)
+        tables = jnp.stack([sketch(state, deltas[c]) for c in range(C)])
+        mean_tab = jnp.mean(tables, axis=0)
+        est = unsketch(state, mean_tab, topk_frac=topk)
+        new = before[0].reshape(dim) + est
+        new = jnp.broadcast_to(new.reshape((1,) + after.shape[1:]),
+                               after.shape).astype(after.dtype)
+        leaves.append(new)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def run(compression=None, rounds=50, seed=0):
+    cfg = encoder_cfg()
+    clients, test_batch = make_task(3, 0.5, seed=19)
+    fed = FedConfig(n_clients=3, local_steps=5)
+    acfg = AdapterConfig(mode="fedsa", rank=8)
+    sys = federation.build(jax.random.PRNGKey(seed), cfg, acfg, fed,
+                           task="classification", n_classes=4, lr=5e-2)
+    tr, ost = sys.trainables, sys.opt_state
+    rng = np.random.default_rng(seed + 1)
+    no_agg = jnp.zeros((3,), jnp.float32)
+    full = jnp.ones((3,), jnp.float32)
+    accs = []
+    for r in range(rounds):
+        steps = [stack_client_batch(clients, 16, rng) for _ in range(5)]
+        batches = {k: jnp.asarray(np.stack([s[k] for s in steps], 1))
+                   for k in steps[0]}
+        if compression is None:
+            tr, ost, _ = sys.round_fn(tr, ost, batches, full)
+        else:
+            before = tr
+            tr, ost, _ = sys.round_fn(tr, ost, batches, no_agg)
+            tr = _sketched_aggregate(before, tr, "fedsa", compression,
+                                     topk=compression / 2)
+        if (r + 1) % 10 == 0:
+            accs.append(float(jnp.mean(sys.eval_fn(tr, test_batch))))
+    return max(accs)
+
+
+def main(rounds=50):
+    out = {}
+    base = run(None, rounds=rounds)
+    out["fedsa"] = {"acc": base, "comm_frac": 1.0}
+    emit("table10/fedsa", 0, f"acc={base:.4f};A_comm=100%")
+    comp = run(0.5, rounds=rounds)
+    out["fedsa_sketch"] = {"acc": comp, "comm_frac": 0.5}
+    emit("table10/fedsa+sketch50", 0, f"acc={comp:.4f};A_comm=50%")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Table 1: strategies × variants accuracy on the GLUE-proxy (Dir(0.5)).
+
+Paper claim under reproduction: FedSA-{LoRA, rsLoRA, VeRA} > the
+corresponding {vanilla, FFA, FedDPA} baselines under non-IID data.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, make_task, run_fl
+
+MODES = ["fedavg", "ffa", "feddpa", "fedsa"]
+VARIANTS = ["lora", "rslora", "vera"]
+
+
+def main(rounds=60, seeds=(0,)):
+    results = {}
+    for variant in VARIANTS:
+        for mode in MODES:
+            accs = []
+            sec = 0.0
+            for seed in seeds:
+                clients, test_batch = make_task(3, 0.5, seed=7)
+                r = run_fl(mode, variant, rounds=rounds, seed=seed,
+                           clients=clients, test_batch=test_batch)
+                accs.append(r["best_acc"])
+                sec = r["s_per_round"]
+            acc = sum(accs) / len(accs)
+            results[(variant, mode)] = acc
+            emit(f"table1/{variant}/{mode}", sec * 1e6, f"acc={acc:.4f}")
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Table 2: system efficiency — trainable / communicated params, per-round
+compute time, rounds to a target accuracy."""
+from __future__ import annotations
+
+from benchmarks.common import emit, make_task, run_fl
+
+TARGET = 0.80
+
+
+def main(rounds=80):
+    out = {}
+    clients, test_batch = make_task(3, 0.5, seed=7)
+    for mode in ["fedavg", "ffa", "feddpa", "fedsa"]:
+        r = run_fl(mode, "lora", rounds=rounds, clients=clients,
+                   test_batch=test_batch, target_acc=TARGET)
+        sys = r["system"]
+        rtt = r["hist"]["rounds_to_target"]
+        out[mode] = {
+            "trainable": sys.n_trainable,
+            "comm_per_round": sys.comm_per_round,
+            "s_per_round": r["s_per_round"],
+            "rounds_to_target": rtt,
+            "total_comm_to_target": (rtt or rounds) * sys.comm_per_round,
+            "acc": r["best_acc"],
+        }
+        emit(f"table2/{mode}", r["s_per_round"] * 1e6,
+             f"trainable={sys.n_trainable};comm={sys.comm_per_round};"
+             f"rounds_to_{TARGET}={rtt};acc={r['best_acc']:.4f}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

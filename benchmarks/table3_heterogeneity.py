@@ -1,0 +1,32 @@
+"""Table 3: accuracy vs data heterogeneity (IID / Dir(1) / Dir(0.5)).
+
+Claim: FedSA's edge over FedAvg-LoRA/FFA grows as heterogeneity grows.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, make_task, run_fl
+
+# (split, dirichlet alpha, input-shift strength, concept shift). Split-1
+# is a TRUE IID partition: no label skew, no vocab remap, no conflicting
+# conditionals — the regime where the paper reports near-parity.
+SPLITS = [("split1_iid", None, 0.0, 0.0), ("split2_dir1", 1.0, 0.35, 0.35),
+          ("split3_dir0.5", 0.5, 0.5, 0.5)]
+
+
+def main(rounds=60):
+    out = {}
+    for split, alpha, hetero, cshift in SPLITS:
+        clients, test_batch = make_task(3, alpha, seed=11,
+                                        hetero_strength=hetero,
+                                        concept_shift=cshift)
+        for mode in ["fedavg", "ffa", "fedsa"]:
+            r = run_fl(mode, "lora", rounds=rounds, clients=clients,
+                       test_batch=test_batch)
+            out[(split, mode)] = r["best_acc"]
+            emit(f"table3/{split}/{mode}", r["s_per_round"] * 1e6,
+                 f"acc={r['best_acc']:.4f}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Table 4: accuracy vs number of clients (10 / 20 full participation,
+50 with 0.3 sampling as the 100-client proxy at this scale)."""
+from __future__ import annotations
+
+from benchmarks.common import emit, make_task, run_fl
+
+
+def main(rounds=40):
+    out = {}
+    settings = [(10, 1.0), (20, 1.0), (50, 0.3)]
+    for n_clients, rate in settings:
+        clients, test_batch = make_task(n_clients, 0.5, seed=13,
+                                        n_train=256 * n_clients // 2)
+        for mode in ["fedavg", "ffa", "fedsa"]:
+            r = run_fl(mode, "lora", n_clients=n_clients, rounds=rounds,
+                       client_sample_rate=rate, clients=clients,
+                       test_batch=test_batch)
+            out[(n_clients, mode)] = r["best_acc"]
+            emit(f"table4/{n_clients}clients/{mode}",
+                 r["s_per_round"] * 1e6, f"acc={r['best_acc']:.4f}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Table 5: accuracy vs LoRA rank r ∈ {2, 4, 8, 16}."""
+from __future__ import annotations
+
+from benchmarks.common import emit, make_task, run_fl
+
+
+def main(rounds=50):
+    out = {}
+    clients, test_batch = make_task(3, 0.5, seed=17)
+    for rank in [2, 4, 8, 16]:
+        for mode in ["fedavg", "ffa", "fedsa"]:
+            r = run_fl(mode, "lora", rank=rank, rounds=rounds,
+                       clients=clients, test_batch=test_batch)
+            out[(rank, mode)] = r["best_acc"]
+            emit(f"table5/r{rank}/{mode}", r["s_per_round"] * 1e6,
+                 f"acc={r['best_acc']:.4f}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

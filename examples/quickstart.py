@@ -1,0 +1,46 @@
+"""Quickstart: FedSA-LoRA in ~60 lines.
+
+Three clients fine-tune a reduced RoBERTa-style encoder with LoRA on a
+non-IID synthetic classification task; only the A matrices are aggregated.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import AdapterConfig, FedConfig, get_config, reduced
+from repro.core import federation
+from repro.core.similarity import pairwise_similarity
+from repro.data.synthetic import make_classification_task
+
+# 1. model: a reduced variant of the paper's RoBERTa backbone
+cfg = reduced(get_config("roberta-large"), n_layers=2, d_model=128)
+
+# 2. the paper's technique: LoRA adapters, share-A aggregation
+acfg = AdapterConfig(variant="lora", mode="fedsa", rank=8)
+
+# 3. federated setup: 3 clients, Dir(0.5) label skew + client vocab shift
+fed = FedConfig(n_clients=3, local_steps=5, dirichlet_alpha=0.5)
+clients, tests = make_classification_task(
+    n_clients=3, n_classes=4, vocab=cfg.vocab_size, seq=24,
+    n_train=1536, alpha=0.5, seed=0)
+test_batch = {k: jnp.asarray(np.stack([t[k][:256] for t in tests]))
+              for k in tests[0]}
+
+# 4. build + run 30 rounds
+system = federation.build(jax.random.PRNGKey(0), cfg, acfg, fed,
+                          task="classification", n_classes=4, lr=5e-2)
+print(f"trainable params/client: {system.n_trainable:,}   "
+      f"uploaded/round: {system.comm_per_round:,} "
+      f"(A matrices + head only — B stays local)")
+
+hist = federation.run_rounds(system, clients, rounds=30, batch_size=16,
+                             seed=1, eval_every=5, test_batch=test_batch)
+print("round losses:", [f"{l:.3f}" for l in hist["loss"][::5]])
+print("personalized test accuracy:", [f"{a:.3f}" for a in hist["acc"]])
+
+# 5. the paper's Fig. 2 in one line: A agrees across clients, B diverged
+sims = pairwise_similarity(system.trainables["adapters"])
+print(f"cross-client cosine similarity — A: {sims['A']:.4f}  "
+      f"B: {sims['B']:.4f}")

@@ -1,0 +1,69 @@
+"""Serving example: batched decode with a personalized FedSA-LoRA adapter.
+
+Loads (or trains briefly) a federated adapter set, picks one client's
+personalized model (base + B_i·Ā), prefills a batch of prompts and decodes
+tokens with the KV cache — the same ``prefill``/``decode_step`` entry
+points the dry-run lowers for the 256-chip mesh, here on CPU at small
+scale.
+
+  PYTHONPATH=src python examples/serve_personalized.py [--tokens 16]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import AdapterConfig, FedConfig, get_config, reduced
+from repro.core import federation
+from repro.data.synthetic import make_lm_task
+from repro.models.transformer import decode_step, prefill
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--client", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = reduced(get_config("deepseek-7b"), n_layers=4, d_model=256)
+    acfg = AdapterConfig(mode="fedsa", rank=8)
+    fed = FedConfig(n_clients=3, local_steps=4)
+    clients, _ = make_lm_task(n_clients=3, vocab=cfg.vocab_size, seq=48,
+                              n_train=192, n_test=24, seed=0)
+    system = federation.build(jax.random.PRNGKey(0), cfg, acfg, fed,
+                              task="lm", lr=5e-2)
+    print("federated warm-up (20 rounds)...")
+    federation.run_rounds(system, clients, rounds=20, batch_size=8, seed=1)
+
+    # client i's personalized model: its local B + the aggregated A
+    adapters = jax.tree_util.tree_map(lambda x: x[args.client],
+                                      system.trainables["adapters"])
+    params = system.params
+
+    B, prompt_len, max_seq = args.batch, 12, 12 + args.tokens
+    prompts = jax.random.randint(jax.random.PRNGKey(2), (B, prompt_len),
+                                 0, cfg.vocab_size)
+    t0 = time.time()
+    logits, cache, _ = prefill(cfg, params, adapters, acfg, prompts, max_seq)
+    tok = jnp.argmax(logits[:, -1], -1)[:, None]
+    out = [tok]
+    step = jax.jit(lambda t, p, c: decode_step(cfg, params, adapters, acfg,
+                                               t, p, c))
+    for i in range(args.tokens - 1):
+        pos = jnp.full((B,), prompt_len + i, jnp.int32)
+        logits, cache = step(tok, pos, cache)
+        tok = jnp.argmax(logits[:, 0], -1)[:, None]
+        out.append(tok)
+    dt = time.time() - t0
+    gen = jnp.concatenate(out, axis=1)
+    print(f"prompts {prompts.shape} → generated {gen.shape} "
+          f"in {dt:.1f}s ({B*args.tokens/dt:.1f} tok/s on 1 CPU core)")
+    for b in range(B):
+        print(f"  client{args.client} sample{b}:",
+              prompts[b, -4:].tolist(), "→", gen[b, :8].tolist())
+
+
+if __name__ == "__main__":
+    main()

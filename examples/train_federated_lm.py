@@ -1,0 +1,76 @@
+"""End-to-end driver: federated LoRA fine-tuning of a ~100M-param causal LM
+for a few hundred rounds of local steps on CPU, with checkpointing.
+
+This is the "train a ~100M model for a few hundred steps" example: a
+deepseek-style dense decoder (12 layers, d=512, vocab 8192 ≈ 60M params —
+the largest that trains in reasonable CPU time; pass --layers/--d-model to
+scale up to 100M+) on the synthetic federated LM task.
+
+  PYTHONPATH=src python examples/train_federated_lm.py \
+      [--rounds 100] [--mode fedsa] [--layers 12] [--d-model 512]
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save_federated
+from repro.configs import AdapterConfig, FedConfig, get_config, reduced
+from repro.core import federation
+from repro.core.adapters import n_params
+from repro.data.synthetic import make_lm_task
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=100)
+    ap.add_argument("--mode", default="fedsa",
+                    choices=["fedavg", "ffa", "fedsa", "feddpa"])
+    ap.add_argument("--variant", default="lora",
+                    choices=["lora", "rslora", "vera"])
+    ap.add_argument("--layers", type=int, default=12)
+    ap.add_argument("--d-model", type=int, default=512)
+    ap.add_argument("--clients", type=int, default=3)
+    ap.add_argument("--ckpt", default="experiments/ckpt_fed_lm")
+    args = ap.parse_args()
+
+    cfg = reduced(get_config("deepseek-7b"), n_layers=args.layers,
+                  d_model=args.d_model)
+    cfg = dataclasses.replace(cfg, vocab_size=8192, d_ff=args.d_model * 3)
+    acfg = AdapterConfig(variant=args.variant, mode=args.mode, rank=8)
+    fed = FedConfig(n_clients=args.clients, local_steps=4)
+
+    clients, tests = make_lm_task(n_clients=args.clients,
+                                  vocab=cfg.vocab_size, seq=64,
+                                  n_train=256 * args.clients, n_test=96,
+                                  hetero_strength=0.4, seed=0)
+    test_batch = {k: jnp.asarray(np.stack([t[k][:16] for t in tests]))
+                  for k in tests[0]}
+
+    system = federation.build(jax.random.PRNGKey(0), cfg, acfg, fed,
+                              task="lm", lr=5e-2)
+    base_params = sum(x.size for x in
+                      jax.tree_util.tree_leaves(system.params))
+    print(f"base model: {base_params/1e6:.1f}M params (frozen) | "
+          f"adapters/client: {n_params(system.trainables['adapters'])//args.clients:,} | "
+          f"uploaded/round: {system.comm_per_round:,}")
+
+    t0 = time.time()
+    for block in range(args.rounds // 10):
+        hist = federation.run_rounds(system, clients, rounds=10,
+                                     batch_size=8, seed=block)
+        test_loss = float(jnp.mean(system.eval_fn(system.trainables,
+                                                  test_batch)))
+        print(f"round {10*(block+1):4d}  train {hist['loss'][-1]:.4f}  "
+              f"test {test_loss:.4f}  ({time.time()-t0:.0f}s)", flush=True)
+
+    save_federated(args.ckpt, system.trainables["adapters"], acfg.mode)
+    print(f"checkpoint written to {args.ckpt}/ "
+          f"(server.npz = aggregated A; client_*.npz = local B)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from repro.checkpoint.npz import (load_pytree, save_pytree,
+                                  load_federated, save_federated)
+
+__all__ = ["load_pytree", "save_pytree", "load_federated", "save_federated"]

@@ -1,0 +1,93 @@
+"""Pytree checkpointing on .npz with path-flattened keys.
+
+Federated layout (matching the paper's deployment reality): the server
+checkpoint holds base params + the aggregated *shared* leaves; each client
+checkpoint holds only that client's *local* leaves. ``save_federated`` /
+``load_federated`` split/merge along ``core.strategies`` roles.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.strategies import LOCAL, leaf_role
+
+_SEP = "||"
+
+
+def _flatten(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save_pytree(path, tree):
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path, **_flatten(tree))
+
+
+def load_pytree(path, like):
+    """Restore into the structure of ``like`` (dtypes preserved from disk)."""
+    data = np.load(path)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for p, leaf in flat:
+        key = _SEP.join(str(getattr(pp, "key", getattr(pp, "idx", pp)))
+                        for pp in p)
+        arr = jnp.asarray(data[key])
+        assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), leaves)
+
+
+def save_federated(dirpath, client_adapters, mode, server_extra=None):
+    """Server file: shared+frozen leaves of client 0 (identical across
+    clients after aggregation). Client files: local leaves only."""
+    os.makedirs(dirpath, exist_ok=True)
+    flat = jax.tree_util.tree_flatten_with_path(client_adapters)[0]
+    server, locals_ = {}, {}
+    n_clients = None
+    for path, leaf in flat:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        n_clients = leaf.shape[0]
+        if leaf_role(path, mode) == LOCAL:
+            locals_[key] = np.asarray(leaf)
+        else:
+            server[key] = np.asarray(leaf[0])
+    if server_extra:
+        for k, v in _flatten(server_extra).items():
+            server["extra" + _SEP + k] = v
+    np.savez(os.path.join(dirpath, "server.npz"), **server)
+    for c in range(n_clients):
+        np.savez(os.path.join(dirpath, f"client_{c}.npz"),
+                 **{k: v[c] for k, v in locals_.items()})
+
+
+def load_federated(dirpath, like, mode):
+    """Inverse of save_federated into the structure of ``like``."""
+    server = np.load(os.path.join(dirpath, "server.npz"))
+    flat, _ = jax.tree_util.tree_flatten_with_path(like)
+    n_clients = flat[0][1].shape[0]
+    client_files = [np.load(os.path.join(dirpath, f"client_{c}.npz"))
+                    for c in range(n_clients)]
+    leaves = []
+    for path, leaf in flat:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        if leaf_role(path, mode) == LOCAL:
+            arr = jnp.stack([jnp.asarray(cf[key]) for cf in client_files])
+        else:
+            arr = jnp.broadcast_to(jnp.asarray(server[key])[None],
+                                   leaf.shape)
+        leaves.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), leaves)

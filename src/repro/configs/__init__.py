@@ -1,0 +1,64 @@
+"""Config registry: ``get_config(name)`` / ``--arch <id>``."""
+from repro.configs import (
+    chameleon_34b,
+    deepseek_7b,
+    deepseek_v3_671b,
+    falcon_mamba_7b,
+    granite_moe_3b,
+    minitron_4b,
+    qwen3_32b,
+    roberta_large,
+    stablelm_3b,
+    whisper_tiny,
+    zamba2_2p7b,
+)
+from repro.configs.base import (
+    AdapterConfig,
+    FedConfig,
+    InputShape,
+    MLAConfig,
+    ModelConfig,
+    MoEConfig,
+    SSMConfig,
+    reduced,
+)
+from repro.configs.shapes import SHAPES, get_shape
+
+# The 10 assigned architectures (dry-run matrix) ...
+ASSIGNED = {
+    m.CONFIG.name: m.CONFIG
+    for m in (
+        chameleon_34b,
+        falcon_mamba_7b,
+        deepseek_7b,
+        qwen3_32b,
+        granite_moe_3b,
+        deepseek_v3_671b,
+        zamba2_2p7b,
+        stablelm_3b,
+        minitron_4b,
+        whisper_tiny,
+    )
+}
+# ... plus the paper's own backbone.
+REGISTRY = dict(ASSIGNED)
+REGISTRY[roberta_large.CONFIG.name] = roberta_large.CONFIG
+
+
+def get_config(name: str) -> ModelConfig:
+    try:
+        return REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown arch {name!r}; available: {sorted(REGISTRY)}") from None
+
+
+def list_archs():
+    return sorted(ASSIGNED)
+
+
+__all__ = [
+    "ASSIGNED", "REGISTRY", "SHAPES", "AdapterConfig", "FedConfig",
+    "InputShape", "MLAConfig", "ModelConfig", "MoEConfig", "SSMConfig",
+    "get_config", "get_shape", "list_archs", "reduced",
+]

@@ -1,0 +1,198 @@
+"""Architecture + run configuration dataclasses.
+
+Every assigned architecture is expressed as a ``ModelConfig``. The model zoo
+in ``repro.models`` consumes only this dataclass, so new architectures are
+added by writing one config file in this package.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int = 0              # routed experts
+    n_shared_experts: int = 0       # always-on experts (DeepSeek-V3)
+    top_k: int = 2
+    d_ff: int = 0                   # per-expert hidden size
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+    # layers whose MLP is dense instead of MoE (DeepSeek-V3: first 3)
+    n_dense_layers: int = 0
+    # explicit shard_map expert-parallel dispatch (§Perf it. 2f). Compiles
+    # and produces the intended all-to-all schedule, but on THIS XLA-CPU
+    # toolchain the vmap/auto-axes boundary inserts extra gathers — left
+    # opt-in pending Shardy/TPU validation (see EXPERIMENTS.md §Perf).
+    expert_parallel: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+    absorbed_decode: bool = False   # §Perf optimization (fold W_UK into q)
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    version: int = 1                # 1 = Mamba1 selective scan, 2 = Mamba2 SSD
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 0                # 0 -> ceil(d_model / 16)
+    head_dim: int = 64              # Mamba2 only
+    n_groups: int = 1               # Mamba2 only
+    chunk: int = 128                # scan chunk length
+    backend: str = "xla"            # "xla" (chunked lax.scan) | "pallas"
+                                    # (fused VMEM-resident kernel, TPU)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                     # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0               # 0 -> d_model // n_heads
+    qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    act: str = "silu"               # silu (SwiGLU) | gelu (plain MLP)
+    causal: bool = True             # False -> bidirectional encoder (RoBERTa)
+    # sliding-window attention (None = full causal). Used for long_500k on
+    # otherwise-full-attention architectures (see DESIGN.md §5).
+    sliding_window: Optional[int] = None
+    # "xla" = blockwise lax.scan attention; "pallas" = flash kernel
+    # (kernels/flash_attention.py, TPU target; interpret-mode on CPU).
+    attn_backend: str = "xla"
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    # hybrid (Zamba2): one shared attention block every `attn_every` layers;
+    # the attention block's weights are shared across occurrences.
+    attn_every: int = 0
+    # encoder-decoder (Whisper): n_layers counts decoder layers.
+    enc_dec: bool = False
+    n_enc_layers: int = 0
+    enc_seq: int = 1500             # stub frontend frame count
+    # multi-token prediction depth (DeepSeek-V3)
+    mtp_depth: int = 0
+    # source citation for the assigned config
+    source: str = ""
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def d_inner(self) -> int:
+        assert self.ssm is not None
+        return self.ssm.expand * self.d_model
+
+    @property
+    def dt_rank(self) -> int:
+        assert self.ssm is not None
+        return self.ssm.dt_rank or -(-self.d_model // 16)
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    def layer_kinds(self) -> Tuple[str, ...]:
+        """Block kind per layer index ("attn", "mamba", "mamba2")."""
+        if self.family == "ssm":
+            kind = "mamba" if self.ssm.version == 1 else "mamba2"
+            return (kind,) * self.n_layers
+        if self.family == "hybrid":
+            kinds = []
+            for i in range(self.n_layers):
+                if self.attn_every and (i % self.attn_every) == (self.attn_every - 1):
+                    kinds.append("attn")
+                else:
+                    kinds.append("mamba2" if self.ssm.version == 2 else "mamba")
+            return tuple(kinds)
+        return ("attn",) * self.n_layers
+
+
+@dataclasses.dataclass(frozen=True)
+class AdapterConfig:
+    """The paper's technique: LoRA variant × federated aggregation mode."""
+    variant: str = "lora"           # lora | rslora | vera
+    mode: str = "fedsa"             # fedavg | ffa | fedsa | feddpa
+    rank: int = 8
+    alpha: float = 16.0
+    vera_rank: int = 256
+    vera_d_init: float = 0.1
+    # which module names receive adapters; default follows the paper
+    # (q/v attention projections). SSM archs override (DESIGN.md §4).
+    target_modules: Tuple[str, ...] = ("wq", "wv")
+    dropout: float = 0.0
+
+    @property
+    def scaling(self) -> float:
+        import math
+        if self.variant == "rslora":
+            return self.alpha / math.sqrt(self.rank)
+        if self.variant == "vera":
+            return 1.0
+        return self.alpha / self.rank
+
+
+@dataclasses.dataclass(frozen=True)
+class FedConfig:
+    n_clients: int = 3
+    local_steps: int = 10           # E in the paper
+    rounds: int = 100
+    client_sample_rate: float = 1.0
+    dirichlet_alpha: Optional[float] = 0.5   # None -> IID
+    seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                       # train | prefill | decode
+
+
+def reduced(cfg: ModelConfig, n_layers: int = 2, d_model: int = 256,
+            n_experts: int = 4) -> ModelConfig:
+    """A CPU-smoke-test-sized variant of the same architecture family."""
+    n_heads = max(2, min(cfg.n_heads, 4))
+    ratio = max(1, cfg.n_heads // max(1, cfg.n_kv_heads))
+    n_kv = max(1, n_heads // min(ratio, n_heads))
+    head_dim = max(8, d_model // n_heads)
+    d_model = head_dim * n_heads
+    moe = None
+    if cfg.moe is not None:
+        moe = dataclasses.replace(
+            cfg.moe, n_experts=min(cfg.moe.n_experts, n_experts),
+            top_k=min(cfg.moe.top_k, 2), d_ff=max(32, d_model // 2),
+            n_dense_layers=min(cfg.moe.n_dense_layers, 1))
+    mla = None
+    if cfg.mla is not None:
+        mla = MLAConfig(q_lora_rank=32, kv_lora_rank=16, qk_nope_head_dim=16,
+                        qk_rope_head_dim=8, v_head_dim=16)
+        head_dim = 0
+    ssm = None
+    if cfg.ssm is not None:
+        ssm = dataclasses.replace(cfg.ssm, d_state=min(cfg.ssm.d_state, 16),
+                                  head_dim=16, chunk=16, dt_rank=8)
+    return dataclasses.replace(
+        cfg, name=cfg.name + "-reduced", n_layers=n_layers, d_model=d_model,
+        n_heads=n_heads, n_kv_heads=n_kv, head_dim=head_dim,
+        d_ff=max(64, d_model * 2), vocab_size=min(cfg.vocab_size, 512),
+        moe=moe, mla=mla, ssm=ssm,
+        attn_every=min(cfg.attn_every, 2) if cfg.attn_every else 0,
+        n_enc_layers=min(cfg.n_enc_layers, 2), enc_seq=16,
+        mtp_depth=min(cfg.mtp_depth, 1))

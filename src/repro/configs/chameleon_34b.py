@@ -1,0 +1,21 @@
+"""Chameleon-34B — early-fusion VLM trunk [arXiv:2405.09818].
+
+Images enter as VQ token ids in the shared 65536 vocab; the VQ image
+tokenizer is the stubbed modality frontend (DESIGN.md §3.3).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="chameleon-34b",
+    family="vlm",
+    n_layers=48,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=22016,
+    vocab_size=65536,
+    qk_norm=True,          # Chameleon uses qk-norm for training stability
+    rope_theta=10_000.0,
+    sliding_window=16_384,  # enabled only for the long_500k variant
+    source="arXiv:2405.09818",
+)

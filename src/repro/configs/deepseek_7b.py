@@ -1,0 +1,16 @@
+"""DeepSeek-7B — LLaMA-architecture dense model [arXiv:2401.02954]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-7b",
+    family="dense",
+    n_layers=30,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=32,         # MHA (GQA with kv == heads)
+    d_ff=11008,
+    vocab_size=102400,
+    rope_theta=10_000.0,
+    sliding_window=16_384,  # long_500k variant only
+    source="arXiv:2401.02954",
+)

@@ -1,0 +1,21 @@
+"""DeepSeek-V3-671B — MLA + 1 shared / 256 routed top-8 MoE + MTP
+[arXiv:2412.19437]."""
+from repro.configs.base import MLAConfig, ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v3-671b",
+    family="moe",
+    n_layers=61,
+    d_model=7168,
+    n_heads=128,
+    n_kv_heads=128,        # MLA: kv heads == q heads (cache is latent)
+    d_ff=18432,            # dense-MLP layers (first 3)
+    vocab_size=129280,
+    rope_theta=10_000.0,
+    moe=MoEConfig(n_experts=256, n_shared_experts=1, top_k=8, d_ff=2048,
+                  capacity_factor=1.25, n_dense_layers=3),
+    mla=MLAConfig(q_lora_rank=1536, kv_lora_rank=512, qk_nope_head_dim=128,
+                  qk_rope_head_dim=64, v_head_dim=128),
+    mtp_depth=1,
+    source="arXiv:2412.19437",
+)

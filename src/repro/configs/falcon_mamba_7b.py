@@ -1,0 +1,15 @@
+"""Falcon-Mamba-7B — attention-free Mamba1 [arXiv:2410.05355]."""
+from repro.configs.base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="falcon-mamba-7b",
+    family="ssm",
+    n_layers=64,
+    d_model=4096,
+    n_heads=1,             # unused (attention-free)
+    n_kv_heads=1,
+    d_ff=0,                # no MLP: Mamba block replaces attn+MLP
+    vocab_size=65024,
+    ssm=SSMConfig(version=1, d_state=16, d_conv=4, expand=2, chunk=256),
+    source="arXiv:2410.05355",
+)

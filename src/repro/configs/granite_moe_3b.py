@@ -1,0 +1,21 @@
+"""Granite-MoE-3B-A800M — 40 routed experts, top-8
+[hf:ibm-granite/granite-3.0-1b-a400m-base family].
+
+The assignment line specifies "MoE 40e top-8" (the bracket note says 32; we
+follow the explicit config line: 40 experts).
+"""
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="granite-moe-3b-a800m",
+    family="moe",
+    n_layers=32,
+    d_model=1536,
+    n_heads=24,
+    n_kv_heads=8,
+    head_dim=64,
+    d_ff=512,              # (== per-expert d_ff; all MLPs are MoE)
+    vocab_size=49155,
+    moe=MoEConfig(n_experts=40, top_k=8, d_ff=512, capacity_factor=1.25),
+    source="hf:ibm-granite/granite-3.0-1b-a400m-base",
+)

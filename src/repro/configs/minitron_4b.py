@@ -1,0 +1,17 @@
+"""Minitron-4B — pruned Nemotron, 256k vocab [arXiv:2407.14679]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minitron-4b",
+    family="dense",
+    n_layers=32,
+    d_model=3072,
+    n_heads=24,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=9216,
+    vocab_size=256000,
+    rope_theta=10_000.0,
+    sliding_window=16_384,  # long_500k variant only
+    source="arXiv:2407.14679",
+)

@@ -1,0 +1,18 @@
+"""Qwen3-32B — dense GQA with qk_norm [hf:Qwen/Qwen3-8B family]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-32b",
+    family="dense",
+    n_layers=64,
+    d_model=5120,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,          # Qwen3 decouples head_dim from d_model/n_heads
+    d_ff=25600,
+    vocab_size=151936,
+    qk_norm=True,
+    rope_theta=1_000_000.0,
+    sliding_window=16_384,  # long_500k variant only
+    source="hf:Qwen/Qwen3-8B",
+)

@@ -1,0 +1,23 @@
+"""RoBERTa-large — the paper's own NLU backbone (Liu et al., 2019).
+
+Used by the paper-claims benchmarks (at reduced size on CPU); implemented as
+a bidirectional encoder + classification head. Not part of the assigned
+10-arch pool, so it is exercised by benchmarks/tests rather than the dry-run
+matrix.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="roberta-large",
+    family="dense",
+    n_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=4096,
+    vocab_size=50265,
+    act="gelu",
+    causal=False,
+
+    source="arXiv:1907.11692",
+)

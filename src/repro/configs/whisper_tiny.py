@@ -1,0 +1,25 @@
+"""Whisper-tiny — encoder-decoder; conv/mel frontend stubbed
+[arXiv:2212.04356].
+
+``input_specs`` feeds precomputed frame embeddings ``(B, 1500, 384)`` — the
+allowed frontend carve-out. n_layers counts decoder layers; the encoder has
+the same depth. Positional encoding uses RoPE in this implementation
+(deviation from Whisper's sinusoidal/learned embeddings, noted in DESIGN.md).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-tiny",
+    family="audio",
+    n_layers=4,
+    d_model=384,
+    n_heads=6,
+    n_kv_heads=6,
+    d_ff=1536,
+    vocab_size=51865,
+    act="gelu",
+    enc_dec=True,
+    n_enc_layers=4,
+    enc_seq=1500,
+    source="arXiv:2212.04356",
+)

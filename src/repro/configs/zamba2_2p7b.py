@@ -1,0 +1,22 @@
+"""Zamba2-2.7B — Mamba2 backbone + shared attention blocks [arXiv:2411.15242].
+
+One attention block's weights are shared across all its occurrences (every
+6th layer); each occurrence applies its own LoRA delta, mirroring the real
+model's shared-block-plus-LoRA design.
+"""
+from repro.configs.base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-2.7b",
+    family="hybrid",
+    n_layers=54,
+    d_model=2560,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=10240,
+    vocab_size=32000,
+    ssm=SSMConfig(version=2, d_state=64, d_conv=4, expand=2, head_dim=64,
+                  n_groups=1, chunk=256),
+    attn_every=6,          # layers 5, 11, ... are the shared attention block
+    source="arXiv:2411.15242",
+)

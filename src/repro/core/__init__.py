@@ -1,0 +1,19 @@
+"""FedSA-LoRA core: the paper's contribution as a composable JAX module.
+
+* ``adapters``    — LoRA / rsLoRA / VeRA adapter trees over any model
+* ``strategies``  — shared/local/frozen leaf roles per federated mode
+* ``aggregation`` — selective server aggregation (the paper's Eq. 2)
+* ``federation``  — host federated runtime (vmap clients × scan steps)
+* ``similarity``  — Fig. 2 cross-client A/B similarity analysis
+* ``sketch``      — FetchSGD count-sketch A-update compression (Table 10)
+"""
+from repro.core.adapters import init_adapters, n_params
+from repro.core.aggregation import aggregate, broadcast_clients, comm_bytes
+from repro.core.strategies import (FROZEN, LOCAL, SHARED, count_params,
+                                   leaf_role, role_tree, trainable_mask)
+
+__all__ = [
+    "init_adapters", "n_params", "aggregate", "broadcast_clients",
+    "comm_bytes", "FROZEN", "LOCAL", "SHARED", "count_params", "leaf_role",
+    "role_tree", "trainable_mask",
+]

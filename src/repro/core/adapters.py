@@ -1,0 +1,152 @@
+"""Adapter parameter trees for LoRA / rsLoRA / VeRA across the model zoo.
+
+The adapter pytree mirrors the model's segment layout so the same
+``lax.scan`` consumes (params, adapters) in lockstep:
+
+```
+adapters = {
+  "segments": [seg0, seg1, ...],     # stacked (n_layers_in_seg, ...)
+  "enc":      {"segments": [...]}    # enc-dec only
+  "vera_shared": {module: {"A","B"}} # VeRA only: frozen random matrices
+}
+```
+
+Each adapted module holds one *leaf dict*:
+  lora/rslora      {"A": (d_in, r) gaussian, "B": (r, d_out) zeros}
+  vera             {"d": (r,) = d_init,      "b": (d_out,) zeros}
+  feddpa           {"global": leaf, "personal": leaf}   (dual adapters)
+
+Which leaves are aggregated / kept local / frozen is decided by
+``core.strategies`` — the adapter tree itself is mode-agnostic except for
+FedDPA's doubled structure.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.blocks import target_shapes
+from repro.models.transformer import segments
+
+
+def _lora_leaf(key, d_in, d_out, rank, dtype):
+    return {"A": (jax.random.normal(key, (d_in, rank), jnp.float32)
+                  * d_in ** -0.5).astype(dtype),
+            "B": jnp.zeros((rank, d_out), dtype)}
+
+
+def _vera_leaf(key, d_in, d_out, rank, d_init, dtype):
+    del key
+    return {"d": jnp.full((rank,), d_init, dtype),
+            "b": jnp.zeros((d_out,), dtype)}
+
+
+def _module_leaf(key, shape, acfg, dtype):
+    d_in, d_out = shape
+    if acfg.variant == "vera":
+        return _vera_leaf(key, d_in, d_out, acfg.vera_rank,
+                          acfg.vera_d_init, dtype)
+    leaf = functools.partial(_lora_leaf, d_in=d_in, d_out=d_out,
+                             rank=acfg.rank, dtype=dtype)
+    if acfg.mode == "feddpa":
+        k1, k2 = jax.random.split(key)
+        return {"global": leaf(k1), "personal": leaf(k2)}
+    return leaf(key)
+
+
+def _block_adapters(key, cfg, kind, acfg, dtype):
+    """Nested adapter dict for ONE block of the given kind."""
+    shapes = target_shapes(cfg, kind, acfg.target_modules)
+    out = {}
+    ks = jax.random.split(key, max(1, len(shapes)))
+    for k, (path, shape) in zip(ks, sorted(shapes.items())):
+        group, name = path
+        out.setdefault(group, {})[name] = _module_leaf(k, shape, acfg, dtype)
+    return out
+
+
+def _stack(key, n, fn):
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+def init_adapters(key, cfg, acfg, dtype=jnp.float32):
+    segs = segments(cfg)
+    ks = jax.random.split(key, len(segs) + 2)
+    out = {"segments": []}
+    for seg, sk in zip(segs, ks[:-2]):
+        if seg["kind"] == "hybrid":
+            k1, k2 = jax.random.split(sk)
+            out["segments"].append({
+                "mamba": _stack(k1, seg["n"], lambda k: _stack(
+                    k, seg["inner"],
+                    lambda kk: _block_adapters(kk, cfg, "mamba2", acfg,
+                                               dtype))),
+                "attn": _stack(k2, seg["n"],
+                               lambda k: _block_adapters(k, cfg, "attn",
+                                                         acfg, dtype)),
+            })
+        else:
+            out["segments"].append(_stack(
+                sk, seg["n"],
+                lambda k: _block_adapters(k, cfg, seg["kind"], acfg, dtype)))
+    if cfg.enc_dec:
+        out["enc"] = {"segments": [_stack(
+            ks[-2], cfg.n_enc_layers,
+            lambda k: _block_adapters(k, cfg, "enc_attn", acfg, dtype))]}
+    if acfg.variant == "vera":
+        out["vera_shared"] = _init_vera_shared(ks[-1], cfg, acfg, dtype)
+    return out
+
+
+def _init_vera_shared(key, cfg, acfg, dtype):
+    """One frozen (A, B) pair per adapted module name, shared across layers
+    (VeRA's defining trait). Kaiming-uniform init, per the paper."""
+    shapes = {}
+    kinds = {seg["kind"] for seg in segments(cfg)}
+    if "hybrid" in kinds:
+        kinds = (kinds - {"hybrid"}) | {"mamba2", "attn"}
+    if cfg.enc_dec:
+        kinds.add("enc_attn")
+    for kind in sorted(kinds):
+        for (group, name), shape in target_shapes(
+                cfg, kind, acfg.target_modules).items():
+            prev = shapes.get(name)
+            if prev is None or (shape[0] * shape[1] > prev[0] * prev[1]):
+                shapes[name] = shape
+    out = {}
+    ks = jax.random.split(key, max(1, len(shapes)))
+    r = acfg.vera_rank
+    for k, (name, (d_in, d_out)) in zip(ks, sorted(shapes.items())):
+        k1, k2 = jax.random.split(k)
+        lim_a = (6.0 / d_in) ** 0.5
+        lim_b = (6.0 / r) ** 0.5
+        out[name] = {
+            "A": jax.random.uniform(k1, (d_in, r), dtype, -lim_a, lim_a),
+            "B": jax.random.uniform(k2, (r, d_out), dtype, -lim_b, lim_b),
+        }
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Introspection helpers
+# ---------------------------------------------------------------------------
+
+def n_params(tree):
+    return sum(x.size for x in jax.tree_util.tree_leaves(tree))
+
+
+def leaf_paths(tree):
+    """[(path_string, leaf)] with '/'-joined dict keys and seq indices."""
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        parts = []
+        for p in path:
+            if hasattr(p, "key"):
+                parts.append(str(p.key))
+            else:
+                parts.append(str(p.idx))
+        out.append(("/".join(parts), leaf))
+    return out

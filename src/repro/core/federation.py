@@ -1,0 +1,164 @@
+"""Host federated runtime: vmap over clients, scan over local steps.
+
+This is the runtime behind every accuracy experiment (paper Tables 1, 3, 4,
+5, 10 and Fig. 2). Clients are a leading pytree axis; one communication
+round is a single jitted call:
+
+  round = vmap_over_clients( scan(E local SGD steps) ) ∘ selective_aggregate
+
+The *in-mesh* (TPU pod) counterpart of the same round lives in
+``repro.launch.train``; this module is the CPU-scale reference semantics.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.adapters import init_adapters
+from repro.core.aggregation import aggregate, broadcast_clients
+from repro.core.strategies import count_params, trainable_mask
+from repro.data.synthetic import stack_client_batch
+from repro.models.transformer import (classifier_loss, encode_logits,
+                                      init_classifier, init_model, loss_fn)
+from repro.optim import adamw, apply_updates, sgd
+
+
+@dataclasses.dataclass
+class FedSystem:
+    cfg: object
+    acfg: object
+    fed: object
+    params: object              # frozen base model (no client axis)
+    trainables: object          # client-axis adapter (+head) tree
+    opt_state: object
+    mask: object
+    round_fn: object            # jitted (trainables, opt_state, batches, part)
+    eval_fn: object
+    comm_per_round: int         # parameters uploaded per client per round
+    n_trainable: int
+
+
+def _make_loss(cfg, acfg, task):
+    if task == "classification":
+        def loss(tr, params, batch):
+            return classifier_loss(cfg, params, tr["adapters"], acfg,
+                                   tr["cls_head"], batch)
+    else:
+        def loss(tr, params, batch):
+            return loss_fn(cfg, params, tr["adapters"], acfg, batch)
+    return loss
+
+
+def build(key, cfg, acfg, fed, *, task="classification", n_classes=4,
+          optimizer=None, lr=1e-2, dtype=jnp.float32):
+    """Construct the federated system (model, clients, jitted round)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    params = init_model(k1, cfg, dtype)
+    single = {"adapters": init_adapters(k2, cfg, acfg)}
+    if task == "classification":
+        single["cls_head"] = init_classifier(k3, cfg, n_classes)
+    # every client starts from the same init (paper's broadcast-at-t0)
+    trainables = broadcast_clients(single, fed.n_clients)
+    mask = trainable_mask(single, acfg.mode)
+
+    if optimizer is None:
+        optimizer = adamw(lr) if acfg.variant == "vera" else sgd(lr)
+    opt_init, opt_update = optimizer
+    opt_state = broadcast_clients(opt_init(single), fed.n_clients)
+
+    loss = _make_loss(cfg, acfg, task)
+
+    def client_update(tr, ost, batches):
+        def step(carry, batch):
+            tr, ost = carry
+            lval, grads = jax.value_and_grad(loss)(tr, params, batch)
+            upd, ost = opt_update(grads, ost, tr, mask)
+            tr = apply_updates(tr, upd)
+            return (tr, ost), lval
+
+        (tr, ost), losses = jax.lax.scan(step, (tr, ost), batches)
+        return tr, ost, jnp.mean(losses)
+
+    @jax.jit
+    def round_fn(trainables, opt_state, batches, participation):
+        tr, ost, losses = jax.vmap(client_update)(trainables, opt_state,
+                                                  batches)
+        tr = aggregate(tr, acfg.mode, participation=participation)
+        return tr, ost, losses
+
+    if task == "classification":
+        @jax.jit
+        def eval_fn(trainables, batch):
+            def one(tr, b):
+                logits, _ = encode_logits(cfg, params, tr["adapters"], acfg,
+                                          tr["cls_head"], b["tokens"])
+                return jnp.mean(
+                    (jnp.argmax(logits, -1) == b["label"]).astype(jnp.float32))
+            return jax.vmap(one)(trainables, batch)
+    else:
+        @jax.jit
+        def eval_fn(trainables, batch):
+            def one(tr, b):
+                return loss_fn(cfg, params, tr["adapters"], acfg, b)
+            return jax.vmap(one)(trainables, batch)
+
+    n_tr, comm = count_params(single, acfg.mode)
+    return FedSystem(cfg=cfg, acfg=acfg, fed=fed, params=params,
+                     trainables=trainables, opt_state=opt_state, mask=mask,
+                     round_fn=round_fn, eval_fn=eval_fn,
+                     comm_per_round=comm, n_trainable=n_tr)
+
+
+def run_rounds(system, clients, *, rounds, batch_size, seed=0,
+               eval_every=0, test_batch=None, target_acc=None):
+    """Drive the federated loop. Returns history dict.
+
+    clients: list of per-client numpy data dicts.
+    test_batch: stacked (C, ...) eval batch for eval_every / target_acc.
+    """
+    fed = system.fed
+    rng = np.random.default_rng(seed)
+    tr, ost = system.trainables, system.opt_state
+    history = {"loss": [], "acc": [], "rounds_to_target": None}
+    for r in range(rounds):
+        steps = []
+        for _ in range(fed.local_steps):
+            steps.append(stack_client_batch(clients, batch_size, rng))
+        batches = {k: jnp.asarray(np.stack([s[k] for s in steps], axis=1))
+                   for k in steps[0]}          # (C, E, B, ...)
+        if fed.client_sample_rate < 1.0:
+            part = (rng.random(fed.n_clients)
+                    < fed.client_sample_rate).astype(np.float32)
+            if part.sum() == 0:
+                part[rng.integers(fed.n_clients)] = 1.0
+            part = jnp.asarray(part)
+        else:
+            part = jnp.ones((fed.n_clients,), jnp.float32)
+        tr, ost, losses = system.round_fn(tr, ost, batches, part)
+        history["loss"].append(float(jnp.mean(losses)))
+        if eval_every and test_batch is not None and (r + 1) % eval_every == 0:
+            accs = system.eval_fn(tr, test_batch)
+            acc = float(jnp.mean(accs))
+            history["acc"].append(acc)
+            if (target_acc is not None
+                    and history["rounds_to_target"] is None
+                    and acc >= target_acc):
+                history["rounds_to_target"] = r + 1
+    system.trainables, system.opt_state = tr, ost
+    return history
+
+
+def centralized_reference(key, cfg, acfg, clients, *, task="classification",
+                          n_classes=4, steps=100, batch_size=32, lr=1e-2,
+                          seed=0):
+    """Non-federated pooled-data fine-tuning (the paper's upper reference)."""
+    import repro.configs.base as base
+    fed = base.FedConfig(n_clients=1, local_steps=1)
+    pooled = [{k: np.concatenate([c[k] for c in clients]) for k in clients[0]}]
+    sys1 = build(key, cfg, acfg, fed, task=task, n_classes=n_classes, lr=lr)
+    run_rounds(sys1, pooled, rounds=steps, batch_size=batch_size, seed=seed)
+    return sys1

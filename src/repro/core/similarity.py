@@ -1,0 +1,72 @@
+"""Cross-client similarity analysis of learned adapter matrices (Fig. 2).
+
+The paper's empirical foundation: after local fine-tuning, A matrices are
+similar across clients while B matrices diverge, increasingly so with data
+heterogeneity. ``pairwise_similarity`` reproduces the measurement: mean
+pairwise cosine similarity of flattened leaves across clients, grouped by
+leaf name (A vs B, or VeRA's d vs b).
+"""
+from __future__ import annotations
+
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _cos(u, v):
+    u = u.reshape(-1).astype(jnp.float32)
+    v = v.reshape(-1).astype(jnp.float32)
+    nu = jnp.linalg.norm(u)
+    nv = jnp.linalg.norm(v)
+    return jnp.dot(u, v) / jnp.maximum(nu * nv, 1e-12)
+
+
+def pairwise_similarity(client_adapters):
+    """Mean pairwise cosine similarity per leaf name.
+
+    client_adapters: pytree with leading client axis C. Returns
+    {leaf_name: float} averaged over all modules/layers and client pairs.
+    """
+    flat = jax.tree_util.tree_flatten_with_path(client_adapters)[0]
+    sums, counts = {}, {}
+    for path, leaf in flat:
+        names = [str(p.key) for p in path if hasattr(p, "key")]
+        if "vera_shared" in names:
+            continue
+        name = names[-1]
+        C = leaf.shape[0]
+        if C < 2:
+            continue
+        flatl = leaf.reshape(C, -1)
+        for i, j in itertools.combinations(range(C), 2):
+            s = float(_cos(flatl[i], flatl[j]))
+            sums[name] = sums.get(name, 0.0) + s
+            counts[name] = counts.get(name, 0) + 1
+    return {k: sums[k] / counts[k] for k in sums}
+
+
+def update_similarity(client_adapters, init_adapters):
+    """Cosine similarity of learned vs initialized leaves per client
+    (Fig. 4: confirms A actually moves)."""
+    def path_key(path):
+        return tuple(str(p.key) if hasattr(p, "key") else str(p.idx)
+                     for p in path)
+
+    flat_c = jax.tree_util.tree_flatten_with_path(client_adapters)[0]
+    flat_0 = {path_key(path): leaf
+              for path, leaf in
+              jax.tree_util.tree_flatten_with_path(init_adapters)[0]}
+    out = {}
+    for path, leaf in flat_c:
+        key = path_key(path)
+        names = [str(p.key) for p in path if hasattr(p, "key")]
+        if "vera_shared" in names:
+            continue
+        name = names[-1]
+        init = flat_0[key]
+        C = leaf.shape[0]
+        sims = [float(_cos(leaf[i], init)) for i in range(C)]
+        out.setdefault(name, []).extend(sims)
+    return {k: float(np.mean(v)) for k, v in out.items()}

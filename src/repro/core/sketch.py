@@ -1,0 +1,57 @@
+"""FetchSGD-style count-sketch compression of the aggregated A-updates.
+
+Appendix A.7 of the paper: since the per-round A-updates are "trivial but
+necessary", they compress to ~50% with a count sketch without hurting
+accuracy. Clients sketch their A-*deltas*, the server sums the sketches
+(sketching is linear, so sum-of-sketches = sketch-of-sum), unsketches with
+the median estimator, and keeps the top-k coordinates.
+
+The sketch state (hash indices and signs) is derived deterministically from
+a seed so server and clients agree without communicating it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def make_sketch(seed, dim, rows=5, compression=0.5):
+    """Hash state for a (rows × cols) count sketch of a dim-vector.
+
+    ``compression`` = sketch_size / dim: cols = compression·dim / rows.
+    """
+    cols = max(1, int(dim * compression / rows))
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    idx = jax.random.randint(k1, (rows, dim), 0, cols)
+    sign = jax.random.rademacher(k2, (rows, dim), jnp.float32)
+    return {"idx": idx, "sign": sign, "rows": rows, "cols": cols, "dim": dim}
+
+
+def sketch(state, g):
+    """g: (dim,) → table (rows, cols)."""
+    rows, cols = state["rows"], state["cols"]
+
+    def one_row(idx_r, sign_r):
+        return jnp.zeros((cols,), jnp.float32).at[idx_r].add(
+            sign_r * g.astype(jnp.float32))
+
+    return jax.vmap(one_row)(state["idx"], state["sign"])
+
+
+def unsketch(state, table, topk_frac=0.5):
+    """Median-of-rows estimate, then keep the top-k largest coordinates."""
+    est = jnp.median(state["sign"] * table[jnp.arange(state["rows"])[:, None],
+                                           state["idx"]], axis=0)
+    k = max(1, int(state["dim"] * topk_frac))
+    thresh = jnp.sort(jnp.abs(est))[-k]
+    return jnp.where(jnp.abs(est) >= thresh, est, 0.0)
+
+
+def compress_roundtrip(state, g, topk_frac=0.5):
+    """sketch→unsketch of one vector (what one FL round does to ΔA)."""
+    return unsketch(state, sketch(state, g), topk_frac)
+
+
+def sketch_tree_size(tree_leaf_sizes, compression=0.5):
+    """Communicated parameter count under sketching (Table 10 column)."""
+    return int(sum(tree_leaf_sizes) * compression)

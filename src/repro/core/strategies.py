@@ -1,0 +1,87 @@
+"""Leaf roles under each federated aggregation mode — the paper's §4.
+
+Every adapter leaf is classified as one of
+  ``shared``  — aggregated on the server each round (FedAvg mean),
+  ``local``   — trainable but kept on the client (personalization),
+  ``frozen``  — never updated (masked out of the optimizer).
+
+| mode   | A / d            | B / b            | notes                      |
+|--------|------------------|------------------|----------------------------|
+| fedavg | shared           | shared           | vanilla LoRA+FL (Eq. 1)    |
+| ffa    | frozen           | shared           | FFA-LoRA (Sun et al. 24)   |
+| fedsa  | shared           | local            | THIS PAPER (Eq. 2)         |
+| feddpa | global: shared   | global: shared   | dual adapters: the whole   |
+|        | personal: local  | personal: local  | personal leaf pair local   |
+
+``vera_shared`` matrices are always frozen (VeRA's defining trait).
+Classification-head leaves (used by the GLUE-proxy benchmarks) are shared
+under every mode, matching the paper's setup.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+SHARED, LOCAL, FROZEN = "shared", "local", "frozen"
+
+
+def _path_names(path):
+    names = []
+    for p in path:
+        if hasattr(p, "key"):
+            names.append(str(p.key))
+    return names
+
+
+def leaf_role(path, mode):
+    """Role of one adapter leaf. ``path`` is a jax key-path tuple."""
+    names = _path_names(path)
+    if "vera_shared" in names:
+        return FROZEN
+    if "cls_head" in names:
+        return SHARED
+    if mode == "feddpa":
+        if "global" in names:
+            return SHARED
+        if "personal" in names:
+            return LOCAL
+        return SHARED  # non-adapter trainables (e.g. head)
+    leaf_name = names[-1]
+    is_a = leaf_name in ("A", "d")
+    is_b = leaf_name in ("B", "b")
+    if mode == "fedavg":
+        return SHARED
+    if mode == "ffa":
+        return FROZEN if is_a else SHARED
+    if mode == "fedsa":
+        return SHARED if is_a else (LOCAL if is_b else SHARED)
+    raise ValueError(f"unknown mode {mode!r}")
+
+
+def role_tree(adapters, mode):
+    """Pytree of role strings with the same structure as ``adapters``."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, _: leaf_role(path, mode), adapters)
+
+
+def trainable_mask(adapters, mode):
+    """1.0 for trainable leaves (shared|local), 0.0 for frozen."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: jnp.asarray(
+            0.0 if leaf_role(path, mode) == FROZEN else 1.0,
+            dtype=jnp.float32),
+        adapters)
+
+
+def count_params(adapters, mode):
+    """(trainable, communicated-per-round) parameter counts for Table 2."""
+    trainable = 0
+    communicated = 0
+    flat = jax.tree_util.tree_flatten_with_path(adapters)[0]
+    for path, leaf in flat:
+        role = leaf_role(path, mode)
+        if role != FROZEN:
+            trainable += leaf.size
+        if role == SHARED:
+            communicated += leaf.size
+    return trainable, communicated

@@ -1,0 +1,9 @@
+from repro.data.synthetic import (
+    dirichlet_partition,
+    make_classification_task,
+    make_lm_task,
+    client_batches,
+)
+
+__all__ = ["dirichlet_partition", "make_classification_task", "make_lm_task",
+           "client_batches"]

@@ -1,0 +1,192 @@
+"""Synthetic federated datasets with planted general/client-specific structure.
+
+The container has no GLUE/GSM8K, so the paper's *relative* claims are tested
+on synthetic tasks engineered to have the same two ingredients the paper's
+analysis rests on:
+
+* **general knowledge** — a label↔token-pattern mapping shared by every
+  client (what the aggregated A should capture);
+* **client-specific knowledge** — a per-client input transformation
+  (a client-private remapping of part of the vocabulary, i.e. a shift of
+  ``E[x xᵀ]``) plus Dirichlet label skew (what a local B can absorb but a
+  shared update cannot).
+
+``make_classification_task`` → the GLUE-proxy (sequence classification).
+``make_lm_task``            → the NLG-proxy (Markov-chain language model).
+Both return per-client numpy arrays; ``client_batches`` yields jnp batches.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def dirichlet_partition(labels, n_clients, alpha, rng, min_per_client=8):
+    """Index lists per client; alpha=None → IID split."""
+    n = len(labels)
+    if alpha is None:
+        idx = rng.permutation(n)
+        return np.array_split(idx, n_clients)
+    classes = np.unique(labels)
+    client_idx = [[] for _ in range(n_clients)]
+    for c in classes:
+        pool = rng.permutation(np.where(labels == c)[0])
+        props = rng.dirichlet([alpha] * n_clients)
+        cuts = (np.cumsum(props) * len(pool)).astype(int)[:-1]
+        for i, part in enumerate(np.split(pool, cuts)):
+            client_idx[i].extend(part.tolist())
+    out = []
+    spare = []
+    for i in range(n_clients):
+        arr = rng.permutation(np.array(client_idx[i], dtype=np.int64))
+        out.append(arr)
+    # guarantee a floor so vmap'd batching never sees an empty client
+    for i in range(n_clients):
+        if len(out[i]) < min_per_client:
+            donor = int(np.argmax([len(o) for o in out]))
+            need = min_per_client - len(out[i])
+            out[i] = np.concatenate([out[i], out[donor][:need]])
+            out[donor] = out[donor][need:]
+    return out
+
+
+def _client_token_maps(vocab, n_clients, strength, rng):
+    """Per-client permutation of a fraction of the vocabulary (the planted
+    client-specific input shift). strength ∈ [0,1] = fraction remapped."""
+    maps = []
+    n_remap = int(vocab * strength)
+    for _ in range(n_clients):
+        m = np.arange(vocab)
+        if n_remap >= 2:
+            src = rng.choice(vocab, size=n_remap, replace=False)
+            m[src] = rng.permutation(src)
+        maps.append(m)
+    return maps
+
+
+def _client_label_maps(n_classes, n_clients, concept_shift, rng):
+    """Per-client permutation of a ``concept_shift`` fraction of classes —
+    CONFLICTING conditionals P_i(y|x), the regime where a single global
+    update cannot fit every client and personalization (local B) pays off.
+    Client 0 keeps the identity mapping (a reference client)."""
+    n_perm = int(round(n_classes * concept_shift))
+    if concept_shift > 0 and n_perm < 2:
+        n_perm = 2                     # a permutation needs ≥ 2 classes
+    maps = [np.arange(n_classes)]
+    for _ in range(n_clients - 1):
+        m = np.arange(n_classes)
+        if n_perm >= 2:
+            cls = rng.choice(n_classes, n_perm, replace=False)
+            m[cls] = np.roll(cls, 1)   # cyclic → guaranteed derangement
+        maps.append(m)
+    return maps
+
+
+def make_classification_task(n_clients=3, n_classes=4, vocab=512, seq=32,
+                             n_train=1024, n_test=512, alpha=0.5,
+                             hetero_strength=0.3, concept_shift=None,
+                             n_signal=4, seed=0):
+    """GLUE-proxy: classify which planted token pattern a sequence carries.
+
+    Each class owns ``n_signal`` signature tokens; a sequence is background
+    noise with signature tokens planted at random positions (the GENERAL
+    knowledge every client shares). Clients see the data through three
+    heterogeneity channels:
+      * Dirichlet(alpha) label skew,
+      * a private remap of ``hetero_strength`` of the vocabulary
+        (input-distribution shift — moves E[x xᵀ]),
+      * a private permutation of ``concept_shift`` of the classes
+        (conflicting conditionals — what local B matrices absorb).
+    ``concept_shift`` defaults to ``hetero_strength``.
+    """
+    rng = np.random.default_rng(seed)
+    concept_shift = hetero_strength if concept_shift is None else \
+        concept_shift
+    sig = rng.choice(np.arange(vocab // 2, vocab), (n_classes, n_signal),
+                     replace=False)
+
+    def gen(n):
+        labels = rng.integers(0, n_classes, n)
+        toks = rng.integers(0, vocab // 2, (n, seq))
+        for i in range(n):
+            pos = rng.choice(seq, n_signal, replace=False)
+            toks[i, pos] = sig[labels[i]]
+        return toks.astype(np.int32), labels.astype(np.int32)
+
+    x_tr, y_tr = gen(n_train)
+    x_te, y_te = gen(n_test)
+    parts = dirichlet_partition(y_tr, n_clients, alpha, rng)
+    maps = _client_token_maps(vocab, n_clients, hetero_strength, rng)
+    lmaps = _client_label_maps(n_classes, n_clients, concept_shift, rng)
+    clients = []
+    for i in range(n_clients):
+        xi = maps[i][x_tr[parts[i]]]
+        clients.append({"tokens": xi.astype(np.int32),
+                        "label": lmaps[i][y_tr[parts[i]]].astype(np.int32)})
+    # per-client test views (personalized eval, like the paper's local test)
+    tests = [{"tokens": maps[i][x_te].astype(np.int32),
+              "label": lmaps[i][y_te].astype(np.int32)}
+             for i in range(n_clients)]
+    return clients, tests
+
+
+def make_lm_task(n_clients=3, vocab=256, seq=64, n_train=512, n_test=128,
+                 alpha=None, hetero_strength=0.3, seed=0):
+    """NLG-proxy: next-token prediction on client-flavoured Markov chains.
+
+    A global sparse bigram transition matrix is shared (general knowledge);
+    each client interpolates it with a private random transition matrix
+    (client-specific knowledge). ``alpha`` unused (no labels) but kept for
+    interface symmetry.
+    """
+    rng = np.random.default_rng(seed)
+
+    def sparse_rows(k=8):
+        T = np.zeros((vocab, vocab))
+        for v in range(vocab):
+            nxt = rng.choice(vocab, k, replace=False)
+            T[v, nxt] = rng.dirichlet([1.0] * k)
+        return T
+
+    T_global = sparse_rows()
+    clients, tests = [], []
+    for i in range(n_clients):
+        T_i = (1 - hetero_strength) * T_global + hetero_strength * sparse_rows()
+        T_i = T_i / T_i.sum(-1, keepdims=True)
+
+        def sample(n):
+            out = np.zeros((n, seq + 1), np.int32)
+            out[:, 0] = rng.integers(0, vocab, n)
+            for t in range(seq):
+                p = T_i[out[:, t]]
+                out[:, t + 1] = np.array(
+                    [rng.choice(vocab, p=p[j]) for j in range(n)])
+            return out
+
+        tr = sample(n_train // n_clients)
+        te = sample(n_test // n_clients)
+        clients.append({"tokens": tr[:, :-1], "labels": tr[:, 1:]})
+        tests.append({"tokens": te[:, :-1], "labels": te[:, 1:]})
+    return clients, tests
+
+
+def client_batches(client_data, batch_size, rng):
+    """One epoch of shuffled batches for a single client's dict of arrays."""
+    n = len(next(iter(client_data.values())))
+    order = rng.permutation(n)
+    for s in range(0, n - batch_size + 1, batch_size):
+        idx = order[s:s + batch_size]
+        yield {k: v[idx] for k, v in client_data.items()}
+
+
+def stack_client_batch(clients, batch_size, rng):
+    """One synchronized batch with a leading client axis (for vmap).
+
+    Samples WITH replacement per client so heterogeneous client sizes still
+    produce a rectangular (C, B, ...) batch.
+    """
+    outs = []
+    for c in clients:
+        n = len(next(iter(c.values())))
+        idx = rng.integers(0, n, batch_size)
+        outs.append({k: v[idx] for k, v in c.items()})
+    return {k: np.stack([o[k] for o in outs]) for k in outs[0]}

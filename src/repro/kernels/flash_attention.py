@@ -1,0 +1,94 @@
+"""Blockwise (flash) causal attention kernel with online softmax.
+
+Grid (B·H, Sq/bq, T/bkv), KV axis sequential. Running max / sum / output
+accumulator live in VMEM scratch persisted across KV steps; scores are
+never materialized beyond one (bq, bkv) tile. Supports causal masking and
+an optional sliding window (the long_500k dense-arch variant).
+
+q may be shorter than k/v (decode: Sq == 1 block against a long cache);
+query positions are offset by T - S so the causal mask lines up.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale, bq, bkv, nkv, causal, window, q_offset):
+    kv = pl.program_id(2)
+
+    @pl.when(kv == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)            # (bq, d)
+    k = k_ref[0].astype(jnp.float32)            # (bkv, d)
+    v = v_ref[0].astype(jnp.float32)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    qp = (pl.program_id(1) * bq + jax.lax.broadcasted_iota(
+        jnp.int32, (bq, bkv), 0) + q_offset)
+    kp = kv * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+    mask = jnp.ones((bq, bkv), bool)
+    if causal:
+        mask &= qp >= kp
+    if window is not None:
+        mask &= (qp - kp) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(kv == nkv - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, bq=512, bkv=512,
+                    interpret=False):
+    """q: (B, H, S, d); k, v: (B, H, T, d) → (B, H, S, d)."""
+    B, H, S, d = q.shape
+    T = k.shape[2]
+    bq = min(bq, S)
+    bkv = min(bkv, T)
+    assert S % bq == 0 and T % bkv == 0, (S, T, bq, bkv)
+    qr = q.reshape(B * H, S, d)
+    kr = k.reshape(B * H, T, d)
+    vr = v.reshape(B * H, T, d)
+    grid = (B * H, S // bq, T // bkv)
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=d ** -0.5, bq=bq, bkv=bkv,
+                          nkv=T // bkv, causal=causal, window=window,
+                          q_offset=T - S),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bkv, d), lambda h, i, j: (h, j, 0)),
+            pl.BlockSpec((1, bkv, d), lambda h, i, j: (h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, d), q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, d), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(B, H, S, d)

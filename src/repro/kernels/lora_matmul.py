@@ -1,0 +1,72 @@
+"""Fused LoRA matmul kernel: y = x·W + s·(x·A)·B in ONE pass over x.
+
+The unfused form launches three matmuls and round-trips the rank-r
+intermediate h = x·A through HBM. Fused, h lives in a VMEM scratch
+accumulator: per (m, n) output tile we stream K-blocks of x once, feeding
+BOTH the base accumulation and the A-projection; the rank-r correction is
+applied when the K-loop finishes. Arithmetic intensity of the LoRA path
+rises from ~r FLOP/byte to ~bm FLOP/byte.
+
+Tiling: grid (M/bm, N/bn, K/bk), K sequential ("arbitrary"); MXU-aligned
+block shapes (multiples of 128 on the matmul dims). Scratch:
+acc (bm, bn) f32 + h (bm, r) f32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, a_ref, b_ref, o_ref, acc_ref, h_ref, *,
+            scaling, nk):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[...]
+    acc_ref[...] += jnp.dot(x, w_ref[...],
+                            preferred_element_type=jnp.float32)
+    h_ref[...] += jnp.dot(x, a_ref[...],
+                          preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _finish():
+        delta = jnp.dot(h_ref[...].astype(b_ref.dtype), b_ref[...],
+                        preferred_element_type=jnp.float32)
+        o_ref[...] = (acc_ref[...] + scaling * delta).astype(o_ref.dtype)
+
+
+def lora_matmul(x, w, a, b, scaling, *, bm=256, bn=256, bk=512,
+                interpret=False):
+    """x: (M, K); w: (K, N); a: (K, r); b: (r, N) → (M, N)."""
+    M, K = x.shape
+    N = w.shape[1]
+    r = a.shape[1]
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
+    nk = K // bk
+    grid = (M // bm, N // bn, nk)
+    return pl.pallas_call(
+        functools.partial(_kernel, scaling=scaling, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bk, r), lambda i, j, k: (k, 0)),
+            pl.BlockSpec((r, bn), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32),
+                        pltpu.VMEM((bm, r), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, w, a, b)

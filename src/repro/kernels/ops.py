@@ -1,0 +1,60 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On a TPU backend the kernels run compiled; on CPU (this container) they run
+in ``interpret=True`` mode — the kernel body executes in Python with the
+same block decomposition, which is what the correctness tests sweep.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.lora_matmul import lora_matmul as _lora
+from repro.kernels.ssm_scan import ssm_scan as _ssm
+from repro.kernels.ssd_scan import ssd_scan_fused as _ssd_fused
+from repro.kernels.ssm_scan import ssm_scan_fused as _ssm_fused
+
+
+def _interpret_default():
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("scaling", "bm", "bn", "bk",
+                                             "interpret"))
+def lora_matmul(x, w, a, b, scaling=1.0, *, bm=256, bn=256, bk=512,
+                interpret=None):
+    interpret = _interpret_default() if interpret is None else interpret
+    return _lora(x, w, a, b, scaling, bm=bm, bn=bn, bk=bk,
+                 interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("bd", "chunk", "interpret"))
+def ssm_scan(a, b, c, *, bd=512, chunk=64, interpret=None):
+    interpret = _interpret_default() if interpret is None else interpret
+    return _ssm(a, b, c, bd=bd, chunk=chunk, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("bd", "chunk", "interpret"))
+def ssm_scan_fused(dt, x, bm, c, A, *, bd=512, chunk=64, interpret=None):
+    interpret = _interpret_default() if interpret is None else interpret
+    return _ssm_fused(dt, x, bm, c, A, bd=bd, chunk=chunk,
+                      interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("bh", "chunk", "interpret"))
+def ssd_scan_fused(dt, x, bm, c, A, *, bh=8, chunk=64, interpret=None):
+    interpret = _interpret_default() if interpret is None else interpret
+    return _ssd_fused(dt, x, bm, c, A, bh=bh, chunk=chunk,
+                      interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bkv",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=None, bq=512, bkv=512,
+                    interpret=None):
+    interpret = _interpret_default() if interpret is None else interpret
+    return _flash(q, k, v, causal=causal, window=window, bq=bq, bkv=bkv,
+                  interpret=interpret)

@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose reference)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lora_matmul_ref(x, w, a, b, scaling):
+    """y = x·W + s·(x·A)·B, f32 accumulation.
+
+    x: (M, K); w: (K, N); a: (K, r); b: (r, N).
+    """
+    x32 = x.astype(jnp.float32)
+    y = x32 @ w.astype(jnp.float32)
+    h = x32 @ a.astype(jnp.float32)
+    return (y + scaling * (h @ b.astype(jnp.float32))).astype(x.dtype)
+
+
+def ssm_scan_ref(a, b, c):
+    """Mamba1 selective scan: h_t = a_t⊙h_{t-1} + b_t; y_t = Σ_s h_t·C_t.
+
+    a, b: (B, S, D, N); c: (B, S, N). Returns (y (B, S, D) f32,
+    final state (B, D, N) f32).
+    """
+    def step(h, inp):
+        at, bt, ct = inp
+        h = at * h + bt
+        return h, jnp.einsum("bdn,bn->bd", h, ct)
+
+    a32 = a.astype(jnp.float32)
+    b32 = b.astype(jnp.float32)
+    c32 = c.astype(jnp.float32)
+    h0 = jnp.zeros(a.shape[:1] + a.shape[2:], jnp.float32)
+    h, y = jax.lax.scan(step, h0, (a32.swapaxes(0, 1), b32.swapaxes(0, 1),
+                                   c32.swapaxes(0, 1)))
+    return y.swapaxes(0, 1), h
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None):
+    """Exact softmax attention. q: (B, H, S, d); k, v: (B, H, T, d)."""
+    S, T = q.shape[2], k.shape[2]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * q.shape[-1] ** -0.5
+    qp = jnp.arange(S)[:, None] + (T - S)
+    kp = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= qp >= kp
+    if window is not None:
+        mask &= (qp - kp) < window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

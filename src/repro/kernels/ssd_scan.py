@@ -1,0 +1,82 @@
+"""Mamba2 SSD fused scan kernel — per-head outer-product state in VMEM.
+
+h_t = exp(dt_t·A_h)·h_{t-1} + (dt_t·x_t) ⊗ B_t ;  y_t = h_t · C_t
+
+Inputs are the RAW per-head projections (dt, x, B, C, A); the rank-5
+(B, S, nh, hd, ds) input tensor and the (nh, hd, ds) state are formed and
+kept in VMEM (the Zamba2/Mamba2 analogue of ``ssm_scan_fused``). Grid
+(B, nh/bh, S/chunk) with the chunk axis sequential.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(dt_ref, x_ref, bm_ref, c_ref, a_ref, y_ref, hout_ref, h_ref, *,
+            chunk, ns):
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    dt = dt_ref[0].astype(jnp.float32)          # (chunk, bh)
+    x = x_ref[0].astype(jnp.float32)            # (chunk, bh, hd)
+    bm = bm_ref[0].astype(jnp.float32)          # (chunk, bh, ds)
+    c = c_ref[0].astype(jnp.float32)            # (chunk, bh, ds)
+    A = a_ref[...].astype(jnp.float32)          # (bh,)
+
+    def step(t, h):
+        a_t = jnp.exp(dt[t] * A)                            # (bh,)
+        b_t = (dt[t][:, None] * x[t])[..., None] * bm[t][:, None, :]
+        h = a_t[:, None, None] * h + b_t                    # (bh, hd, ds)
+        y_ref[0, t] = jnp.sum(h * c[t][:, None, :],
+                              axis=-1).astype(y_ref.dtype)  # (bh, hd)
+        return h
+
+    h_ref[...] = jax.lax.fori_loop(0, chunk, step, h_ref[...])
+
+    @pl.when(s == ns - 1)
+    def _final():
+        hout_ref[0] = h_ref[...]
+
+
+def ssd_scan_fused(dt, x, bm, c, A, *, bh=8, chunk=64, interpret=False):
+    """dt: (B, S, nh); x: (B, S, nh, hd); bm, c: (B, S, nh, ds); A: (nh,).
+
+    Returns (y (B, S, nh, hd) f32, final state (B, nh, hd, ds) f32).
+    """
+    B, S, nh = dt.shape
+    hd = x.shape[-1]
+    ds = bm.shape[-1]
+    bh = min(bh, nh)
+    chunk = min(chunk, S)
+    assert nh % bh == 0 and S % chunk == 0, (nh, S, bh, chunk)
+    ns = S // chunk
+    grid = (B, nh // bh, ns)
+    return pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk, ns=ns),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, bh), lambda i, j, s: (i, s, j)),
+            pl.BlockSpec((1, chunk, bh, hd), lambda i, j, s: (i, s, j, 0)),
+            pl.BlockSpec((1, chunk, bh, ds), lambda i, j, s: (i, s, j, 0)),
+            pl.BlockSpec((1, chunk, bh, ds), lambda i, j, s: (i, s, j, 0)),
+            pl.BlockSpec((bh,), lambda i, j, s: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, bh, hd), lambda i, j, s: (i, s, j, 0)),
+            pl.BlockSpec((1, bh, hd, ds), lambda i, j, s: (i, j, 0, 0)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((B, S, nh, hd), jnp.float32),
+                   jax.ShapeDtypeStruct((B, nh, hd, ds), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((bh, hd, ds), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(dt, x, bm, c, A)

@@ -1,0 +1,136 @@
+"""Mamba1 selective-scan kernels with VMEM-resident state.
+
+Two variants:
+
+``ssm_scan``        takes precomputed decay/input tensors a, b (rank 4) —
+                    the reference-shaped kernel.
+``ssm_scan_fused``  takes the RAW projections (dt, x, B, C, A) and forms
+                    a_t = exp(dt_t·A), b_t = (dt_t·x_t)⊗B_t INSIDE the
+                    kernel — the production form: HBM traffic is one read
+                    of the rank-3 inputs and one write of y; the rank-4
+                    tensors and the (bd, N) state never touch HBM. This is
+                    the TPU adaptation of the Mamba CUDA kernel's
+                    shared-memory-resident recurrence (DESIGN.md §3.2),
+                    and the §Perf iteration-2 fix for falcon-mamba's
+                    memory-bound prefill.
+
+Grid (B, D/bd, S/chunk): the chunk axis is sequential ("arbitrary"); the
+(bd, N) state lives in VMEM scratch persisted across chunk steps. Inside a
+chunk the recurrence is a fori_loop of fused multiply-adds on the VPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, b_ref, c_ref, y_ref, h_ref, *, chunk):
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    a = a_ref[0].astype(jnp.float32)            # (chunk, bd, N)
+    b = b_ref[0].astype(jnp.float32)
+    c = c_ref[0].astype(jnp.float32)            # (chunk, N)
+
+    def step(t, h):
+        h = a[t] * h + b[t]                     # (bd, N)
+        y_ref[0, t] = jnp.sum(h * c[t][None, :], axis=-1).astype(y_ref.dtype)
+        return h
+
+    h_ref[...] = jax.lax.fori_loop(0, chunk, step, h_ref[...])
+
+
+def ssm_scan(a, b, c, *, bd=512, chunk=64, interpret=False):
+    """a, b: (B, S, D, N); c: (B, S, N). Returns y (B, S, D) f32."""
+    B, S, D, N = a.shape
+    bd = min(bd, D)
+    chunk = min(chunk, S)
+    assert D % bd == 0 and S % chunk == 0, (D, S, bd, chunk)
+    grid = (B, D // bd, S // chunk)
+    return pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, bd, N), lambda i, j, s: (i, s, j, 0)),
+            pl.BlockSpec((1, chunk, bd, N), lambda i, j, s: (i, s, j, 0)),
+            pl.BlockSpec((1, chunk, N), lambda i, j, s: (i, s, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, bd), lambda i, j, s: (i, s, j)),
+        out_shape=jax.ShapeDtypeStruct((B, S, D), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bd, N), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(a, b, c)
+
+
+def _fused_kernel(dt_ref, x_ref, bm_ref, c_ref, a_ref, y_ref, hout_ref,
+                  h_ref, *, chunk, ns):
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    dt = dt_ref[0].astype(jnp.float32)          # (chunk, bd)
+    x = x_ref[0].astype(jnp.float32)            # (chunk, bd)
+    bm = bm_ref[0].astype(jnp.float32)          # (chunk, N)
+    c = c_ref[0].astype(jnp.float32)            # (chunk, N)
+    A = a_ref[...].astype(jnp.float32)          # (bd, N)
+
+    def step(t, h):
+        a_t = jnp.exp(dt[t][:, None] * A)               # (bd, N)
+        b_t = (dt[t] * x[t])[:, None] * bm[t][None, :]  # (bd, N)
+        h = a_t * h + b_t
+        y_ref[0, t] = jnp.sum(h * c[t][None, :], axis=-1).astype(y_ref.dtype)
+        return h
+
+    h_ref[...] = jax.lax.fori_loop(0, chunk, step, h_ref[...])
+
+    @pl.when(s == ns - 1)
+    def _final():
+        hout_ref[0] = h_ref[...]
+
+
+def ssm_scan_fused(dt, x, bm, c, A, *, bd=512, chunk=64, interpret=False):
+    """dt, x: (B, S, D); bm, c: (B, S, N); A: (D, N).
+
+    Returns (y (B, S, D) f32, final state (B, D, N) f32). Decay a_t and
+    input b_t are formed in VMEM — HBM traffic is exactly one read of
+    (dt, x, bm, c) and one write of (y, h_final).
+    """
+    B, S, D = dt.shape
+    N = bm.shape[-1]
+    bd = min(bd, D)
+    chunk = min(chunk, S)
+    assert D % bd == 0 and S % chunk == 0, (D, S, bd, chunk)
+    ns = S // chunk
+    grid = (B, D // bd, ns)
+    return pl.pallas_call(
+        functools.partial(_fused_kernel, chunk=chunk, ns=ns),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, bd), lambda i, j, s: (i, s, j)),
+            pl.BlockSpec((1, chunk, bd), lambda i, j, s: (i, s, j)),
+            pl.BlockSpec((1, chunk, N), lambda i, j, s: (i, s, 0)),
+            pl.BlockSpec((1, chunk, N), lambda i, j, s: (i, s, 0)),
+            pl.BlockSpec((bd, N), lambda i, j, s: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, bd), lambda i, j, s: (i, s, j)),
+            pl.BlockSpec((1, bd, N), lambda i, j, s: (i, j, 0)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((B, S, D), jnp.float32),
+                   jax.ShapeDtypeStruct((B, D, N), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((bd, N), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(dt, x, bm, c, A)

@@ -1,0 +1,1 @@
+# Launcher layer: production mesh, entry points, multi-pod dry-run.

@@ -1,0 +1,196 @@
+# The dry-run (and ONLY the dry-run) needs 512 placeholder devices. This
+# must happen before ANY other import — jax locks device count on first init.
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove every (arch × shape × mesh) lowers and compiles.
+
+For each combination this lowers the shape's entry point (fed_train_step /
+prefill_step / serve_step) with ShapeDtypeStruct inputs (no allocation),
+compiles it for the production mesh, and records:
+
+  * memory_analysis()  — per-device bytes (proves it fits)
+  * cost_analysis()    — per-device FLOPs / bytes for §Roofline
+  * collective bytes   — parsed from the optimized HLO (all-gather /
+    all-reduce / reduce-scatter / all-to-all / collective-permute)
+
+Results land in experiments/dryrun/<arch>__<shape>__<mesh>.json, which
+benchmarks/roofline.py turns into the §Roofline table.
+
+Usage:
+  python -m repro.launch.dryrun --arch deepseek-7b --shape train_4k [--multi-pod]
+  python -m repro.launch.dryrun --all [--multi-pod]
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import ASSIGNED, SHAPES, AdapterConfig, get_config, get_shape
+from repro.launch.entry import build_entry, lower_entry, skip_reason
+from repro.launch.mesh import make_production_mesh
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _tensor_bytes(type_str):
+    """Bytes of one HLO result type, e.g. 'f32[8,128]' or a tuple thereof."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text):
+    """Sum result-operand sizes of every collective op (per device),
+    bucketed by collective kind."""
+    out = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        eq = s.split(" = ", 1)
+        if len(eq) != 2:
+            continue
+        rhs = eq[1]
+        for kind in _COLLECTIVES:
+            # match 'f32[..] all-reduce(' and async '...-start(' forms,
+            # skipping '-done' (would double count)
+            if f" {kind}(" in rhs or f" {kind}-start(" in rhs:
+                ty = rhs.split(" ", 1)[0]
+                out[kind]["count"] += 1
+                out[kind]["bytes"] += _tensor_bytes(ty)
+                break
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items()
+                             if isinstance(v, dict))
+    return out
+
+
+def run_one(arch, shape_name, multi_pod=False, acfg=None, outdir=None,
+            entry_kw=None):
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "status": "ok"}
+    reason = skip_reason(cfg, shape)
+    if reason:
+        rec["status"] = "skipped"
+        rec["reason"] = reason
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    entry = build_entry(cfg, shape, mesh, acfg or AdapterConfig(),
+                        **(entry_kw or {}))
+    rec["note"] = entry.note
+    lowered = lower_entry(entry, mesh)
+    rec["lower_s"] = round(time.time() - t0, 1)
+    t1 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t1, 1)
+
+    try:
+        mem = compiled.memory_analysis()
+        rec["memory"] = {
+            k: int(getattr(mem, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes",
+                      "alias_size_in_bytes")
+            if hasattr(mem, k)}
+    except Exception as e:  # noqa: BLE001 — CPU backend may not support it
+        rec["memory"] = {"error": str(e)}
+    try:
+        cost = compiled.cost_analysis()
+        rec["cost"] = {k: float(v) for k, v in cost.items()
+                       if isinstance(v, (int, float)) and (
+                           "flops" in k or "bytes" in k or k == "utilization")}
+    except Exception as e:  # noqa: BLE001
+        rec["cost"] = {"error": str(e)}
+    hlo = compiled.as_text()
+    rec["collectives"] = collective_stats(hlo)   # unweighted (legacy)
+    # trip-count-weighted per-device FLOPs/bytes/collectives — the roofline
+    # source (cost_analysis counts while bodies once; see hlo_analysis.py)
+    from repro.launch.hlo_analysis import analyze
+    try:
+        rec["hlo"] = analyze(hlo)
+    except Exception as e:  # noqa: BLE001
+        rec["hlo"] = {"error": str(e)}
+    rec["n_devices"] = mesh.devices.size
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ASSIGNED), default=None)
+    ap.add_argument("--shape", choices=sorted(SHAPES), default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--outdir", default="experiments/dryrun")
+    ap.add_argument("--variant", default="lora",
+                    choices=["lora", "rslora", "vera"])
+    ap.add_argument("--mode", default="fedsa",
+                    choices=["fedavg", "ffa", "fedsa", "feddpa"])
+    args = ap.parse_args()
+
+    acfg = AdapterConfig(variant=args.variant, mode=args.mode)
+    pairs = []
+    if args.all:
+        for a in sorted(ASSIGNED):
+            for s in SHAPES:
+                pairs.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        pairs = [(args.arch, args.shape)]
+
+    os.makedirs(args.outdir, exist_ok=True)
+    failures = 0
+    for arch, shape in pairs:
+        tag = f"{arch}__{shape}__" + ("pod2x16x16" if args.multi_pod
+                                      else "pod16x16")
+        try:
+            rec = run_one(arch, shape, multi_pod=args.multi_pod, acfg=acfg)
+        except Exception:  # noqa: BLE001
+            rec = {"arch": arch, "shape": shape, "status": "FAILED",
+                   "traceback": traceback.format_exc()}
+            failures += 1
+        with open(os.path.join(args.outdir, tag + ".json"), "w") as f:
+            json.dump(rec, f, indent=1)
+        status = rec["status"]
+        extra = ""
+        if status == "ok":
+            extra = (f"lower {rec['lower_s']}s compile {rec['compile_s']}s "
+                     f"coll {rec['collectives']['total_bytes']/2**20:.1f} MiB")
+        print(f"[dryrun] {tag}: {status} {extra}", flush=True)
+        if status == "ok":
+            mem = rec.get("memory", {})
+            if "temp_size_in_bytes" in mem:
+                print(f"  memory: args {mem.get('argument_size_in_bytes',0)/2**30:.2f} GiB "
+                      f"out {mem.get('output_size_in_bytes',0)/2**30:.2f} GiB "
+                      f"temp {mem.get('temp_size_in_bytes',0)/2**30:.2f} GiB",
+                      flush=True)
+            cost = rec.get("cost", {})
+            if "flops" in cost:
+                print(f"  cost: {cost['flops']/1e9:.1f} GFLOP/device, "
+                      f"bytes {cost.get('bytes accessed', 0)/2**30:.2f} GiB",
+                      flush=True)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,346 @@
+"""Lowered entry points per input shape + their ShapeDtypeStruct inputs.
+
+One builder per shape kind:
+
+  train_4k     → ``fed_train_step``  (E local steps + selective aggregation)
+  prefill_32k  → ``prefill_step``    (prompt → cache + last-token logits)
+  decode_32k   → ``serve_step``      (1 token against a seq_len cache)
+  long_500k    → ``serve_step``      (sub-quadratic archs; dense archs run a
+                                      sliding-window variant; skips recorded)
+
+Each builder returns an ``Entry``: the function, its abstract args
+(ShapeDtypeStructs — nothing is allocated), and in/out sharding spec trees.
+``launch.dryrun`` lowers/compiles them on the production meshes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import AdapterConfig
+from repro.core.adapters import init_adapters
+from repro.core.aggregation import aggregate, broadcast_clients
+from repro.core.strategies import trainable_mask
+from repro.models.transformer import (decode_step, init_cache, init_model,
+                                      loss_fn, prefill)
+from repro.optim import apply_updates, sgd
+from repro.sharding.rules import (adapter_specs, batch_specs, cache_specs,
+                                  dp_axis, param_specs)
+
+SLIDING_WINDOW = 16_384
+
+
+@dataclasses.dataclass
+class Entry:
+    name: str
+    fn: Any
+    args: Tuple[Any, ...]
+    in_specs: Tuple[Any, ...]
+    out_specs: Any
+    donate_argnums: Tuple[int, ...] = ()
+    note: str = ""
+
+
+def _dp_size(mesh):
+    return int(np.prod([mesh.shape[a] for a in mesh.axis_names
+                        if a != "model"]))
+
+
+def shape_dtype(tree):
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def abstract_model(cfg, dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        functools.partial(init_model, cfg=cfg, dtype=dtype),
+        jax.random.PRNGKey(0))
+
+
+def abstract_adapters(cfg, acfg, n_clients=None):
+    ad = jax.eval_shape(
+        functools.partial(init_adapters, cfg=cfg, acfg=acfg),
+        jax.random.PRNGKey(0))
+    if n_clients is not None:
+        ad = jax.eval_shape(
+            functools.partial(broadcast_clients, n_clients=n_clients), ad)
+    return ad
+
+
+def skip_reason(cfg, shape) -> Optional[str]:
+    """Non-None → this (arch, shape) pair is skipped (recorded in DESIGN)."""
+    if shape.name == "long_500k" and cfg.enc_dec:
+        return ("encoder-decoder with ~1.5k-frame encoder; 524288-token "
+                "decode is architecturally meaningless")
+    return None
+
+
+def variant_for_shape(cfg, shape):
+    """long_500k on full-attention archs → sliding-window variant."""
+    note = ""
+    if shape.name == "long_500k" and cfg.family in ("dense", "moe", "vlm") \
+            and cfg.mla is None and cfg.sliding_window is None:
+        cfg = dataclasses.replace(cfg, sliding_window=SLIDING_WINDOW)
+        note = f"sliding-window {SLIDING_WINDOW} variant"
+    return cfg, note
+
+
+# ---------------------------------------------------------------------------
+# train_4k — the paper's round as ONE lowered program
+# ---------------------------------------------------------------------------
+
+def make_fed_train_step(cfg, acfg, lr=1e-2, momentum=0.9, local_steps=1,
+                        microbatches=1):
+    """In-mesh federated round: clients = dp groups.
+
+    adapters/opt_state carry a leading client axis sharded over dp; the
+    selective aggregation mean lowers to an all-reduce over dp of the
+    SHARED leaves only (FedSA: the A matrices — half of FedAvg's bytes).
+
+    ``microbatches`` > 1 splits each local batch into grad-accumulation
+    chunks (§Perf it. 3b): activation memory scales 1/m at the cost of
+    re-streaming the frozen weights m× (compute/semantics unchanged).
+    """
+    opt_init, opt_update = sgd(lr, momentum)
+
+    def fed_train_step(params, adapters, opt_state, batch):
+        mask = trainable_mask(shape_dtype_like_first_client(adapters),
+                              acfg.mode)
+
+        def grads_of(ad, b):
+            if microbatches == 1:
+                return jax.value_and_grad(
+                    lambda a: loss_fn(cfg, params, a, acfg, b, remat=True)
+                )(ad)
+            mb = jax.tree_util.tree_map(
+                lambda x: x.reshape((microbatches,
+                                     x.shape[0] // microbatches)
+                                    + x.shape[1:]), b)
+
+            def acc(carry, bi):
+                lsum, gsum = carry
+                l, g = jax.value_and_grad(
+                    lambda a: loss_fn(cfg, params, a, acfg, bi, remat=True)
+                )(ad)
+                return (lsum + l,
+                        jax.tree_util.tree_map(jnp.add, gsum, g)), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda x: jnp.zeros(x.shape, jnp.float32), ad)
+            (lsum, gsum), _ = jax.lax.scan(acc, (0.0, zeros), mb)
+            scale = 1.0 / microbatches
+            return lsum * scale, jax.tree_util.tree_map(
+                lambda g: g * scale, gsum)
+
+        def client_update(ad, ost, bs):
+            def step(carry, b):
+                ad, ost = carry
+                lval, grads = grads_of(ad, b)
+                upd, ost = opt_update(grads, ost, ad, mask)
+                ad = apply_updates(ad, upd)
+                return (ad, ost), lval
+
+            (ad, ost), losses = jax.lax.scan(step, (ad, ost), bs)
+            return ad, ost, jnp.mean(losses)
+
+        adapters, opt_state, losses = jax.vmap(client_update)(
+            adapters, opt_state, batch)
+        adapters = aggregate(adapters, acfg.mode)
+        return adapters, opt_state, jnp.mean(losses)
+
+    return fed_train_step
+
+
+def shape_dtype_like_first_client(tree):
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), tree)
+
+
+def build_train_entry(cfg, shape, mesh, acfg=None, local_steps=1,
+                      microbatches=1, dtype=jnp.bfloat16):
+    acfg = acfg or AdapterConfig()
+    C = _dp_size(mesh)
+    B_local = max(1, shape.global_batch // C)
+    S = shape.seq_len
+
+    params = abstract_model(cfg, dtype)
+    adapters = abstract_adapters(cfg, acfg, n_clients=C)
+    opt_init, _ = sgd(1e-2, 0.9)
+    opt_state = jax.eval_shape(opt_init, adapters)  # client axis included
+
+    batch = {"tokens": jax.ShapeDtypeStruct((C, local_steps, B_local, S),
+                                            jnp.int32),
+             "labels": jax.ShapeDtypeStruct((C, local_steps, B_local, S),
+                                            jnp.int32)}
+    if cfg.enc_dec:
+        batch["frames"] = jax.ShapeDtypeStruct(
+            (C, local_steps, B_local, cfg.enc_seq, cfg.d_model), dtype)
+
+    p_specs = param_specs(cfg, params, mesh)
+    a_specs = adapter_specs(cfg, adapters, mesh, client_axis=True)
+    o_specs = jax.tree_util.tree_map(
+        lambda leaf: _lookup_spec_for_opt(leaf, adapters, a_specs),
+        opt_state)
+    b_specs = batch_specs(batch, mesh)
+
+    fn = make_fed_train_step(cfg, acfg, local_steps=local_steps,
+                             microbatches=microbatches)
+    return Entry(
+        name="fed_train_step", fn=fn,
+        args=(params, adapters, opt_state, batch),
+        in_specs=(p_specs, a_specs, o_specs, b_specs),
+        out_specs=(a_specs, o_specs, P()),
+        donate_argnums=(1, 2))
+
+
+def _lookup_spec_for_opt(leaf, adapters, a_specs):
+    flat_a = jax.tree_util.tree_leaves(adapters)
+    flat_s = jax.tree_util.tree_leaves(
+        a_specs, is_leaf=lambda x: isinstance(x, P))
+    for a, s in zip(flat_a, flat_s):
+        if a.shape == leaf.shape and a.dtype == leaf.dtype:
+            return s
+    # f32 momentum of an f32 adapter leaf: match on shape only
+    for a, s in zip(flat_a, flat_s):
+        if a.shape == leaf.shape:
+            return s
+    return P()
+
+
+# ---------------------------------------------------------------------------
+# prefill / decode
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(cfg, acfg, max_seq, cache_dtype=jnp.bfloat16):
+    def prefill_step(params, adapters, tokens, frames=None):
+        logits, cache, _ = prefill(cfg, params, adapters, acfg, tokens,
+                                   max_seq, enc_frames=frames,
+                                   cache_dtype=cache_dtype)
+        return logits, cache
+    return prefill_step
+
+
+def build_prefill_entry(cfg, shape, mesh, acfg=None, dtype=jnp.bfloat16):
+    acfg = acfg or AdapterConfig()
+    B, S = shape.global_batch, shape.seq_len
+    params = abstract_model(cfg, dtype)
+    adapters = abstract_adapters(cfg, acfg)
+
+    args = [params, adapters,
+            jax.ShapeDtypeStruct((B, S), jnp.int32)]
+    fn = make_prefill_step(cfg, acfg, max_seq=S)
+    if cfg.enc_dec:
+        args.append(jax.ShapeDtypeStruct((B, cfg.enc_seq, cfg.d_model),
+                                         dtype))
+
+    cache = jax.eval_shape(
+        functools.partial(init_cache, cfg=cfg, batch_size=B, max_seq=S),
+    )
+    p_specs = param_specs(cfg, params, mesh)
+    a_specs = adapter_specs(cfg, adapters, mesh, client_axis=False)
+    dp_ok = B % _dp_size(mesh) == 0
+    c_specs = cache_specs(cfg, cache, mesh, batch_over_dp=dp_ok)
+    dp = dp_axis(mesh) if dp_ok else None
+    tok_spec = P(dp, None)
+    in_specs = [p_specs, a_specs, tok_spec]
+    if cfg.enc_dec:
+        in_specs.append(P(dp, None, None))
+    logits_spec = P(dp, None, "model")
+    return Entry(name="prefill_step", fn=fn, args=tuple(args),
+                 in_specs=tuple(in_specs),
+                 out_specs=(logits_spec, c_specs))
+
+
+def make_serve_step(cfg, acfg):
+    def serve_step(params, adapters, token, pos, cache):
+        return decode_step(cfg, params, adapters, acfg, token, pos, cache)
+    return serve_step
+
+
+def build_decode_entry(cfg, shape, mesh, acfg=None, dtype=jnp.bfloat16):
+    acfg = acfg or AdapterConfig()
+    B, S = shape.global_batch, shape.seq_len
+    params = abstract_model(cfg, dtype)
+    adapters = abstract_adapters(cfg, acfg)
+    cache = jax.eval_shape(
+        functools.partial(init_cache, cfg=cfg, batch_size=B, max_seq=S))
+    args = (params, adapters,
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            jax.ShapeDtypeStruct((B,), jnp.int32),
+            cache)
+    p_specs = param_specs(cfg, params, mesh)
+    a_specs = adapter_specs(cfg, adapters, mesh, client_axis=False)
+    dp_ok = B % _dp_size(mesh) == 0
+    c_specs = cache_specs(cfg, cache, mesh, batch_over_dp=dp_ok)
+    dp = dp_axis(mesh) if dp_ok else None
+    in_specs = (p_specs, a_specs, P(dp, None), P(dp), c_specs)
+    logits_spec = P(dp, None, "model")
+    return Entry(name="serve_step", fn=make_serve_step(cfg, acfg),
+                 args=args, in_specs=in_specs,
+                 out_specs=(logits_spec, c_specs),
+                 donate_argnums=(4,))
+
+
+# ---------------------------------------------------------------------------
+# dispatcher
+# ---------------------------------------------------------------------------
+
+def build_entry(cfg, shape, mesh, acfg=None, **kw):
+    """(cfg, InputShape, mesh) → Entry or None (recorded skip)."""
+    if skip_reason(cfg, shape):
+        return None
+    cfg, note = variant_for_shape(cfg, shape)
+    if shape.kind == "train":
+        e = build_train_entry(cfg, shape, mesh, acfg, **kw)
+    elif shape.kind == "prefill":
+        e = build_prefill_entry(cfg, shape, mesh, acfg)
+    else:
+        e = build_decode_entry(cfg, shape, mesh, acfg)
+    e.note = note
+    return e
+
+
+def sanitize_specs(shape_tree, spec_tree, mesh):
+    """Drop mesh axes from any spec dimension they do not divide evenly
+    (jit's argument-sharding path requires exact divisibility; GSPMD would
+    otherwise pad). E.g. whisper's 51865-vocab embed cannot be 16-way
+    sharded — it falls back to replicated on that dim."""
+    def fix(leaf, spec):
+        if spec is None:
+            return None
+        dims = []
+        for d, ax in zip(leaf.shape, tuple(spec) + (None,) * leaf.ndim):
+            if ax is None:
+                dims.append(None)
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            size = 1
+            for a in axes:
+                size *= mesh.shape[a]
+            dims.append(ax if d % size == 0 else None)
+        return P(*dims)
+
+    return jax.tree_util.tree_map(
+        fix, shape_tree, spec_tree)
+
+
+def lower_entry(entry, mesh):
+    """jit + lower under the mesh. Returns the Lowered object."""
+    in_specs = sanitize_specs(entry.args, entry.in_specs, mesh)
+    out_shape = jax.eval_shape(entry.fn, *entry.args)
+    out_specs = sanitize_specs(out_shape, entry.out_specs, mesh)
+    to_sharding = lambda spec_tree: jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+    jitted = jax.jit(entry.fn,
+                     in_shardings=to_sharding(in_specs),
+                     out_shardings=to_sharding(out_specs),
+                     donate_argnums=entry.donate_argnums)
+    with mesh:
+        return jitted.lower(*entry.args)

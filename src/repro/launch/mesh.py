@@ -1,0 +1,35 @@
+"""Production mesh definitions.
+
+Functions, not module-level constants — importing this module never touches
+jax device state. The dry-run sets ``XLA_FLAGS=--xla_force_host_platform_
+device_count=512`` *before* importing jax so both meshes can be built on a
+CPU host.
+
+single-pod : (16, 16)        axes ("data", "model")   — 256 chips (v5e pod)
+multi-pod  : (2, 16, 16)     axes ("pod", "data", "model") — 512 chips
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh needs {n} devices, found {len(devices)}; run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=512")
+    import numpy as np
+    return jax.sharding.Mesh(np.asarray(devices).reshape(shape), axes)
+
+
+def make_host_mesh():
+    """1×1 mesh over the single real device (tests / examples)."""
+    import numpy as np
+    return jax.sharding.Mesh(
+        np.asarray(jax.devices()[:1]).reshape(1, 1), ("data", "model"))

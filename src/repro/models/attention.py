@@ -1,0 +1,333 @@
+"""Attention: GQA (+qk_norm, sliding window, cross-attn) and MLA.
+
+Full-sequence attention is blockwise (flash-style online softmax over KV
+chunks, scanned over Q chunks) so prefill at 32k never materializes S×S
+scores. Decode attends one query against the cache with masked positions;
+with a sequence-sharded cache GSPMD lowers the max/sum reductions to small
+all-reduces (flash-decode for free).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (adapted, apply_rope, dense_init,
+                                 effective_weight, maybe, rms_norm)
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg, dtype, cross=False):
+    d, H, Hkv = cfg.d_model, cfg.n_heads, cfg.n_kv_heads
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": dense_init(ks[0], d, H * hd, dtype),
+        "wk": dense_init(ks[1], d, Hkv * hd, dtype),
+        "wv": dense_init(ks[2], d, Hkv * hd, dtype),
+        "wo": dense_init(ks[3], H * hd, d, dtype),
+    }
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def _qkv(cfg, p, ad, acfg, x, kv_x, vera_shared):
+    """Project to per-head q, k, v (no rope yet)."""
+    B, S, _ = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    sc = acfg.scaling if acfg is not None else 1.0
+    vs = (vera_shared or {})
+    q = adapted(p["wq"], maybe(ad, "wq"), x, sc, vs.get("wq"))
+    k = adapted(p["wk"], maybe(ad, "wk"), kv_x, sc, vs.get("wk"))
+    v = adapted(p["wv"], maybe(ad, "wv"), kv_x, sc, vs.get("wv"))
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, kv_x.shape[1], Hkv, hd)
+    v = v.reshape(B, kv_x.shape[1], Hkv, hd)
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def blockwise_attention(q, k, v, q_pos, k_pos, *, causal, window=None,
+                        q_chunk=512, kv_chunk=1024):
+    """Online-softmax attention.
+
+    q: (B, S, H, hd); k, v: (B, T, Hkv, hd); *_pos: (S,)/(T,) int32.
+    Returns (B, S, H, hd). Exact; memory is O(q_chunk × kv_chunk).
+    """
+    B, S, H, hd = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    hdv = v.shape[-1]           # MLA: v head dim may differ from qk head dim
+    G = H // Hkv
+    qc = min(q_chunk, S)
+    kvc = min(kv_chunk, T)
+    # pad to multiples
+    Sp = -(-S // qc) * qc
+    Tp = -(-T // kvc) * kvc
+    q = jnp.pad(q, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+    k = jnp.pad(k, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+    v = jnp.pad(v, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+    q_pos = jnp.pad(q_pos, (0, Sp - S))
+    k_pos = jnp.pad(k_pos, (0, Tp - T), constant_values=jnp.iinfo(jnp.int32).max)
+
+    q = q.reshape(B, Sp // qc, qc, Hkv, G, hd).transpose(1, 0, 3, 4, 2, 5)
+    # (nq, B, Hkv, G, qc, hd)
+    kb = k.reshape(B, Tp // kvc, kvc, Hkv, hd).transpose(1, 0, 3, 2, 4)
+    vb = v.reshape(B, Tp // kvc, kvc, Hkv, hdv).transpose(1, 0, 3, 2, 4)
+    qp = q_pos.reshape(Sp // qc, qc)
+    kp = k_pos.reshape(Tp // kvc, kvc)
+    scale = hd ** -0.5
+
+    def q_block(args):
+        qi, qpi = args  # (B, Hkv, G, qc, hd), (qc,)
+
+        def kv_block(carry, inp):
+            m, l, acc = carry
+            ki, vi, kpi = inp
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qi.astype(jnp.float32),
+                           ki.astype(jnp.float32)) * scale
+            mask = jnp.ones((qc, kvc), bool)
+            if causal:
+                mask &= qpi[:, None] >= kpi[None, :]
+            if window is not None:
+                mask &= (qpi[:, None] - kpi[None, :]) < window
+            mask &= (kpi < jnp.iinfo(jnp.int32).max)[None, :]
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p, vi.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hkv, G, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, qc), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, qc, hdv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_block, (m0, l0, a0), (kb, vb, kp))
+        return acc / jnp.maximum(l, 1e-30)[..., None]
+
+    out = jax.lax.map(q_block, (q, qp))           # (nq, B, Hkv, G, qc, hdv)
+    out = out.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sp, H, hdv)
+    return out[:, :S].astype(v.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, window=None):
+    """One-token attention against a cache.
+
+    q: (B, 1, H, hd); caches: (B, Smax, Hkv, hd); pos: (B,) current index
+    (cache holds valid entries at [0, pos]).
+    """
+    B, _, H, hd = q.shape
+    Smax, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Hkv, G, hd)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * hd ** -0.5
+    idx = jnp.arange(Smax)[None, :]                 # (1, Smax)
+    valid = idx <= pos[:, None]
+    if window is not None:
+        valid &= (pos[:, None] - idx) < window
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H * hd).astype(v_cache.dtype)
+
+
+def attn_forward(cfg, p, ad, acfg, x, positions, *, causal=True,
+                 window=None, kv_x=None, rope=True, vera_shared=None):
+    """Full-sequence attention (training / prefill / encoder / cross)."""
+    B, S, _ = x.shape
+    kv_x = x if kv_x is None else kv_x
+    q, k, v = _qkv(cfg, p, ad, acfg, x, kv_x, vera_shared)
+    T = kv_x.shape[1]
+    k_positions = positions if kv_x is x else jnp.arange(T)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, k_positions, cfg.rope_theta)
+    if (cfg.attn_backend == "pallas" and kv_x is x
+            and q.shape[-1] == v.shape[-1]):
+        # Pallas flash kernel (§Perf it. 3c): scores never leave VMEM.
+        # GQA: kv replicated across the group for the (B,H,S,d) layout.
+        from repro.kernels import ops as kops
+        G = q.shape[2] // k.shape[2]
+        kr = jnp.repeat(k, G, axis=2).swapaxes(1, 2)
+        vr = jnp.repeat(v, G, axis=2).swapaxes(1, 2)
+        out = kops.flash_attention(
+            q.swapaxes(1, 2), kr, vr, causal=causal, window=window,
+            bq=min(512, S), bkv=min(512, T)).swapaxes(1, 2)
+    else:
+        out = blockwise_attention(q, k, v, positions, k_positions,
+                                  causal=causal, window=window)
+    out = out.reshape(B, S, -1)
+    sc = acfg.scaling if acfg is not None else 1.0
+    vs = (vera_shared or {})
+    return adapted(p["wo"], maybe(ad, "wo"), out, sc, vs.get("wo")), (k, v)
+
+
+def attn_decode(cfg, p, ad, acfg, x, pos, cache_k, cache_v, *,
+                window=None, vera_shared=None):
+    """One-step decode. x: (B, 1, d); pos: (B,). Returns (y, new_k, new_v)."""
+    B = x.shape[0]
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q, k, v = _qkv(cfg, p, ad, acfg, x, x, vera_shared)
+    q = apply_rope(q, pos[:, None], cfg.rope_theta)
+    k = apply_rope(k, pos[:, None], cfg.rope_theta)
+    # insert into cache at pos (per batch row)
+    upd = jax.vmap(lambda c, kn, i: jax.lax.dynamic_update_slice(
+        c, kn, (i, 0, 0)))
+    cache_k = upd(cache_k, k.astype(cache_k.dtype), pos)
+    cache_v = upd(cache_v, v.astype(cache_v.dtype), pos)
+    out = decode_attention(q, cache_k, cache_v, pos, window=window)
+    sc = acfg.scaling if acfg is not None else 1.0
+    vs = (vera_shared or {})
+    y = adapted(p["wo"], maybe(ad, "wo"), out, sc, vs.get("wo"))
+    return y, cache_k, cache_v
+
+
+def cross_attn_decode(cfg, p, ad, acfg, x, k, v, *, vera_shared=None):
+    """Decoder cross-attention against precomputed encoder K/V."""
+    B = x.shape[0]
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    sc = acfg.scaling if acfg is not None else 1.0
+    vs = (vera_shared or {})
+    q = adapted(p["wq"], maybe(ad, "wq"), x, sc, vs.get("wq"))
+    q = q.reshape(B, 1, H, hd)
+    pos = jnp.full((B,), k.shape[1] - 1, jnp.int32)
+    out = decode_attention(q, k, v, pos)
+    return adapted(p["wo"], maybe(ad, "wo"), out, sc, vs.get("wo"))
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V3)
+# ---------------------------------------------------------------------------
+
+def init_mla(key, cfg, dtype):
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 5)
+    return {
+        "wq_a": dense_init(ks[0], d, m.q_lora_rank, dtype),
+        "q_a_norm": jnp.ones((m.q_lora_rank,), dtype),
+        "wq_b": dense_init(ks[1], m.q_lora_rank,
+                           H * (m.qk_nope_head_dim + m.qk_rope_head_dim), dtype),
+        "wkv_a": dense_init(ks[2], d, m.kv_lora_rank + m.qk_rope_head_dim, dtype),
+        "kv_a_norm": jnp.ones((m.kv_lora_rank,), dtype),
+        "wkv_b": dense_init(ks[3], m.kv_lora_rank,
+                            H * (m.qk_nope_head_dim + m.v_head_dim), dtype),
+        "wo": dense_init(ks[4], H * m.v_head_dim, d, dtype),
+    }
+
+
+def _mla_q(cfg, p, ad, acfg, x, positions, vera_shared):
+    m, H = cfg.mla, cfg.n_heads
+    sc = acfg.scaling if acfg is not None else 1.0
+    vs = (vera_shared or {})
+    cq = adapted(p["wq_a"], maybe(ad, "wq_a"), x, sc, vs.get("wq_a"))
+    cq = rms_norm(cq, p["q_a_norm"], cfg.norm_eps)
+    q = adapted(p["wq_b"], maybe(ad, "wq_b"), cq, sc, vs.get("wq_b"))
+    q = q.reshape(*x.shape[:-1], H, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    qn, qr = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    qr = apply_rope(qr, positions, cfg.rope_theta)
+    return qn, qr
+
+
+def _mla_latent(cfg, p, ad, acfg, x, positions, vera_shared):
+    """Compute (normed) latent ckv and roped shared key."""
+    m = cfg.mla
+    sc = acfg.scaling if acfg is not None else 1.0
+    vs = (vera_shared or {})
+    ckv = adapted(p["wkv_a"], maybe(ad, "wkv_a"), x, sc, vs.get("wkv_a"))
+    ckv, krope = jnp.split(ckv, [m.kv_lora_rank], axis=-1)
+    ckv = rms_norm(ckv, p["kv_a_norm"], cfg.norm_eps)
+    krope = apply_rope(krope, positions, cfg.rope_theta)   # (B, S, rope)
+    return ckv, krope
+
+
+def mla_forward(cfg, p, ad, acfg, x, positions, *, vera_shared=None):
+    """Full-sequence MLA. Returns (y, (ckv, krope)) for the latent cache."""
+    m, H = cfg.mla, cfg.n_heads
+    B, S, _ = x.shape
+    sc = acfg.scaling if acfg is not None else 1.0
+    vs = (vera_shared or {})
+    qn, qr = _mla_q(cfg, p, ad, acfg, x, positions, vera_shared)
+    ckv, krope = _mla_latent(cfg, p, ad, acfg, x, positions, vera_shared)
+    kv = adapted(p["wkv_b"], maybe(ad, "wkv_b"), ckv, sc, vs.get("wkv_b"))
+    kv = kv.reshape(B, S, H, m.qk_nope_head_dim + m.v_head_dim)
+    kn, v = jnp.split(kv, [m.qk_nope_head_dim], axis=-1)
+    q = jnp.concatenate([qn, qr], axis=-1)
+    k = jnp.concatenate(
+        [kn, jnp.broadcast_to(krope[:, :, None],
+                              (B, S, H, m.qk_rope_head_dim))], axis=-1)
+    out = blockwise_attention(q, k, v, positions, positions, causal=True)
+    out = out.reshape(B, S, H * m.v_head_dim)
+    y = adapted(p["wo"], maybe(ad, "wo"), out, sc, vs.get("wo"))
+    return y, (ckv, krope)
+
+
+def mla_decode(cfg, p, ad, acfg, x, pos, cache_ckv, cache_krope, *,
+               vera_shared=None):
+    """One-step MLA decode against the latent cache.
+
+    naive path: up-project every cached latent to per-head K/V each step.
+    absorbed path (cfg.mla.absorbed_decode): fold W_UK into the query and
+    W_UV into the output so scores/values are computed directly in latent
+    space — the standard MLA inference optimization (§Perf).
+    """
+    m, H = cfg.mla, cfg.n_heads
+    B = x.shape[0]
+    Smax = cache_ckv.shape[1]
+    sc = acfg.scaling if acfg is not None else 1.0
+    vs = (vera_shared or {})
+    qn, qr = _mla_q(cfg, p, ad, acfg, x, pos[:, None], vera_shared)
+    ckv, krope = _mla_latent(cfg, p, ad, acfg, x, pos[:, None], vera_shared)
+    upd = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice(c, n, (i, 0)))
+    cache_ckv = upd(cache_ckv, ckv.astype(cache_ckv.dtype), pos)
+    cache_krope = upd(cache_krope, krope.astype(cache_krope.dtype), pos)
+
+    # decode re-projects *cached* latents, so the adapter delta on wkv_b must
+    # be merged into the weight (the forward path adds it on activations).
+    wkv_b_eff = effective_weight(p["wkv_b"], maybe(ad, "wkv_b"), sc,
+                                 vs.get("wkv_b"))
+    wkv_b = wkv_b_eff.reshape(m.kv_lora_rank, H,
+                              m.qk_nope_head_dim + m.v_head_dim)
+    w_uk = wkv_b[..., : m.qk_nope_head_dim]     # (r, H, nope)
+    w_uv = wkv_b[..., m.qk_nope_head_dim:]      # (r, H, vd)
+    idx = jnp.arange(Smax)[None, :]
+    valid = idx <= pos[:, None]
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+
+    qn = qn[:, 0].astype(jnp.float32)            # (B, H, nope)
+    qr = qr[:, 0].astype(jnp.float32)            # (B, H, rope)
+    c32 = cache_ckv.astype(jnp.float32)          # (B, S, r)
+    kr32 = cache_krope.astype(jnp.float32)       # (B, S, rope)
+
+    if m.absorbed_decode:
+        # score_t = qnᵀ W_UK c_t + qrᵀ kr_t  — never materialize per-head K.
+        q_lat = jnp.einsum("bhn,rhn->bhr", qn, w_uk.astype(jnp.float32))
+        s = jnp.einsum("bhr,bsr->bhs", q_lat, c32)
+        s = s + jnp.einsum("bhr,bsr->bhs", qr, kr32)
+        s = jnp.where(valid[:, None], s * scale, NEG_INF)
+        prob = jax.nn.softmax(s, axis=-1)
+        o_lat = jnp.einsum("bhs,bsr->bhr", prob, c32)
+        out = jnp.einsum("bhr,rhv->bhv", o_lat, w_uv.astype(jnp.float32))
+    else:
+        kv = jnp.einsum("bsr,rhx->bshx", c32,
+                        wkv_b.astype(jnp.float32))
+        kn, v = kv[..., : m.qk_nope_head_dim], kv[..., m.qk_nope_head_dim:]
+        s = jnp.einsum("bhn,bshn->bhs", qn, kn)
+        s = s + jnp.einsum("bhr,bsr->bhs", qr, kr32)
+        s = jnp.where(valid[:, None], s * scale, NEG_INF)
+        prob = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bhs,bshv->bhv", prob, v)
+
+    out = out.reshape(B, 1, H * m.v_head_dim).astype(x.dtype)
+    y = adapted(p["wo"], maybe(ad, "wo"), out, sc, vs.get("wo"))
+    return y, cache_ckv, cache_krope

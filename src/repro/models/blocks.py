@@ -1,0 +1,187 @@
+"""Block assembly: init/forward per block kind + adapter shape specs.
+
+Block kinds
+-----------
+``attn``        pre-norm attention + (MLP | MoE)            (dense/moe/vlm)
+``mla``         pre-norm MLA + (MLP | MoE)                  (deepseek-v3)
+``mamba``       pre-norm Mamba1 mixer                       (falcon-mamba)
+``mamba2``      pre-norm Mamba2 mixer                       (zamba2)
+``enc_attn``    bidirectional attention + MLP               (whisper encoder)
+``dec_attn``    causal self-attn + cross-attn + MLP         (whisper decoder)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import (attn_decode, attn_forward,
+                                    cross_attn_decode, init_attention,
+                                    init_mla, mla_decode, mla_forward)
+from repro.models.mamba import init_mamba, mamba_forward, mamba_step
+from repro.models.mamba2 import init_mamba2, mamba2_forward, mamba2_step
+from repro.models.mlp import init_mlp, mlp_forward
+from repro.models.moe import init_moe, moe_forward
+from repro.models.common import maybe, rms_norm
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_block(key, cfg, kind, dtype, *, moe_layer=False):
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    if kind in ("mamba", "mamba2"):
+        init = init_mamba if kind == "mamba" else init_mamba2
+        return {"ln": jnp.ones((d,), dtype), "mixer": init(ks[0], cfg, dtype)}
+    p = {"ln1": jnp.ones((d,), dtype), "ln2": jnp.ones((d,), dtype)}
+    if kind == "mla":
+        p["attn"] = init_mla(ks[0], cfg, dtype)
+    else:
+        p["attn"] = init_attention(ks[0], cfg, dtype)
+    if kind == "dec_attn":
+        p["ln_cross"] = jnp.ones((d,), dtype)
+        p["cross_attn"] = init_attention(ks[1], cfg, dtype, cross=True)
+    if moe_layer:
+        p["moe"] = init_moe(ks[2], cfg, dtype)
+    else:
+        p["mlp"] = init_mlp(ks[3], cfg, dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# adapter shape specs (consumed by core/adapters.py)
+# ---------------------------------------------------------------------------
+
+def target_shapes(cfg, kind, targets):
+    """{nested param path: (d_in, d_out)} for the adapted modules of one
+    block of the given kind."""
+    d, H, Hkv = cfg.d_model, cfg.n_heads, cfg.n_kv_heads
+    hd = cfg.resolved_head_dim
+    out = {}
+    if kind in ("mamba", "mamba2"):
+        di = cfg.d_inner
+        if kind == "mamba":
+            shapes = {"in_proj": (d, 2 * di), "out_proj": (di, d),
+                      "x_proj": (di, cfg.dt_rank + 2 * cfg.ssm.d_state),
+                      "dt_proj": (cfg.dt_rank, di)}
+        else:
+            s = cfg.ssm
+            nh = di // s.head_dim
+            shapes = {"in_proj": (d, 2 * di + 2 * s.n_groups * s.d_state + nh),
+                      "out_proj": (di, d)}
+        wanted = [t for t in ("in_proj", "out_proj", "x_proj", "dt_proj")
+                  if t in shapes and (t in targets or targets == ("wq", "wv"))]
+        # default ("wq","wv") targets translate to (in_proj, out_proj) on SSMs
+        if targets == ("wq", "wv"):
+            wanted = ["in_proj", "out_proj"]
+        for t in wanted:
+            out[("mixer", t)] = shapes[t]
+        return out
+    if kind == "mla":
+        m = cfg.mla
+        remap = {"wq": ("wq_b", (m.q_lora_rank,
+                                 H * (m.qk_nope_head_dim + m.qk_rope_head_dim))),
+                 "wv": ("wkv_b", (m.kv_lora_rank,
+                                  H * (m.qk_nope_head_dim + m.v_head_dim))),
+                 "wk": ("wkv_a", (d, m.kv_lora_rank + m.qk_rope_head_dim)),
+                 "wo": ("wo", (H * m.v_head_dim, d))}
+        for t in targets:
+            if t in remap:
+                name, shape = remap[t]
+                out[("attn", name)] = shape
+        return out
+    shapes = {"wq": (d, H * hd), "wk": (d, Hkv * hd), "wv": (d, Hkv * hd),
+              "wo": (H * hd, d)}
+    for t in targets:
+        if t in shapes:
+            out[("attn", t)] = shapes[t]
+            if kind == "dec_attn":
+                out[("cross_attn", t)] = shapes[t]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# forward (full sequence)
+# ---------------------------------------------------------------------------
+
+def block_forward(cfg, p, ad, acfg, x, positions, kind, *, window=None,
+                  enc_out=None, vera_shared=None):
+    """Returns (x, cache_entry, aux_loss)."""
+    aux = 0.0
+    if kind in ("mamba", "mamba2"):
+        fwd = mamba_forward if kind == "mamba" else mamba2_forward
+        y, h, conv = fwd(cfg, p["mixer"], maybe(ad, "mixer"), acfg,
+                         rms_norm(x, p["ln"], cfg.norm_eps),
+                         vera_shared=vera_shared)
+        return x + y, {"h": h, "conv": conv}, aux
+    h_in = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if kind == "mla":
+        y, (ckv, krope) = mla_forward(cfg, p["attn"], maybe(ad, "attn"), acfg,
+                                      h_in, positions, vera_shared=vera_shared)
+        cache = {"ckv": ckv, "krope": krope}
+    else:
+        causal = cfg.causal and kind != "enc_attn"
+        y, (k, v) = attn_forward(cfg, p["attn"], maybe(ad, "attn"), acfg,
+                                 h_in, positions, causal=causal,
+                                 window=window, vera_shared=vera_shared)
+        cache = {"k": k, "v": v}
+    x = x + y
+    if kind == "dec_attn":
+        h_c = rms_norm(x, p["ln_cross"], cfg.norm_eps)
+        y, (ck, cv) = attn_forward(cfg, p["cross_attn"],
+                                   maybe(ad, "cross_attn"), acfg, h_c,
+                                   positions, causal=False, kv_x=enc_out,
+                                   rope=False, vera_shared=vera_shared)
+        cache.update({"cross_k": ck, "cross_v": cv})
+        x = x + y
+    h_mlp = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        y, aux = moe_forward(cfg, p["moe"], maybe(ad, "moe"), acfg, h_mlp,
+                             vera_shared=vera_shared)
+    else:
+        y = mlp_forward(cfg, p["mlp"], maybe(ad, "mlp"), acfg, h_mlp,
+                        vera_shared=vera_shared)
+    return x + y, cache, aux
+
+
+# ---------------------------------------------------------------------------
+# decode step
+# ---------------------------------------------------------------------------
+
+def block_decode(cfg, p, ad, acfg, x, pos, cache, kind, *, window=None,
+                 vera_shared=None):
+    """x: (B, 1, d). Returns (x, new_cache_entry)."""
+    if kind in ("mamba", "mamba2"):
+        step = mamba_step if kind == "mamba" else mamba2_step
+        y, h, conv = step(cfg, p["mixer"], maybe(ad, "mixer"), acfg,
+                          rms_norm(x, p["ln"], cfg.norm_eps),
+                          cache["h"], cache["conv"], vera_shared=vera_shared)
+        return x + y, {"h": h, "conv": conv}
+    h_in = rms_norm(x, p["ln1"], cfg.norm_eps)
+    new_cache = dict(cache)
+    if kind == "mla":
+        y, ckv, krope = mla_decode(cfg, p["attn"], maybe(ad, "attn"), acfg,
+                                   h_in, pos, cache["ckv"], cache["krope"],
+                                   vera_shared=vera_shared)
+        new_cache.update({"ckv": ckv, "krope": krope})
+    else:
+        y, k, v = attn_decode(cfg, p["attn"], maybe(ad, "attn"), acfg, h_in,
+                              pos, cache["k"], cache["v"], window=window,
+                              vera_shared=vera_shared)
+        new_cache.update({"k": k, "v": v})
+    x = x + y
+    if kind == "dec_attn":
+        h_c = rms_norm(x, p["ln_cross"], cfg.norm_eps)
+        y = cross_attn_decode(cfg, p["cross_attn"], maybe(ad, "cross_attn"),
+                              acfg, h_c, cache["cross_k"], cache["cross_v"],
+                              vera_shared=vera_shared)
+        x = x + y
+    h_mlp = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        y, _ = moe_forward(cfg, p["moe"], maybe(ad, "moe"), acfg, h_mlp,
+                           vera_shared=vera_shared)
+    else:
+        y = mlp_forward(cfg, p["mlp"], maybe(ad, "mlp"), acfg, h_mlp,
+                        vera_shared=vera_shared)
+    return x + y, new_cache

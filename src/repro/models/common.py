@@ -1,0 +1,172 @@
+"""Shared building blocks: norms, RoPE, initializers, adapted linears.
+
+Conventions
+-----------
+* Linear weights are stored **input-major**: ``w: (d_in, d_out)`` so the
+  forward is ``x @ w`` with no transpose.
+* LoRA adapters are stored transposed relative to the paper's notation:
+  ``A: (d_in, r)`` (Gaussian init), ``B: (r, d_out)`` (zero init), so the
+  paper's ``ΔW = B·A`` equals ``(A @ B)ᵀ`` here and the delta activation is
+  ``(x @ A) @ B * scaling``.
+* VeRA adapters hold trainable vectors ``d: (r,)`` (the paper's Λ_d / "A_d",
+  aggregated under FedSA) and ``b: (d_out,)`` (Λ_b / "B_b", kept local); the
+  frozen random matrices live once per target-module name in
+  ``adapters["vera_shared"]``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x, gamma, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * gamma.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x, gamma, beta, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (out * gamma.astype(jnp.float32) + beta.astype(jnp.float32)).astype(x.dtype)
+
+
+def dense_init(key, d_in, d_out, dtype, scale=None):
+    scale = scale if scale is not None else d_in ** -0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab, d, dtype):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Adapted linear: base matmul + optional LoRA/rsLoRA/VeRA delta.
+# ---------------------------------------------------------------------------
+
+def lora_delta(ad, x, scaling, vera_shared=None):
+    """Low-rank delta activation for one linear.
+
+    ``ad`` is either a LoRA leaf ``{"A","B"}`` or a VeRA leaf ``{"d","b"}``
+    (with the shared frozen matrices passed via ``vera_shared``).
+    """
+    if "d" in ad:  # VeRA
+        A = vera_shared["A"]  # (d_in, r) frozen
+        B = vera_shared["B"]  # (r, d_out) frozen
+        h = x.astype(jnp.float32) @ A.astype(jnp.float32)
+        h = h * ad["d"].astype(jnp.float32)
+        h = h @ B.astype(jnp.float32)
+        return (h * ad["b"].astype(jnp.float32)).astype(x.dtype)
+    h = x.astype(jnp.float32) @ ad["A"].astype(jnp.float32)
+    h = h @ ad["B"].astype(jnp.float32)
+    return (h * scaling).astype(x.dtype)
+
+
+def adapted(w, ad, x, scaling, vera_shared=None):
+    """``x @ w`` plus the adapter delta when ``ad`` is present.
+
+    The base weight never receives gradients (LoRA semantics): it is wrapped
+    in ``stop_gradient`` here so callers can simply differentiate w.r.t. the
+    adapter pytree.
+    """
+    y = x @ jax.lax.stop_gradient(w)
+    if ad is not None:
+        if "global" in ad:  # FedDPA: sum of global + personal adapters
+            y = y + lora_delta(ad["global"], x, scaling, vera_shared)
+            y = y + lora_delta(ad["personal"], x, scaling, vera_shared)
+        else:
+            y = y + lora_delta(ad, x, scaling, vera_shared)
+    return y
+
+
+def effective_weight(w, ad, scaling, vera_shared=None):
+    """Materialize ``W + ΔW`` for one linear (decode paths that transform
+    *cached* activations need the merged weight, e.g. MLA's wkv_b)."""
+    if ad is None:
+        return w
+    def one_delta(leaf):
+        if "d" in leaf:  # VeRA: ΔW = (A·diag(d))·B·diag(b)
+            A = vera_shared["A"].astype(jnp.float32)
+            B = vera_shared["B"].astype(jnp.float32)
+            return ((A * leaf["d"].astype(jnp.float32)) @ B
+                    * leaf["b"].astype(jnp.float32)[None, :])
+        return (leaf["A"].astype(jnp.float32)
+                @ leaf["B"].astype(jnp.float32)) * scaling
+    if "global" in ad:   # FedDPA
+        delta = one_delta(ad["global"]) + one_delta(ad["personal"])
+    else:
+        delta = one_delta(ad)
+    return (w.astype(jnp.float32) + delta).astype(w.dtype)
+
+
+def maybe(ad, name):
+    """adapters subtree lookup that tolerates missing modules."""
+    if ad is None:
+        return None
+    return ad.get(name)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim, theta):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta):
+    """x: (B, S, H, hd) or (B, S, hd); positions: (S,) or (B, S) int32."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)                      # (hd/2,)
+    ang = positions.astype(jnp.float32)[..., None] * inv   # (..., S, hd/2)
+    if positions.ndim == 1:
+        ang = ang[None]                               # (1, S, hd/2)
+    if x.ndim == 4:
+        ang = ang[:, :, None, :]                      # add head axis
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunked cross-entropy (never materializes (B, S, V) logits).
+# ---------------------------------------------------------------------------
+
+def chunked_cross_entropy(hidden, w_head, labels, mask=None, chunk=512):
+    """Mean CE of ``softmax(hidden @ w_head)`` vs labels, scanned over seq.
+
+    hidden: (B, S, d); w_head: (d, V); labels: (B, S) int32;
+    mask: (B, S) float or None (1 = count).
+    """
+    B, S, d = hidden.shape
+    chunk = min(chunk, S)
+    n = S // chunk
+    rem = S - n * chunk
+    if mask is None:
+        mask = jnp.ones((B, S), jnp.float32)
+
+    def chunk_loss(h, y, m):
+        logits = (h @ w_head).astype(jnp.float32)            # (B, c, V)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, y[..., None], axis=-1)[..., 0]
+        return jnp.sum((lse - gold) * m), jnp.sum(m)
+
+    def body(carry, args):
+        tot, cnt = carry
+        l, c = chunk_loss(*args)
+        return (tot + l, cnt + c), None
+
+    hs = hidden[:, : n * chunk].reshape(B, n, chunk, d).swapaxes(0, 1)
+    ys = labels[:, : n * chunk].reshape(B, n, chunk).swapaxes(0, 1)
+    ms = mask[:, : n * chunk].reshape(B, n, chunk).swapaxes(0, 1)
+    (tot, cnt), _ = jax.lax.scan(body, (0.0, 0.0), (hs, ys, ms))
+    if rem:
+        l, c = chunk_loss(hidden[:, n * chunk:], labels[:, n * chunk:],
+                          mask[:, n * chunk:])
+        tot, cnt = tot + l, cnt + c
+    return tot / jnp.maximum(cnt, 1.0)

@@ -1,0 +1,169 @@
+"""Mamba1 (selective scan) — Falcon-Mamba block.
+
+Training/prefill uses a chunked scan: sequential ``lax.scan`` over chunks
+carrying the ``(d_inner, d_state)`` state, associative scan inside each chunk
+(bounds the O(S·d_inner·d_state) element memory to one chunk). Decode is the
+single-step recurrence with a conv ring buffer. Tensor parallelism shards
+``d_inner``; the scan is elementwise over it, so no collectives occur inside
+the recurrence (Mamba-TP layout).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import adapted, dense_init, maybe, rms_norm
+
+
+def init_mamba(key, cfg, dtype):
+    s = cfg.ssm
+    d, di, dtr = cfg.d_model, cfg.d_inner, cfg.dt_rank
+    ks = jax.random.split(key, 6)
+    A = jnp.tile(jnp.arange(1, s.d_state + 1, dtype=jnp.float32), (di, 1))
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di, dtype),
+        "conv_w": (jax.random.normal(ks[1], (s.d_conv, di), jnp.float32)
+                   * s.d_conv ** -0.5).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(ks[2], di, dtr + 2 * s.d_state, dtype),
+        "dt_proj": dense_init(ks[3], dtr, di, dtype, scale=dtr ** -0.5),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.clip(jax.random.uniform(ks[4], (di,), jnp.float32)
+                     * (0.1 - 1e-3) + 1e-3, 1e-4, None))).astype(jnp.float32),
+        "A_log": jnp.log(A),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[5], di, d, dtype),
+    }
+
+
+def causal_conv(x, w, b):
+    """Depthwise causal conv. x: (B, S, C); w: (k, C); b: (C,)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    S = x.shape[1]
+    out = sum(xp[:, j:j + S] * w[j] for j in range(k))
+    return out + b
+
+
+def conv_step(x_t, buf, w, b):
+    """x_t: (B, C); buf: (B, k-1, C) past inputs. Returns (y, new_buf)."""
+    win = jnp.concatenate([buf, x_t[:, None]], axis=1)     # (B, k, C)
+    y = jnp.einsum("bkc,kc->bc", win, w) + b
+    return y, win[:, 1:]
+
+
+def _assoc_scan_chunk(a, b):
+    """Associative scan of h_t = a_t h_{t-1} + b_t over axis 1 (time)."""
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a2 * a1, a2 * b1 + b2
+    return jax.lax.associative_scan(combine, (a, b), axis=1)
+
+
+def selective_scan(dt, xc, Bc, C, A, chunk):
+    """Fused chunked selective scan (kernel-shaped, §Perf iteration 1).
+
+    h_t = exp(dt_t A)⊙h_{t-1} + (dt_t·x_t)⊗B_t ; y_t = Σ_s h_t[·,s]·C_t[·,s]
+
+    dt, xc: (B, S, di); Bc, C: (B, S, ds); A: (di, ds). The rank-4
+    (B, S, di, ds) decay/input tensors are NEVER materialized for the full
+    sequence — they are computed per chunk inside the scan body (the same
+    fusion the Pallas `kernels/ssm_scan.py` performs with VMEM-resident
+    state on TPU). Returns y (B, S, di) f32 and final state (B, di, ds).
+    """
+    B, S, di = dt.shape
+    ds = Bc.shape[-1]
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        xc = jnp.pad(xc, ((0, 0), (0, pad), (0, 0)))
+        Bc = jnp.pad(Bc, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    n = (S + pad) // chunk
+    dtc = dt.reshape(B, n, chunk, di).swapaxes(0, 1)
+    xcc = xc.reshape(B, n, chunk, di).swapaxes(0, 1)
+    Bcc = Bc.reshape(B, n, chunk, ds).swapaxes(0, 1)
+    Cc = C.reshape(B, n, chunk, ds).swapaxes(0, 1)
+
+    def body(h, inp):
+        dti, xi, Bi, Ci = inp                              # per-chunk slices
+        ai = jnp.exp(dti[..., None] * A)                   # (B, c, di, ds)
+        bi = (dti * xi)[..., None] * Bi[..., None, :]
+        acum, bcum = _assoc_scan_chunk(ai, bi)             # prefix products
+        h_all = acum * h[:, None] + bcum                   # (B, c, di, ds)
+        y = jnp.einsum("bcds,bcs->bcd", h_all, Ci)
+        return h_all[:, -1], y
+
+    h0 = jnp.zeros((B, di, ds), jnp.float32)
+    h_fin, ys = jax.lax.scan(body, h0, (dtc, xcc, Bcc, Cc))
+    y = ys.swapaxes(0, 1).reshape(B, S + pad, di)[:, :S]
+    return y, h_fin
+
+
+def _ssm_inputs(cfg, p, xc):
+    """Pre-scan projections. xc: (B, S, di) conv output (f32 math).
+
+    Returns the RANK-3 scan inputs (dt, Bc, Cc) and A — the rank-4
+    decay/input tensors are formed per chunk inside ``selective_scan``.
+    """
+    s, dtr = cfg.ssm, cfg.dt_rank
+    proj = xc @ p["x_proj"]
+    dt, Bc, Cc = jnp.split(proj.astype(jnp.float32),
+                           [dtr, dtr + s.d_state], axis=-1)
+    dt = jax.nn.softplus(dt @ p["dt_proj"].astype(jnp.float32)
+                         + p["dt_bias"])                   # (B, S, di)
+    A = -jnp.exp(p["A_log"])                               # (di, ds)
+    return dt, Bc, Cc, A
+
+
+def mamba_forward(cfg, p, ad, acfg, x, *, vera_shared=None):
+    """Full-sequence Mamba1. x: (B, S, d) → (y, final_state, conv_tail)."""
+    s = cfg.ssm
+    di = cfg.d_inner
+    sc = acfg.scaling if acfg is not None else 1.0
+    vs = (vera_shared or {})
+    xz = adapted(p["in_proj"], maybe(ad, "in_proj"), x, sc, vs.get("in_proj"))
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    xc = causal_conv(x_in, jax.lax.stop_gradient(p["conv_w"]),
+                     jax.lax.stop_gradient(p["conv_b"]))
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
+    dt, Bc, Cc, A = _ssm_inputs(cfg, p, xc)
+    if s.backend == "pallas":
+        # production TPU path: fully-fused Pallas kernel, VMEM-resident
+        # state (kernels/ssm_scan.py); validated vs selective_scan in tests
+        from repro.kernels import ops as kops
+        y, h = kops.ssm_scan_fused(dt, xc.astype(jnp.float32), Bc, Cc, A,
+                                   bd=min(512, dt.shape[-1]),
+                                   chunk=min(s.chunk, dt.shape[1]))
+    else:
+        y, h = selective_scan(dt, xc.astype(jnp.float32), Bc, Cc, A, s.chunk)
+    y = y + p["D"] * xc.astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = adapted(p["out_proj"], maybe(ad, "out_proj"), y.astype(x.dtype), sc,
+                vs.get("out_proj"))
+    conv_tail = x_in[:, -(s.d_conv - 1):]                   # decode warm-start
+    return y, h, conv_tail
+
+
+def mamba_step(cfg, p, ad, acfg, x, h, conv_buf, *, vera_shared=None):
+    """One decode step. x: (B, 1, d); h: (B, di, ds); conv_buf: (B, k-1, di)."""
+    s = cfg.ssm
+    sc = acfg.scaling if acfg is not None else 1.0
+    vs = (vera_shared or {})
+    xz = adapted(p["in_proj"], maybe(ad, "in_proj"), x[:, 0], sc,
+                 vs.get("in_proj"))
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    xc, conv_buf = conv_step(x_in, conv_buf, p["conv_w"], p["conv_b"])
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
+    dt, Bc, Cc, A = _ssm_inputs(cfg, p, xc[:, None])
+    a = jnp.exp(dt[:, 0, :, None] * A)                      # (B, di, ds)
+    b = (dt[:, 0] * xc.astype(jnp.float32))[..., None] * Bc[:, 0, None, :]
+    h = a * h + b                                           # (B, di, ds)
+    y = jnp.einsum("bds,bs->bd", h, Cc[:, 0])
+    y = y + p["D"] * xc.astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = adapted(p["out_proj"], maybe(ad, "out_proj"), y.astype(x.dtype), sc,
+                vs.get("out_proj"))
+    return y[:, None], h, conv_buf

@@ -1,0 +1,161 @@
+"""Mamba2 (SSD) — Zamba2 backbone block.
+
+State-space duality block with scalar-per-head decay. Training/prefill uses
+the same chunked-scan strategy as Mamba1 with per-head outer-product state
+``(n_heads, head_dim, d_state)``; decode is the single-step recurrence.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import adapted, dense_init, maybe, rms_norm
+from repro.models.mamba import _assoc_scan_chunk, causal_conv, conv_step
+
+
+def _dims(cfg):
+    s = cfg.ssm
+    di = cfg.d_inner
+    nh = di // s.head_dim
+    conv_dim = di + 2 * s.n_groups * s.d_state
+    return s, di, nh, conv_dim
+
+
+def init_mamba2(key, cfg, dtype):
+    s, di, nh, conv_dim = _dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    d_in_proj = 2 * di + 2 * s.n_groups * s.d_state + nh
+    return {
+        "in_proj": dense_init(ks[0], d, d_in_proj, dtype),
+        "conv_w": (jax.random.normal(ks[1], (s.d_conv, conv_dim), jnp.float32)
+                   * s.d_conv ** -0.5).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "norm": jnp.ones((di,), dtype),
+        "out_proj": dense_init(ks[3], di, d, dtype),
+    }
+
+
+def _split_in_proj(cfg, zxbcdt):
+    s, di, nh, conv_dim = _dims(cfg)
+    gs = s.n_groups * s.d_state
+    z, x, B, C, dt = jnp.split(zxbcdt, [di, 2 * di, 2 * di + gs,
+                                        2 * di + 2 * gs], axis=-1)
+    return z, jnp.concatenate([x, B, C], axis=-1), dt
+
+
+def _post_conv(cfg, xbc):
+    s, di, nh, _ = _dims(cfg)
+    gs = s.n_groups * s.d_state
+    x, B, C = jnp.split(xbc, [di, di + gs], axis=-1)
+    lead = x.shape[:-1]
+    x = x.reshape(*lead, nh, s.head_dim)
+    B = B.reshape(*lead, s.n_groups, s.d_state)
+    C = C.reshape(*lead, s.n_groups, s.d_state)
+    # broadcast groups over heads
+    rep = nh // s.n_groups
+    B = jnp.repeat(B, rep, axis=-2)
+    C = jnp.repeat(C, rep, axis=-2)
+    return x.astype(jnp.float32), B.astype(jnp.float32), C.astype(jnp.float32)
+
+
+def ssd_scan(dt, xh, Bm, C, A, chunk):
+    """Per-head outer-product SSM — fused chunked form (§Perf it. 1).
+
+    dt: (B, S, nh); xh: (B, S, nh, hd); Bm, C: (B, S, nh, ds); A: (nh,).
+    The rank-5 (B, S, nh, hd, ds) input tensor is computed per chunk inside
+    the scan body, never materialized for the full sequence. Returns
+    y (B, S, nh, hd) f32 and final state (B, nh, hd, ds).
+    """
+    Bsz, S, nh = dt.shape
+    hd = xh.shape[-1]
+    ds = Bm.shape[-1]
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n = (S + pad) // chunk
+    dtc = dt.reshape(Bsz, n, chunk, nh).swapaxes(0, 1)
+    xc = xh.reshape(Bsz, n, chunk, nh, hd).swapaxes(0, 1)
+    Bc = Bm.reshape(Bsz, n, chunk, nh, ds).swapaxes(0, 1)
+    Cc = C.reshape(Bsz, n, chunk, nh, ds).swapaxes(0, 1)
+
+    def body(h, inp):
+        dti, xi, Bi, Ci = inp                               # per chunk
+        ai = jnp.exp(dti * A)                               # (B, c, nh)
+        bi = (dti[..., None] * xi)[..., None] * Bi[..., None, :]
+        a4 = ai[..., None, None]
+        acum, bcum = _assoc_scan_chunk(a4, bi)
+        h_all = acum * h[:, None] + bcum                    # (B, c, nh, hd, ds)
+        y = jnp.einsum("bchds,bchs->bchd", h_all, Ci)
+        return h_all[:, -1], y
+
+    h0 = jnp.zeros((Bsz, nh, hd, ds), jnp.float32)
+    h_fin, ys = jax.lax.scan(body, h0, (dtc, xc, Bc, Cc))
+    y = ys.swapaxes(0, 1).reshape(Bsz, S + pad, nh, hd)[:, :S]
+    return y, h_fin
+
+
+def mamba2_forward(cfg, p, ad, acfg, x, *, vera_shared=None):
+    """Full-sequence Mamba2. Returns (y, final_state, conv_tail)."""
+    s, di, nh, conv_dim = _dims(cfg)
+    sc = acfg.scaling if acfg is not None else 1.0
+    vs = (vera_shared or {})
+    zxbcdt = adapted(p["in_proj"], maybe(ad, "in_proj"), x, sc,
+                     vs.get("in_proj"))
+    z, xbc_pre, dt = _split_in_proj(cfg, zxbcdt)
+    xbc = causal_conv(xbc_pre, jax.lax.stop_gradient(p["conv_w"]),
+                      jax.lax.stop_gradient(p["conv_b"]))
+    xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(x.dtype)
+    xh, B, C = _post_conv(cfg, xbc)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B, S, nh)
+    A = -jnp.exp(p["A_log"])                                # (nh,)
+    if s.backend == "pallas":
+        # fused SSD kernel: per-head outer-product state in VMEM
+        from repro.kernels import ops as kops
+        nh = xh.shape[2]
+        y, h = kops.ssd_scan_fused(dt, xh, B, C, A,
+                                   bh=min(8, nh),
+                                   chunk=min(s.chunk, dt.shape[1]))
+    else:
+        y, h = ssd_scan(dt, xh, B, C, A, s.chunk)
+    y = y + p["D"][:, None] * xh
+    y = y.reshape(*x.shape[:-1], di)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rms_norm(y.astype(x.dtype), p["norm"], cfg.norm_eps)
+    y = adapted(p["out_proj"], maybe(ad, "out_proj"), y, sc,
+                vs.get("out_proj"))
+    conv_tail = xbc_pre[:, -(s.d_conv - 1):]                # decode warm-start
+    return y, h, conv_tail
+
+
+def mamba2_step(cfg, p, ad, acfg, x, h, conv_buf, *, vera_shared=None):
+    """One decode step. x: (B, 1, d); h: (B, nh, hd, ds)."""
+    s, di, nh, conv_dim = _dims(cfg)
+    sc = acfg.scaling if acfg is not None else 1.0
+    vs = (vera_shared or {})
+    zxbcdt = adapted(p["in_proj"], maybe(ad, "in_proj"), x[:, 0], sc,
+                     vs.get("in_proj"))
+    z, xbc, dt = _split_in_proj(cfg, zxbcdt)
+    xbc, conv_buf = conv_step(xbc, conv_buf, p["conv_w"], p["conv_b"])
+    xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(x.dtype)
+    xh, B, C = _post_conv(cfg, xbc)                         # (B, nh, hd/ds)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B, nh)
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt * A)                                     # (B, nh)
+    h = a[..., None, None] * h + (dt[..., None] * xh)[..., None] \
+        * B[..., None, :]
+    y = jnp.einsum("bhds,bhs->bhd", h, C)
+    y = y + p["D"][:, None] * xh
+    y = y.reshape(x.shape[0], di)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rms_norm(y.astype(x.dtype), p["norm"], cfg.norm_eps)
+    y = adapted(p["out_proj"], maybe(ad, "out_proj"), y, sc,
+                vs.get("out_proj"))
+    return y[:, None], h, conv_buf

@@ -1,0 +1,32 @@
+"""Dense MLPs: SwiGLU (llama-style) and GELU (whisper/roberta-style)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import adapted, dense_init, maybe
+
+
+def init_mlp(key, cfg, dtype, d_ff=None):
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.act == "gelu":
+        return {"w_up": dense_init(ks[0], d, f, dtype),
+                "w_down": dense_init(ks[1], f, d, dtype)}
+    return {"w_gate": dense_init(ks[0], d, f, dtype),
+            "w_up": dense_init(ks[1], d, f, dtype),
+            "w_down": dense_init(ks[2], f, d, dtype)}
+
+
+def mlp_forward(cfg, p, ad, acfg, x, *, vera_shared=None):
+    sc = acfg.scaling if acfg is not None else 1.0
+    vs = (vera_shared or {})
+    if "w_gate" in p:
+        g = adapted(p["w_gate"], maybe(ad, "w_gate"), x, sc, vs.get("w_gate"))
+        u = adapted(p["w_up"], maybe(ad, "w_up"), x, sc, vs.get("w_up"))
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    else:
+        u = adapted(p["w_up"], maybe(ad, "w_up"), x, sc, vs.get("w_up"))
+        h = jax.nn.gelu(u.astype(jnp.float32)).astype(x.dtype)
+    return adapted(p["w_down"], maybe(ad, "w_down"), h, sc, vs.get("w_down"))

@@ -1,0 +1,491 @@
+"""Model assembly: stacked-and-scanned blocks → full architectures.
+
+Layers are grouped into *segments* of identical block structure; each segment
+is a stacked pytree (leading axis = layer index) consumed by ``lax.scan``.
+This keeps HLO size and compile time bounded for 61-layer models SPMD-lowered
+to 512 devices on a single CPU host.
+
+Entry points
+------------
+``init_model``     parameters (usable under ``jax.eval_shape`` for dry-runs)
+``loss_fn``        training loss (chunked CE + MoE aux + optional MTP)
+``prefill``        full-sequence forward that also returns the decode cache
+``decode_step``    one-token step against the cache
+``init_cache``     cache ShapeDtypeStruct-compatible zeros
+``encode``         bidirectional encoder + classification head (RoBERTa path)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.blocks import block_decode, block_forward, init_block
+from repro.models.common import chunked_cross_entropy, embed_init, maybe, rms_norm
+
+
+# ---------------------------------------------------------------------------
+# Segmentation
+# ---------------------------------------------------------------------------
+
+def segments(cfg):
+    """List of homogeneous layer segments: dicts with kind / n / moe.
+
+    ``hybrid`` segments scan super-blocks of (attn_every - 1) mamba2 layers
+    followed by one occurrence of the *shared* attention block.
+    """
+    if cfg.family == "hybrid":
+        assert cfg.n_layers % cfg.attn_every == 0
+        return [{"kind": "hybrid", "n": cfg.n_layers // cfg.attn_every,
+                 "inner": cfg.attn_every - 1, "moe": False}]
+    if cfg.family == "ssm":
+        kind = "mamba" if cfg.ssm.version == 1 else "mamba2"
+        return [{"kind": kind, "n": cfg.n_layers, "moe": False}]
+    kind = "mla" if cfg.mla is not None else (
+        "dec_attn" if cfg.enc_dec else "attn")
+    if cfg.moe is not None:
+        segs = []
+        nd = cfg.moe.n_dense_layers
+        if nd:
+            segs.append({"kind": kind, "n": nd, "moe": False})
+        segs.append({"kind": kind, "n": cfg.n_layers - nd, "moe": True})
+        return segs
+    return [{"kind": kind, "n": cfg.n_layers, "moe": False}]
+
+
+def _stack_init(key, n, init_one):
+    """vmap an init function over n split keys → stacked params."""
+    return jax.vmap(init_one)(jax.random.split(key, n))
+
+
+def init_model(key, cfg, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 8)
+    p = {"embed": embed_init(ks[0], cfg.vocab_size, cfg.d_model, dtype),
+         "ln_f": jnp.ones((cfg.d_model,), dtype)}
+    if not cfg.tie_embeddings:
+        p["head"] = embed_init(ks[1], cfg.vocab_size, cfg.d_model, dtype).T
+    segs = segments(cfg)
+    seg_keys = jax.random.split(ks[2], len(segs))
+    stacked = []
+    for seg, sk in zip(segs, seg_keys):
+        if seg["kind"] == "hybrid":
+            k1, k2 = jax.random.split(sk)
+            stacked.append({"mamba": _stack_init(
+                k1, seg["n"], lambda k: _stack_init(
+                    k, seg["inner"],
+                    lambda kk: init_block(kk, cfg, "mamba2", dtype)))})
+            # the shared attention block: ONE weight set for all occurrences
+            p["shared_attn"] = init_block(k2, cfg, "attn", dtype)
+        else:
+            stacked.append(_stack_init(
+                sk, seg["n"],
+                functools.partial(init_block, cfg=cfg, kind=seg["kind"],
+                                  dtype=dtype, moe_layer=seg["moe"])))
+    p["segments"] = stacked
+    if cfg.enc_dec:
+        p["enc"] = {
+            "segments": [_stack_init(
+                ks[3], cfg.n_enc_layers,
+                functools.partial(init_block, cfg=cfg, kind="enc_attn",
+                                  dtype=dtype))],
+            "ln_f": jnp.ones((cfg.d_model,), dtype),
+        }
+    if cfg.mtp_depth:
+        k1, k2 = jax.random.split(ks[4])
+        p["mtp"] = {
+            "proj": (jax.random.normal(k1, (2 * cfg.d_model, cfg.d_model),
+                                       jnp.float32)
+                     * (2 * cfg.d_model) ** -0.5).astype(dtype),
+            "ln_h": jnp.ones((cfg.d_model,), dtype),
+            "ln_e": jnp.ones((cfg.d_model,), dtype),
+            "block": init_block(
+                k2, cfg, "mla" if cfg.mla is not None else "attn", dtype,
+                moe_layer=False),
+        }
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Segment execution
+# ---------------------------------------------------------------------------
+
+def _seg_adapters(adapters, i):
+    if adapters is None:
+        return None
+    return adapters["segments"][i]
+
+
+# §Perf it. 3a (measured trade-off): sequence-parallel residual HALVES
+# per-device HBM temp (49.2 → 29.9 GiB on deepseek-7b train_4k — the scan
+# backward carry shrinks by the model-axis factor) but GSPMD's per-layer
+# gather/scatter resharding RAISES weighted HBM traffic 2.4× and the
+# collective term 3.3×. Opt-in: enable when capacity, not bandwidth, is
+# the binding constraint.
+SEQ_PARALLEL = False
+
+
+def _seq_shard(x):
+    """Sequence parallelism (§Perf hillclimb 3): constrain the residual
+    stream to be sequence-sharded over the "model" axis at block
+    boundaries. Norms/elementwise run sequence-parallel; GSPMD inserts the
+    all-gather before attention/matmuls and reduce-scatters after — and,
+    critically, the scan's backward CARRY is stored 1/model-size as large.
+    No-op off the production mesh (model axis absent or S not divisible).
+    """
+    if not SEQ_PARALLEL:
+        return x
+    try:
+        from jax._src import mesh as mesh_lib
+        env_mesh = mesh_lib.thread_resources.env.physical_mesh
+        if env_mesh.empty or "model" not in env_mesh.axis_names:
+            return x
+        ms = env_mesh.shape["model"]
+        if ms <= 1 or x.shape[-2] % ms != 0:
+            return x
+        from jax.sharding import PartitionSpec as P
+        spec = P(*((None,) * (x.ndim - 2) + ("model", None)))
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:  # noqa: BLE001
+        return x
+
+
+def _scan_seg(cfg, seg, sp, sad, acfg, x, positions, *, window, enc_out,
+              vera_shared, shared_attn=None, collect=False, remat=False):
+    """Run one segment. Returns (x, aux, caches|None)."""
+    aux0 = jnp.zeros((), jnp.float32)
+    ckpt = jax.checkpoint if remat else (lambda f: f)
+
+    if seg["kind"] == "hybrid":
+        def body(carry, xs):
+            x, aux = carry
+            mp, mad, aad = xs
+
+            def inner(c, ixs):
+                xi, auxi = c
+                ip, iad = ixs if mad is not None else (ixs, None)
+                xi, cache, a = block_forward(cfg, ip, iad, acfg, xi,
+                                             positions, "mamba2",
+                                             vera_shared=vera_shared)
+                return (xi, auxi + a), cache if collect else None
+
+            (x, aux), mcaches = jax.lax.scan(
+                inner, (x, aux), (mp, mad) if mad is not None else mp)
+            x, acache, a = block_forward(cfg, shared_attn, aad, acfg, x,
+                                         positions, "attn", window=window,
+                                         vera_shared=vera_shared)
+            out = (mcaches, acache) if collect else None
+            return (x, aux + a), out
+
+        mad = maybe(sad, "mamba")
+        aad = maybe(sad, "attn")
+        if sad is None:
+            # scan needs matching xs structure; wrap params-only
+            def body_np(carry, mp):
+                return body(carry, (mp, None, None))
+            (x, aux), caches = jax.lax.scan(ckpt(body_np), (x, aux0),
+                                            sp["mamba"])
+        else:
+            (x, aux), caches = jax.lax.scan(
+                ckpt(body), (x, aux0), (sp["mamba"], mad, aad))
+        return x, aux, caches
+
+    def body(carry, xs):
+        x, aux = carry
+        p, ad = xs if sad is not None else (xs, None)
+        x = _seq_shard(x)
+        x, cache, a = block_forward(cfg, p, ad, acfg, x, positions,
+                                    seg["kind"], window=window,
+                                    enc_out=enc_out, vera_shared=vera_shared)
+        return (x, aux + a), cache if collect else None
+
+    xs = (sp, sad) if sad is not None else sp
+    (x, aux), caches = jax.lax.scan(ckpt(body), (x, aux0), xs)
+    return x, aux, caches
+
+
+def _run_encoder(cfg, params, adapters, acfg, frames, vera_shared):
+    """Whisper encoder over stub frame embeddings (B, enc_seq, d)."""
+    ep = params["enc"]
+    ead = maybe(adapters, "enc") if adapters is not None else None
+    pos = jnp.arange(frames.shape[1])
+    x = frames
+    seg = {"kind": "enc_attn", "n": cfg.n_enc_layers, "moe": False}
+    sad = ead["segments"][0] if ead is not None else None
+    x, _, _ = _scan_seg(cfg, seg, ep["segments"][0], sad, acfg, x, pos,
+                        window=None, enc_out=None, vera_shared=vera_shared)
+    return rms_norm(x, ep["ln_f"], cfg.norm_eps)
+
+
+def forward_hidden(cfg, params, adapters, acfg, tokens, *, enc_frames=None,
+                   window=None, collect=False, remat=False):
+    """Token ids → final hidden states. Returns (hidden, aux, caches, enc_out)."""
+    vera_shared = maybe(adapters, "vera_shared") if adapters else None
+    x = params["embed"][tokens]
+    positions = jnp.arange(tokens.shape[1])
+    enc_out = None
+    if cfg.enc_dec:
+        enc_out = _run_encoder(cfg, params, adapters, acfg, enc_frames,
+                               vera_shared)
+    window = window if window is not None else cfg.sliding_window
+    aux = jnp.zeros((), jnp.float32)
+    caches = []
+    for i, seg in enumerate(segments(cfg)):
+        x, a, c = _scan_seg(cfg, seg, params["segments"][i],
+                            _seg_adapters(adapters, i), acfg, x, positions,
+                            window=window, enc_out=enc_out,
+                            vera_shared=vera_shared,
+                            shared_attn=params.get("shared_attn"),
+                            collect=collect, remat=remat)
+        aux = aux + a
+        caches.append(c)
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return x, aux, (caches if collect else None), enc_out
+
+
+def head_weight(cfg, params):
+    return params["embed"].T if cfg.tie_embeddings else params["head"]
+
+
+# ---------------------------------------------------------------------------
+# Training loss
+# ---------------------------------------------------------------------------
+
+def loss_fn(cfg, params, adapters, acfg, batch, *, mtp_coef=0.3,
+            remat=False):
+    """batch: {"tokens": (B, S), "labels": (B, S), "mask"?: (B, S),
+    "frames"?: (B, enc_seq, d)}."""
+    hidden, aux, _, _ = forward_hidden(cfg, params, adapters, acfg,
+                                       batch["tokens"],
+                                       enc_frames=batch.get("frames"),
+                                       remat=remat)
+    w_head = jax.lax.stop_gradient(head_weight(cfg, params))
+    mask = batch.get("mask")
+    loss = chunked_cross_entropy(hidden, w_head, batch["labels"], mask)
+    if cfg.mtp_depth and "mtp" in params:
+        loss = loss + mtp_coef * _mtp_loss(cfg, params, adapters, acfg,
+                                           hidden, batch)
+    return loss + aux
+
+
+def _mtp_loss(cfg, params, adapters, acfg, hidden, batch):
+    """Depth-1 multi-token prediction (DeepSeek-V3 §MTP).
+
+    h'_t = Block(W_p [RMSNorm(h_t); RMSNorm(Emb(y_t))]) predicts y_{t+1},
+    i.e. token t+2 of the original stream. Shares embedding and output head
+    with the main model.
+    """
+    mp = params["mtp"]
+    labels = batch["labels"]
+    emb = params["embed"][labels]                   # Emb(y_t), (B, S, d)
+    h = jnp.concatenate([rms_norm(hidden, mp["ln_h"], cfg.norm_eps),
+                         rms_norm(emb, mp["ln_e"], cfg.norm_eps)], axis=-1)
+    h = h @ jax.lax.stop_gradient(mp["proj"])
+    positions = jnp.arange(h.shape[1])
+    kind = "mla" if cfg.mla is not None else "attn"
+    h, _, _ = block_forward(cfg, mp["block"], None, acfg, h, positions, kind)
+    # next-next-token targets
+    y2 = jnp.roll(labels, -1, axis=1)
+    mask = batch.get("mask")
+    mask = jnp.ones_like(labels, jnp.float32) if mask is None else mask
+    mask = mask.at[:, -1].set(0.0)                  # last shift is invalid
+    w_head = jax.lax.stop_gradient(head_weight(cfg, params))
+    return chunked_cross_entropy(h, w_head, y2, mask)
+
+
+# ---------------------------------------------------------------------------
+# Cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+def _zeros(shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+def init_cache(cfg, batch_size, max_seq, dtype=jnp.bfloat16, enc_seq=None):
+    """Decode cache pytree, mirroring the per-segment scan layout."""
+    B = batch_size
+    hd = cfg.resolved_head_dim
+    Hkv = cfg.n_kv_heads
+    caches = []
+    for seg in segments(cfg):
+        n = seg["n"]
+        if seg["kind"] == "hybrid":
+            s = cfg.ssm
+            nh = cfg.d_inner // s.head_dim
+            conv_dim = cfg.d_inner + 2 * s.n_groups * s.d_state
+            m = {"h": _zeros((n, seg["inner"], B, nh, s.head_dim, s.d_state),
+                             jnp.float32),
+                 "conv": _zeros((n, seg["inner"], B, s.d_conv - 1, conv_dim),
+                                dtype)}
+            a = {"k": _zeros((n, B, max_seq, Hkv, hd), dtype),
+                 "v": _zeros((n, B, max_seq, Hkv, hd), dtype)}
+            caches.append((m, a))
+        elif seg["kind"] == "mamba":
+            caches.append({"h": _zeros((n, B, cfg.d_inner, cfg.ssm.d_state),
+                                       jnp.float32),
+                           "conv": _zeros((n, B, cfg.ssm.d_conv - 1,
+                                           cfg.d_inner), dtype)})
+        elif seg["kind"] == "mamba2":
+            s = cfg.ssm
+            nh = cfg.d_inner // s.head_dim
+            conv_dim = cfg.d_inner + 2 * s.n_groups * s.d_state
+            caches.append({"h": _zeros((n, B, nh, s.head_dim, s.d_state),
+                                       jnp.float32),
+                           "conv": _zeros((n, B, s.d_conv - 1, conv_dim),
+                                          dtype)})
+        elif seg["kind"] == "mla":
+            m = cfg.mla
+            caches.append({"ckv": _zeros((n, B, max_seq, m.kv_lora_rank),
+                                         dtype),
+                           "krope": _zeros((n, B, max_seq, m.qk_rope_head_dim),
+                                           dtype)})
+        else:
+            c = {"k": _zeros((n, B, max_seq, Hkv, hd), dtype),
+                 "v": _zeros((n, B, max_seq, Hkv, hd), dtype)}
+            if seg["kind"] == "dec_attn":
+                es = enc_seq or cfg.enc_seq
+                c["cross_k"] = _zeros((n, B, es, Hkv, hd), dtype)
+                c["cross_v"] = _zeros((n, B, es, Hkv, hd), dtype)
+            caches.append(c)
+    return caches
+
+
+def _fill_cache(cfg, empty, built, seq_len):
+    """Copy prefill-produced K/V/state tensors into the fixed-size cache."""
+    def place(dst, src):
+        if dst.ndim == src.ndim:                    # full-size state (SSM h)
+            return src.astype(dst.dtype)
+        return dst  # handled explicitly below
+    out = []
+    for seg, e, b in zip(segments(cfg), empty, built):
+        if seg["kind"] == "hybrid":
+            em, ea = e
+            bm, ba = b
+            new_m = {"h": bm["h"].astype(em["h"].dtype),
+                     "conv": bm["conv"].astype(em["conv"].dtype)}
+            new_a = {
+                "k": jax.lax.dynamic_update_slice(
+                    ea["k"], ba["k"].astype(ea["k"].dtype), (0, 0, 0, 0, 0)),
+                "v": jax.lax.dynamic_update_slice(
+                    ea["v"], ba["v"].astype(ea["v"].dtype), (0, 0, 0, 0, 0)),
+            }
+            out.append((new_m, new_a))
+        elif seg["kind"] in ("mamba", "mamba2"):
+            out.append({"h": b["h"].astype(e["h"].dtype),
+                        "conv": b["conv"].astype(e["conv"].dtype)})
+        else:
+            new = {}
+            for name, dst in e.items():
+                src = b[name].astype(dst.dtype)
+                if name.startswith("cross"):
+                    new[name] = src                  # encoder K/V: exact size
+                else:
+                    start = (0,) * dst.ndim
+                    new[name] = jax.lax.dynamic_update_slice(dst, src, start)
+            out.append(new)
+    return out
+
+
+def prefill(cfg, params, adapters, acfg, tokens, max_seq, *, enc_frames=None,
+            cache_dtype=jnp.bfloat16, window=None):
+    """Process the prompt; returns (last-token logits, cache, enc_out)."""
+    hidden, _, built, enc_out = forward_hidden(
+        cfg, params, adapters, acfg, tokens, enc_frames=enc_frames,
+        window=window, collect=True)
+    S = tokens.shape[1]
+    empty = init_cache(cfg, tokens.shape[0], max_seq, cache_dtype,
+                       enc_seq=enc_frames.shape[1] if enc_frames is not None
+                       else None)
+    cache = _fill_cache(cfg, empty, built, S)
+    logits = hidden[:, -1:] @ head_weight(cfg, params)
+    return logits.astype(jnp.float32), cache, enc_out
+
+
+def decode_step(cfg, params, adapters, acfg, token, pos, cache, *,
+                window=None):
+    """One decode step.
+
+    token: (B, 1) int32; pos: (B,) index of this token. Returns
+    (logits (B, 1, V) f32, new cache).
+    """
+    vera_shared = maybe(adapters, "vera_shared") if adapters else None
+    window = window if window is not None else cfg.sliding_window
+    x = params["embed"][token]
+    new_caches = []
+    for i, seg in enumerate(segments(cfg)):
+        sp = params["segments"][i]
+        sad = _seg_adapters(adapters, i)
+        c = cache[i]
+        if seg["kind"] == "hybrid":
+            def body(x, xs):
+                mp, mad, aad, mc, ac = xs
+
+                def inner(xi, ixs):
+                    ip, iad, ic = ixs
+                    xi, nc = block_decode(cfg, ip, iad, acfg, xi, pos, ic,
+                                          "mamba2", vera_shared=vera_shared)
+                    return xi, nc
+
+                x, new_mc = jax.lax.scan(inner, x, (mp, mad, mc))
+                x, new_ac = block_decode(cfg, params["shared_attn"], aad,
+                                         acfg, x, pos, ac, "attn",
+                                         window=window,
+                                         vera_shared=vera_shared)
+                return x, (new_mc, new_ac)
+
+            mad = maybe(sad, "mamba")
+            aad = maybe(sad, "attn")
+            if sad is None:
+                def body_np(x, xs):
+                    mp, mc, ac = xs
+                    return body(x, (mp, None, None, mc, ac))
+                x, nc = jax.lax.scan(body_np, x, (sp["mamba"], c[0], c[1]))
+            else:
+                x, nc = jax.lax.scan(body, x, (sp["mamba"], mad, aad,
+                                               c[0], c[1]))
+            new_caches.append(nc)
+        else:
+            def body(x, xs):
+                if sad is not None:
+                    p, ad, ci = xs
+                else:
+                    p, ci = xs
+                    ad = None
+                x, nc = block_decode(cfg, p, ad, acfg, x, pos, ci,
+                                     seg["kind"], window=window,
+                                     vera_shared=vera_shared)
+                return x, nc
+
+            xs = (sp, sad, c) if sad is not None else (sp, c)
+            x, nc = jax.lax.scan(body, x, xs)
+            new_caches.append(nc)
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = x @ head_weight(cfg, params)
+    return logits.astype(jnp.float32), new_caches
+
+
+# ---------------------------------------------------------------------------
+# Encoder-classifier path (RoBERTa — the paper's NLU backbone)
+# ---------------------------------------------------------------------------
+
+def init_classifier(key, cfg, n_classes, dtype=jnp.float32):
+    return {"w": (jax.random.normal(key, (cfg.d_model, n_classes),
+                                    jnp.float32)
+                  * cfg.d_model ** -0.5).astype(dtype),
+            "b": jnp.zeros((n_classes,), dtype)}
+
+
+def encode_logits(cfg, params, adapters, acfg, cls_head, tokens):
+    """Bidirectional encode → first-token pooled classification logits."""
+    hidden, aux, _, _ = forward_hidden(cfg, params, adapters, acfg, tokens)
+    pooled = hidden[:, 0].astype(jnp.float32)
+    return pooled @ cls_head["w"] + cls_head["b"], aux
+
+
+def classifier_loss(cfg, params, adapters, acfg, cls_head, batch):
+    logits, aux = encode_logits(cfg, params, adapters, acfg, cls_head,
+                                batch["tokens"])
+    labels = batch["label"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()
+    return nll + aux

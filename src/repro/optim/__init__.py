@@ -1,0 +1,5 @@
+from repro.optim.optimizers import adamw, apply_updates, sgd
+from repro.optim.schedules import constant, cosine, linear_warmup
+
+__all__ = ["adamw", "apply_updates", "sgd", "constant", "cosine",
+           "linear_warmup"]

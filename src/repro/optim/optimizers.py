@@ -1,0 +1,81 @@
+"""Pure-JAX optimizers with per-leaf trainability masks.
+
+The paper uses SGD for LoRA/rsLoRA and AdamW for VeRA. Optimizers are
+(init, update) pairs over arbitrary pytrees; a ``mask`` pytree of 0/1
+scalars (from ``core.strategies.trainable_mask``) zeroes updates of frozen
+leaves so FFA's fixed A (and VeRA's frozen shared matrices) never move.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _masked(updates, mask):
+    if mask is None:
+        return updates
+    return jax.tree_util.tree_map(lambda u, m: u * m, updates, mask)
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(
+        lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+        params, updates)
+
+
+def sgd(lr, momentum=0.0):
+    def init(params):
+        if momentum == 0.0:
+            return {}
+        return {"mu": jax.tree_util.tree_map(
+            lambda p: jnp.zeros_like(p, jnp.float32), params)}
+
+    def update(grads, state, params=None, mask=None, step=None):
+        lr_t = lr(step) if callable(lr) else lr
+        if momentum == 0.0:
+            upd = jax.tree_util.tree_map(
+                lambda g: -lr_t * g.astype(jnp.float32), grads)
+            return _masked(upd, mask), state
+        mu = jax.tree_util.tree_map(
+            lambda m, g: momentum * m + g.astype(jnp.float32),
+            state["mu"], grads)
+        upd = jax.tree_util.tree_map(lambda m: -lr_t * m, mu)
+        return _masked(upd, mask), {"mu": mu}
+
+    return init, update
+
+
+def adamw(lr, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.0):
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {"m": jax.tree_util.tree_map(z, params),
+                "v": jax.tree_util.tree_map(z, params),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None, mask=None, step=None):
+        t = state["t"] + 1
+        lr_t = lr(t) if callable(lr) else lr
+        m = jax.tree_util.tree_map(
+            lambda mm, g: b1 * mm + (1 - b1) * g.astype(jnp.float32),
+            state["m"], grads)
+        v = jax.tree_util.tree_map(
+            lambda vv, g: b2 * vv + (1 - b2)
+            * jnp.square(g.astype(jnp.float32)),
+            state["v"], grads)
+        c1 = 1 - b1 ** t.astype(jnp.float32)
+        c2 = 1 - b2 ** t.astype(jnp.float32)
+
+        def leaf_update(mm, vv, p):
+            upd = -(lr_t * (mm / c1) / (jnp.sqrt(vv / c2) + eps))
+            if weight_decay and p is not None:
+                upd = upd - lr_t * weight_decay * p.astype(jnp.float32)
+            return upd
+
+        if params is None:
+            upd = jax.tree_util.tree_map(
+                lambda mm, vv: leaf_update(mm, vv, None), m, v)
+        else:
+            upd = jax.tree_util.tree_map(leaf_update, m, v, params)
+        return _masked(upd, mask), {"m": m, "v": v, "t": t}
+
+    return init, update

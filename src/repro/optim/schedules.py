@@ -1,0 +1,26 @@
+"""LR schedules as step → lr callables."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def linear_warmup(lr, warmup_steps):
+    def f(step):
+        s = jnp.asarray(step, jnp.float32)
+        return lr * jnp.minimum(1.0, (s + 1) / max(1, warmup_steps))
+    return f
+
+
+def cosine(lr, total_steps, warmup_steps=0, min_frac=0.1):
+    def f(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(1.0, (s + 1) / max(1, warmup_steps or 1))
+        prog = jnp.clip((s - warmup_steps)
+                        / max(1, total_steps - warmup_steps), 0.0, 1.0)
+        cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return lr * warm * cos
+    return f

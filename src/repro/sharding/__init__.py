@@ -1,0 +1,4 @@
+from repro.sharding.rules import (adapter_specs, batch_specs, cache_specs,
+                                  param_specs)
+
+__all__ = ["adapter_specs", "batch_specs", "cache_specs", "param_specs"]

@@ -1,0 +1,274 @@
+"""PartitionSpec rules for the production mesh (DESIGN.md §3.4).
+
+Mesh axes: single-pod ``("data", "model")`` = (16, 16); multi-pod
+``("pod", "data", "model")`` = (2, 16, 16). ``dp`` below means the composite
+data axis — ``("pod", "data")`` when a pod axis exists, else ``"data"``.
+
+Strategy
+--------
+* Megatron tensor parallelism over ``"model"`` for every projection
+  (column-parallel into attention/MLP, row-parallel out), vocab-parallel
+  embeddings, expert-parallel MoE when E divides the model axis.
+* Clients ARE the dp axis: adapter trees (and optimizer state) carry a
+  leading client axis sharded over dp. The selective aggregation mean then
+  lowers to an all-reduce over dp of the *shared* leaves only.
+* Frozen base weights whose per-model-shard footprint is large are
+  additionally ZeRO-sharded over dp on the non-model dimension (they are
+  all-gathered on use; frozen weights have no optimizer state or gradient,
+  so this is pure memory relief).
+* Caches: batch over dp; KV heads over ``"model"`` when divisible, else
+  sequence over ``"model"`` (flash-decode: GSPMD turns the masked softmax
+  reductions into small all-reduces). SSM state: d_inner/heads over
+  ``"model"``.
+
+Only *boundary* tensors (params, adapters, optimizer state, inputs, caches)
+are constrained; interior activations are left to GSPMD propagation.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+# modules whose OUTPUT feature dim is model-sharded (column-parallel)
+_COL = {"wq", "wk", "wv", "w_gate", "w_up", "in_proj", "dt_proj",
+        "wq_b", "wkv_b", "wq_a"}
+# modules whose INPUT feature dim is model-sharded (row-parallel)
+_ROW = {"wo", "w_down", "out_proj", "x_proj", "proj"}
+# small / deliberately replicated
+_REPL = {"wkv_a", "router"}
+
+_NORM_HINTS = ("ln", "norm", "dt_bias", "gamma", "beta", "b")
+
+
+def dp_axis(mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else "data"
+
+
+def _model_size(mesh):
+    return mesh.shape["model"]
+
+
+def _dp_size(mesh):
+    return int(np.prod([mesh.shape[a] for a in mesh.axis_names
+                        if a != "model"]))
+
+
+def _names(path):
+    return [str(p.key) for p in path if hasattr(p, "key")]
+
+
+def _pad(ndim, trail):
+    """Left-pad a trailing spec with None up to ndim axes."""
+    trail = tuple(trail)
+    assert len(trail) <= ndim, (ndim, trail)
+    return P(*((None,) * (ndim - len(trail)) + trail))
+
+
+# ---------------------------------------------------------------------------
+# Base model params
+# ---------------------------------------------------------------------------
+
+def _param_trail(names, leaf, mesh, zero3_bytes):
+    """Trailing-dim spec for one base-param leaf."""
+    name = names[-1]
+    dp = dp_axis(mesh)
+    msize = _model_size(mesh)
+    big = leaf.size * 2 >= zero3_bytes          # bf16 footprint heuristic
+
+    if name == "embed":
+        return ("model", None)
+    if name == "head":
+        return (None, "model")
+    # MoE expert stacks: (E, d_in, d_out) under a "moe" subtree.
+    # Expert-parallel over "model"; for memory relief the expert HIDDEN
+    # dim f is additionally dp-sharded when big (Megatron col→row WITHIN
+    # the expert: gate/up outputs and the down contraction align on f, so
+    # only one partial-sum all-reduce per block remains — §Perf it. 2b).
+    # (Tried and REFUTED, §Perf it. 2a: E over ("model","data") jointly —
+    # GSPMD cannot reshard a data-dependent scatter destination and
+    # replicates the dispatch buffer: collective term 243s → 1760s. Joint
+    # expert-parallel needs explicit shard_map all-to-all. Also refuted:
+    # ZeRO-sharding the CONTRACTION dims over dp — every expert matmul
+    # partial-summed over dp.)
+    if "moe" in names and "shared" not in names and name in (
+            "w_gate", "w_up", "w_down"):
+        E = leaf.shape[-3]
+        if E % msize == 0:
+            # baseline layout: E expert-parallel over "model", ZeRO over dp
+            # on the input dim. (it. 2b — f-over-dp to align gate/up/down —
+            # measured WORSE: 243s → 290s collective; GSPMD resolved the
+            # h-tensor conflict with extra gathers. Kept: d-over-dp.)
+            return ("model", dp if big else None, None)
+        # granite: E=40 not divisible — shard the expert hidden dim
+        if name == "w_down":
+            return (None, "model", None)
+        return (None, None, "model")
+    if name in ("conv_w",):
+        return (None, "model")
+    if name == "A_log":
+        return ("model", None) if leaf.shape[-1] > 1 and leaf.ndim >= 2 \
+            and names[-2] == "mixer" and leaf.shape[-1] != leaf.shape[-2] \
+            else ("model",)
+    if name in ("conv_b", "D", "dt_bias"):
+        return ("model",)
+    if name in _REPL:
+        return (None, None)
+    if name in _COL:
+        extra = dp if big else None
+        return (extra, "model")
+    if name in _ROW:
+        extra = dp if big else None
+        return ("model", extra)
+    # norms / biases / scalars → replicated
+    return ()
+
+
+def param_specs(cfg, params_shape, mesh, *, zero3_bytes=2 ** 32):
+    """PartitionSpec pytree for ``init_model``-shaped params.
+
+    ``params_shape``: pytree of ShapeDtypeStructs (from ``jax.eval_shape``)
+    or concrete arrays. ``zero3_bytes``: leaves whose total bf16 footprint
+    exceeds this are additionally dp-sharded.
+    """
+    def rule(path, leaf):
+        names = _names(path)
+        # A_log disambiguation is fragile via shapes; redo cleanly here
+        if names[-1] == "A_log":
+            trail = ("model", None) if (leaf.ndim - _n_stack(path)) == 2 \
+                else ("model",)
+        else:
+            trail = _param_trail(names, leaf, mesh, zero3_bytes)
+        return _pad(leaf.ndim, trail)
+
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+def _n_stack(path):
+    """Number of leading stacked-layer axes implied by the path (segments
+    carry one scan axis; hybrid mamba carries two)."""
+    names = _names(path)
+    n = 0
+    if "segments" in names:
+        n = 1
+        if "mamba" in names:
+            n = 2
+    return n
+
+
+# ---------------------------------------------------------------------------
+# Adapters (and optimizer state, which mirrors them)
+# ---------------------------------------------------------------------------
+
+def _adapter_trail(names, mesh):
+    name = names[-1]
+    if "vera_shared" in names:
+        return (None, None)
+    # find the adapted module name (…/<module>/<leaf> or …/<module>/global/<leaf>)
+    module = None
+    for cand in reversed(names[:-1]):
+        if cand not in ("global", "personal"):
+            module = cand
+            break
+    col = module in _COL
+    if name == "A":
+        return (None, None)
+    if name == "B":
+        return (None, "model") if col else (None, None)
+    if name == "d":
+        return (None,)
+    if name == "b":
+        return ("model",) if col else (None,)
+    if name == "w":                             # cls head
+        return (None, None)
+    return ()
+
+
+def adapter_specs(cfg, adapters_shape, mesh, *, client_axis=False):
+    """Specs for an adapter tree; ``client_axis=True`` shards a leading
+    client dimension over dp (the in-mesh federated layout)."""
+    dp = dp_axis(mesh)
+
+    def rule(path, leaf):
+        names = _names(path)
+        trail = _adapter_trail(names, mesh)
+        lead = (dp,) if client_axis else ()
+        body_ndim = leaf.ndim - len(lead)
+        assert body_ndim >= len(trail), (names, leaf.shape)
+        return P(*(lead + (None,) * (body_ndim - len(trail)) + trail))
+
+    return jax.tree_util.tree_map_with_path(rule, adapters_shape)
+
+
+def make_opt_specs(opt_state_shape, trainable_specs_by_shape):
+    """Spec tree for optimizer state: every leaf inherits the spec of the
+    trainable leaf with the same shape; unknown scalars are replicated."""
+    def rule(path, leaf):
+        names = _names(path)
+        if names and names[-1] == "t":
+            return P()
+        spec = trainable_specs_by_shape.get(leaf.shape)
+        return spec if spec is not None else P()
+    return jax.tree_util.tree_map_with_path(rule, opt_state_shape)
+
+
+def specs_by_shape(tree_shape, tree_specs):
+    out = {}
+    for leaf, spec in zip(jax.tree_util.tree_leaves(tree_shape),
+                          jax.tree_util.tree_leaves(tree_specs,
+                                                    is_leaf=lambda x:
+                                                    isinstance(x, P))):
+        out[leaf.shape] = spec
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+def cache_specs(cfg, cache_shape, mesh, *, batch_over_dp=True):
+    """Specs for an ``init_cache`` pytree (with leading layer-scan axis)."""
+    dp = dp_axis(mesh) if batch_over_dp else None
+    msize = _model_size(mesh)
+
+    def rule(path, leaf):
+        names = _names(path)
+        name = names[-1]
+        if name in ("k", "v", "cross_k", "cross_v"):
+            # (n?, B, S, Hkv, hd)
+            Hkv = leaf.shape[-2]
+            if Hkv % msize == 0:
+                trail = (dp, None, "model", None)
+            else:
+                trail = (dp, "model", None, None)
+            return _pad(leaf.ndim, trail)
+        if name in ("ckv", "krope"):            # (n?, B, S, r)
+            return _pad(leaf.ndim, (dp, "model", None))
+        if name == "h":
+            if leaf.ndim - _n_stack(path) == 5 or leaf.ndim >= 5:
+                # mamba2: (n?, B, nh, hd, ds)
+                return _pad(leaf.ndim, (dp, "model", None, None))
+            # mamba1: (n?, B, di, ds)
+            return _pad(leaf.ndim, (dp, "model", None))
+        if name == "conv":                      # (n?, B, k-1, C)
+            return _pad(leaf.ndim, (dp, None, "model"))
+        return _pad(leaf.ndim, ())
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shape)
+
+
+# ---------------------------------------------------------------------------
+# Batches
+# ---------------------------------------------------------------------------
+
+def batch_specs(batch_shape, mesh, *, lead_axis=True):
+    """Inputs: leading (client or batch) axis over dp when divisible."""
+    dp = dp_axis(mesh)
+    dsize = _dp_size(mesh)
+
+    def rule(path, leaf):
+        if not lead_axis or leaf.ndim == 0 or leaf.shape[0] % dsize != 0:
+            return _pad(leaf.ndim, ())
+        return P(*((dp,) + (None,) * (leaf.ndim - 1)))
+
+    return jax.tree_util.tree_map_with_path(rule, batch_shape)

@@ -1,0 +1,27 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests run on the single real
+CPU device; only launch/dryrun.py forces 512 placeholder devices."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import AdapterConfig, get_config, reduced
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+def tiny(name, **kw):
+    return reduced(get_config(name), **kw)
+
+
+@pytest.fixture(scope="session")
+def acfg():
+    return AdapterConfig(rank=4)
+
+
+def tree_all_finite(tree):
+    return all(bool(jnp.all(jnp.isfinite(x)))
+               for x in jax.tree_util.tree_leaves(tree)
+               if jnp.issubdtype(x.dtype, jnp.floating))

@@ -1,0 +1,155 @@
+"""Selective aggregation invariants + the paper's aggregation-error algebra."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.aggregation import aggregate, broadcast_clients
+from repro.core.strategies import (FROZEN, LOCAL, SHARED, count_params,
+                                   leaf_role, role_tree, trainable_mask)
+
+
+def _client_tree(seed, C=4, d=6, r=2, dout=5):
+    rng = np.random.default_rng(seed)
+    leaf = lambda *s: jnp.asarray(rng.normal(size=(C,) + s).astype(np.float32))
+    return {"wq": {"A": leaf(d, r), "B": leaf(r, dout)},
+            "wv": {"A": leaf(d, r), "B": leaf(r, dout)},
+            "cls_head": {"w": leaf(d, 3), "b": leaf(3)}}
+
+
+@pytest.mark.parametrize("mode,a_role,b_role", [
+    ("fedavg", SHARED, SHARED),
+    ("ffa", FROZEN, SHARED),
+    ("fedsa", SHARED, LOCAL),
+])
+def test_roles(mode, a_role, b_role):
+    tree = _client_tree(0)
+    roles = role_tree(tree, mode)
+    assert roles["wq"]["A"] == a_role
+    assert roles["wq"]["B"] == b_role
+    assert roles["cls_head"]["w"] == SHARED
+
+
+def test_fedsa_aggregates_A_keeps_B():
+    tree = _client_tree(1)
+    out = aggregate(tree, "fedsa")
+    # A leaves: every client row equals the original cross-client mean
+    want = jnp.mean(tree["wq"]["A"], axis=0)
+    np.testing.assert_allclose(np.asarray(out["wq"]["A"][2]),
+                               np.asarray(want), rtol=1e-6)
+    # B leaves untouched
+    np.testing.assert_array_equal(np.asarray(out["wq"]["B"]),
+                                  np.asarray(tree["wq"]["B"]))
+
+
+def test_fedavg_aggregates_everything():
+    tree = _client_tree(2)
+    out = aggregate(tree, "fedavg")
+    for mod in ("wq", "wv"):
+        for leaf in ("A", "B"):
+            want = jnp.mean(tree[mod][leaf], axis=0)
+            np.testing.assert_allclose(np.asarray(out[mod][leaf][0]),
+                                       np.asarray(want), rtol=1e-6)
+
+
+def test_participation_mask_keeps_nonparticipants():
+    tree = _client_tree(3)
+    part = jnp.asarray([1.0, 0.0, 1.0, 0.0])
+    out = aggregate(tree, "fedsa", participation=part)
+    want = jnp.mean(tree["wq"]["A"][jnp.asarray([0, 2])], axis=0)
+    np.testing.assert_allclose(np.asarray(out["wq"]["A"][0]),
+                               np.asarray(want), rtol=1e-6)
+    # non-participant keeps its own A
+    np.testing.assert_array_equal(np.asarray(out["wq"]["A"][1]),
+                                  np.asarray(tree["wq"]["A"][1]))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 6), st.integers(0, 2 ** 31 - 1))
+def test_weighted_aggregation_is_convex_combination(C, seed):
+    rng = np.random.default_rng(seed)
+    tree = {"m": {"A": jnp.asarray(rng.normal(size=(C, 4, 2))
+                                   .astype(np.float32))}}
+    w = jnp.asarray(rng.uniform(0.1, 1.0, C).astype(np.float32))
+    out = aggregate(tree, "fedsa", weights=w)["m"]["A"]
+    want = jnp.tensordot(w / w.sum(), tree["m"]["A"], axes=(0, 0))
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+    # result within the convex hull per coordinate
+    lo = jnp.min(tree["m"]["A"], 0)
+    hi = jnp.max(tree["m"]["A"], 0)
+    assert bool(jnp.all(out[0] >= lo - 1e-5) and jnp.all(out[0] <= hi + 1e-5))
+
+
+def test_aggregation_idempotent():
+    tree = _client_tree(4)
+    once = aggregate(tree, "fedsa")
+    twice = aggregate(once, "fedsa")
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                                rtol=1e-6), once, twice)
+
+
+def test_comm_counts_fedsa_halves_fedavg():
+    """Table 2's structure: FedSA communicates only A (+head) — half of
+    vanilla LoRA's A+B per round; trainables equal LoRA's."""
+    tree = {"wq": {"A": jnp.zeros((6, 4)), "B": jnp.zeros((4, 6))},
+            "wv": {"A": jnp.zeros((6, 4)), "B": jnp.zeros((4, 6))}}
+    tr_avg, comm_avg = count_params(tree, "fedavg")
+    tr_sa, comm_sa = count_params(tree, "fedsa")
+    tr_ffa, comm_ffa = count_params(tree, "ffa")
+    assert comm_sa == comm_avg // 2 == comm_ffa
+    assert tr_sa == tr_avg == 2 * tr_ffa
+
+
+def test_ffa_equals_ideal_update():
+    """FFA's claim: with A fixed = A0, mean(Bᵢ)·A0 == mean(Bᵢ·A0)."""
+    rng = np.random.default_rng(5)
+    C, k, r, d = 5, 4, 2, 6
+    A0 = rng.normal(size=(r, d))
+    Bs = rng.normal(size=(C, k, r))
+    ideal = np.mean([Bs[i] @ A0 for i in range(C)], axis=0)
+    agg = Bs.mean(0) @ A0
+    np.testing.assert_allclose(agg, ideal, rtol=1e-10)
+
+
+def test_fedavg_has_aggregation_error():
+    """Eq. 27 vs Eq. 28: mean(Bᵢ)·mean(Aᵢ) ≠ mean(BᵢAᵢ) in general."""
+    rng = np.random.default_rng(6)
+    C, k, r, d = 5, 4, 2, 6
+    As = rng.normal(size=(C, r, d))
+    Bs = rng.normal(size=(C, k, r))
+    ideal = np.mean([Bs[i] @ As[i] for i in range(C)], axis=0)
+    fedavg = Bs.mean(0) @ As.mean(0)
+    assert np.abs(fedavg - ideal).max() > 1e-2
+
+
+def test_fedsa_update_matches_eq2():
+    """After a FedSA round, client i's ΔW is Bᵢ · mean(A) (paper Eq. 2)."""
+    tree = _client_tree(7)
+    out = aggregate(tree, "fedsa")
+    A_bar = jnp.mean(tree["wq"]["A"], axis=0)
+    for i in range(4):
+        dw = (out["wq"]["A"][i] @ out["wq"]["B"][i]).T   # our layout: (AB)ᵀ
+        want = (A_bar @ tree["wq"]["B"][i]).T
+        np.testing.assert_allclose(np.asarray(dw), np.asarray(want),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_trainable_mask_freezes_ffa_A():
+    tree = _client_tree(8)
+    single = jax.tree_util.tree_map(lambda x: x[0], tree)
+    mask = trainable_mask(single, "ffa")
+    assert float(mask["wq"]["A"]) == 0.0
+    assert float(mask["wq"]["B"]) == 1.0
+    mask_sa = trainable_mask(single, "fedsa")
+    assert float(mask_sa["wq"]["A"]) == 1.0
+
+
+def test_broadcast_clients_shapes():
+    single = {"x": jnp.ones((3, 2))}
+    out = broadcast_clients(single, 5)
+    assert out["x"].shape == (5, 3, 2)
+    np.testing.assert_array_equal(np.asarray(out["x"][3]),
+                                  np.asarray(single["x"]))

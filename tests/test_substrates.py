@@ -1,0 +1,183 @@
+"""data / optim / checkpoint / sketch substrate tests (incl. hypothesis)."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sketch import compress_roundtrip, make_sketch, sketch, unsketch
+from repro.data.synthetic import (dirichlet_partition,
+                                  make_classification_task, make_lm_task,
+                                  stack_client_batch)
+from repro.optim import adamw, apply_updates, sgd
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 8), st.sampled_from([None, 0.1, 0.5, 1.0, 10.0]),
+       st.integers(0, 2 ** 31 - 1))
+def test_dirichlet_partition_covers_all_indices(n_clients, alpha, seed):
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, 4, 400)
+    parts = dirichlet_partition(labels, n_clients, alpha, rng)
+    allidx = np.sort(np.concatenate(parts))
+    assert len(allidx) == 400
+    np.testing.assert_array_equal(np.unique(allidx), np.arange(400))
+    assert all(len(p) >= 8 for p in parts)  # floor guarantee
+
+
+def test_dirichlet_skew_increases_with_small_alpha():
+    rng = np.random.default_rng(0)
+    labels = rng.integers(0, 4, 4000)
+
+    def skew(alpha):
+        parts = dirichlet_partition(labels, 3, alpha,
+                                    np.random.default_rng(1))
+        tv = 0.0
+        for p in parts:
+            hist = np.bincount(labels[p], minlength=4) / len(p)
+            tv += np.abs(hist - 0.25).sum()
+        return tv
+
+    assert skew(0.1) > skew(100.0)
+
+
+def test_classification_task_learnable_structure():
+    clients, tests = make_classification_task(n_clients=3, n_classes=4,
+                                              vocab=128, seq=16,
+                                              n_train=300, n_test=60)
+    assert len(clients) == 3 and len(tests) == 3
+    for c in clients:
+        assert c["tokens"].shape[1] == 16
+        assert c["tokens"].max() < 128
+        assert set(np.unique(c["label"])) <= set(range(4))
+
+
+def test_lm_task_shapes():
+    clients, tests = make_lm_task(n_clients=2, vocab=64, seq=32,
+                                  n_train=64, n_test=16)
+    assert clients[0]["tokens"].shape == (32, 32)
+    assert clients[0]["labels"].shape == (32, 32)
+    # labels are the next-token shift of the same chain
+    assert clients[0]["tokens"].max() < 64
+
+
+def test_stack_client_batch_rectangular():
+    clients, _ = make_classification_task(n_clients=3, vocab=64, seq=8,
+                                          n_train=100, alpha=0.1)
+    b = stack_client_batch(clients, 16, np.random.default_rng(0))
+    assert b["tokens"].shape == (3, 16, 8)
+    assert b["label"].shape == (3, 16)
+
+
+# ---------------------------------------------------------------------------
+# optim
+# ---------------------------------------------------------------------------
+
+def test_sgd_quadratic_convergence():
+    init, update = sgd(0.1, momentum=0.9)
+    p = {"x": jnp.asarray([3.0, -2.0])}
+    st_ = init(p)
+    for i in range(200):
+        g = jax.tree_util.tree_map(lambda x: 2 * x, p)
+        upd, st_ = update(g, st_, p, step=i)
+        p = apply_updates(p, upd)
+    assert float(jnp.abs(p["x"]).max()) < 1e-4
+
+
+def test_adamw_quadratic_convergence():
+    init, update = adamw(0.1)
+    p = {"x": jnp.asarray([3.0, -2.0])}
+    st_ = init(p)
+    for i in range(300):
+        g = jax.tree_util.tree_map(lambda x: 2 * x, p)
+        upd, st_ = update(g, st_, p)
+        p = apply_updates(p, upd)
+    assert float(jnp.abs(p["x"]).max()) < 1e-3
+
+
+def test_mask_freezes_leaves():
+    init, update = sgd(0.1)
+    p = {"a": jnp.ones(3), "b": jnp.ones(3)}
+    mask = {"a": jnp.asarray(0.0), "b": jnp.asarray(1.0)}
+    g = {"a": jnp.ones(3), "b": jnp.ones(3)}
+    upd, _ = update(g, init(p), p, mask)
+    p2 = apply_updates(p, upd)
+    np.testing.assert_array_equal(np.asarray(p2["a"]), np.asarray(p["a"]))
+    assert float(jnp.abs(p2["b"] - p["b"]).max()) > 0
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+def test_pytree_roundtrip(tmp_path):
+    from repro.checkpoint import load_pytree, save_pytree
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.int32)},
+            "segs": [jnp.zeros((2, 2)), jnp.full((3,), 7.0)]}
+    path = os.path.join(tmp_path, "ck.npz")
+    save_pytree(path, tree)
+    out = load_pytree(path, tree)
+    jax.tree_util.tree_map(
+        lambda x, y: np.testing.assert_array_equal(np.asarray(x),
+                                                   np.asarray(y)), tree, out)
+
+
+def test_federated_checkpoint_split_layout(tmp_path):
+    from repro.checkpoint import load_federated, save_federated
+    C = 3
+    tree = {"wq": {"A": jnp.arange(C * 8, dtype=jnp.float32).reshape(C, 4, 2),
+                   "B": jnp.arange(C * 6, dtype=jnp.float32).reshape(C, 2, 3)}}
+    # emulate a post-aggregation state: shared A identical across clients
+    tree["wq"]["A"] = jnp.broadcast_to(tree["wq"]["A"][:1],
+                                       tree["wq"]["A"].shape)
+    d = os.path.join(tmp_path, "fed")
+    save_federated(d, tree, "fedsa")
+    assert os.path.exists(os.path.join(d, "server.npz"))
+    assert os.path.exists(os.path.join(d, "client_2.npz"))
+    out = load_federated(d, tree, "fedsa")
+    jax.tree_util.tree_map(
+        lambda x, y: np.testing.assert_allclose(np.asarray(x),
+                                                np.asarray(y)), tree, out)
+
+
+# ---------------------------------------------------------------------------
+# count sketch (Table 10 mechanism)
+# ---------------------------------------------------------------------------
+
+def test_sketch_linearity():
+    state = make_sketch(0, 256, rows=5, compression=0.5)
+    rng = np.random.default_rng(0)
+    g1 = jnp.asarray(rng.normal(size=256).astype(np.float32))
+    g2 = jnp.asarray(rng.normal(size=256).astype(np.float32))
+    s = sketch(state, g1) + sketch(state, g2)
+    s12 = sketch(state, g1 + g2)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s12),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_sketch_recovers_heavy_hitters():
+    state = make_sketch(1, 512, rows=7, compression=0.5)
+    g = np.zeros(512, np.float32)
+    hh = [3, 100, 200, 400]
+    g[hh] = [10.0, -8.0, 12.0, -9.0]
+    g += np.random.default_rng(2).normal(scale=0.05, size=512)
+    est = compress_roundtrip(state, jnp.asarray(g), topk_frac=0.05)
+    est = np.asarray(est)
+    top = np.argsort(-np.abs(est))[:4]
+    assert set(top) == set(hh)
+    np.testing.assert_allclose(est[hh], g[hh], atol=1.5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000), st.floats(0.3, 0.9))
+def test_sketch_size_respects_compression(seed, compression):
+    dim = 1000
+    state = make_sketch(seed, dim, rows=5, compression=compression)
+    assert state["rows"] * state["cols"] <= compression * dim + state["rows"]
