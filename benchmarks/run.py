@@ -18,9 +18,10 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (fig2_similarity, nlg_generation, roofline,
-                            table1_accuracy, table2_comm,
-                            table3_heterogeneity, table4_clients,
-                            table5_rank, table10_compression)
+                            serving_throughput, table1_accuracy,
+                            table2_comm, table3_heterogeneity,
+                            table4_clients, table5_rank,
+                            table10_compression)
 
     q = args.quick
     suites = {
@@ -33,6 +34,8 @@ def main() -> None:
         "nlg": lambda: nlg_generation.main(rounds=10 if q else 30),
         "table10": lambda: table10_compression.main(rounds=20 if q else 50),
         "roofline": roofline.main,
+        "serving": lambda: serving_throughput.main(
+            new_tokens=12 if q else 24),
     }
     only = set(args.only.split(",")) if args.only else set(suites)
     for name, fn in suites.items():

@@ -1,0 +1,96 @@
+"""Grouped (batched-gather) LoRA matmul for multi-tenant FedSA serving:
+
+  y[m] = x[m]·W + s·(x[m]·Ā)·B[slot[m]]
+
+One decode batch mixes rows from many tenants. Generic multi-LoRA SGMV
+must gather BOTH A_i and B_i per row; FedSA-LoRA's invariant — the
+aggregated Ā is *batch-global*, only B_i is per-client — lets the rank-r
+projection h = x·Ā run once per (m, k) tile on the MXU exactly like the
+fused ``lora_matmul``. Only the final rank-r → N expansion is per-row.
+
+The per-row gather is expressed as a matmul (MXU-friendly, no dynamic
+VMEM indexing): with P the (bm, n_slots) one-hot of slot ids, the
+slot-routed correction is
+
+  delta = reshape(P[:, :, None] * h[:, None, :], (bm, S·r)) @ B_flat
+
+where B_flat is the (n_slots·r, N) flattened slot table. Cost of the
+expansion grows only with n_slots·r (the *hot* adapter set, not the
+tenant population), so for n_slots ≤ 64, r ≤ 16 it stays one small
+matmul per output tile.
+
+Tiling mirrors ``lora_matmul``: grid (M/bm, N/bn, K/bk), K sequential;
+scratch acc (bm, bn) f32 + h (bm, r) f32. Slot ids ride along as a
+(bm, 1) int32 VMEM block per M-tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import CompilerParams
+
+
+def _kernel(s_ref, x_ref, w_ref, a_ref, b_ref, o_ref, acc_ref, h_ref, *,
+            scaling, nk, n_slots):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[...]
+    acc_ref[...] += jnp.dot(x, w_ref[...],
+                            preferred_element_type=jnp.float32)
+    h_ref[...] += jnp.dot(x, a_ref[...],
+                          preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _finish():
+        bm, r = h_ref.shape
+        slots = s_ref[...][:, 0]                              # (bm,)
+        onehot = (slots[:, None] == jax.lax.broadcasted_iota(
+            jnp.int32, (bm, n_slots), 1)).astype(jnp.float32)
+        hp = (onehot[:, :, None] * h_ref[...][:, None, :]
+              ).reshape(bm, n_slots * r)
+        delta = jnp.dot(hp.astype(b_ref.dtype), b_ref[...],
+                        preferred_element_type=jnp.float32)
+        o_ref[...] = (acc_ref[...] + scaling * delta).astype(o_ref.dtype)
+
+
+def bgmv(x, w, a, b_slots, slot_ids, scaling, *, bm=256, bn=256, bk=512,
+         interpret=False):
+    """x: (M, K); w: (K, N); a: (K, r); b_slots: (n_slots, r, N);
+    slot_ids: (M,) int32 in [0, n_slots) → (M, N)."""
+    M, K = x.shape
+    N = w.shape[1]
+    n_slots, r, _ = b_slots.shape
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
+    nk = K // bk
+    grid = (M // bm, N // bn, nk)
+    b_flat = b_slots.reshape(n_slots * r, N)
+    sids = slot_ids.astype(jnp.int32).reshape(M, 1)
+    return pl.pallas_call(
+        functools.partial(_kernel, scaling=scaling, nk=nk, n_slots=n_slots),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, 1), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bk, r), lambda i, j, k: (k, 0)),
+            pl.BlockSpec((n_slots * r, bn), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32),
+                        pltpu.VMEM((bm, r), jnp.float32)],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(sids, x, w, a, b_flat)

@@ -1,0 +1,12 @@
+"""jax version compat for Pallas-TPU symbols.
+
+jax renamed ``pltpu.TPUCompilerParams`` → ``pltpu.CompilerParams``; the
+toolchain baked into this container (0.4.x) still ships the old name.
+Every kernel imports ``CompilerParams`` from here so both spellings work.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    getattr(pltpu, "TPUCompilerParams")

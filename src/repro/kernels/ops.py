@@ -11,6 +11,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.bgmv import bgmv as _bgmv
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.lora_matmul import lora_matmul as _lora
 from repro.kernels.ssm_scan import ssm_scan as _ssm
@@ -28,6 +29,16 @@ def lora_matmul(x, w, a, b, scaling=1.0, *, bm=256, bn=256, bk=512,
                 interpret=None):
     interpret = _interpret_default() if interpret is None else interpret
     return _lora(x, w, a, b, scaling, bm=bm, bn=bn, bk=bk,
+                 interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("scaling", "bm", "bn", "bk",
+                                             "interpret"))
+def bgmv(x, w, a, b_slots, slot_ids, scaling=1.0, *, bm=256, bn=256,
+         bk=512, interpret=None):
+    """Multi-tenant grouped LoRA matmul (shared Ā, per-row B[slot])."""
+    interpret = _interpret_default() if interpret is None else interpret
+    return _bgmv(x, w, a, b_slots, slot_ids, scaling, bm=bm, bn=bn, bk=bk,
                  interpret=interpret)
 
 

@@ -16,6 +16,19 @@ def lora_matmul_ref(x, w, a, b, scaling):
     return (y + scaling * (h @ b.astype(jnp.float32))).astype(x.dtype)
 
 
+def bgmv_ref(x, w, a, b_slots, slot_ids, scaling):
+    """Grouped serving matmul: y[m] = x[m]·W + s·(x[m]·Ā)·B[slot[m]].
+
+    x: (M, K); w: (K, N); a: (K, r); b_slots: (n_slots, r, N);
+    slot_ids: (M,) int32.
+    """
+    x32 = x.astype(jnp.float32)
+    y = x32 @ w.astype(jnp.float32)
+    h = x32 @ a.astype(jnp.float32)                  # (M, r) — shared Ā
+    bsel = b_slots.astype(jnp.float32)[slot_ids]     # (M, r, N) per-row B
+    return (y + scaling * jnp.einsum("mr,mrn->mn", h, bsel)).astype(x.dtype)
+
+
 def ssm_scan_ref(a, b, c):
     """Mamba1 selective scan: h_t = a_t⊙h_{t-1} + b_t; y_t = Σ_s h_t·C_t.
 

@@ -16,6 +16,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 
 def _kernel(dt_ref, x_ref, bm_ref, c_ref, a_ref, y_ref, hout_ref, h_ref, *,
             chunk, ns):
@@ -76,7 +78,7 @@ def ssd_scan_fused(dt, x, bm, c, A, *, bh=8, chunk=64, interpret=False):
         out_shape=[jax.ShapeDtypeStruct((B, S, nh, hd), jnp.float32),
                    jax.ShapeDtypeStruct((B, nh, hd, ds), jnp.float32)],
         scratch_shapes=[pltpu.VMEM((bh, hd, ds), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(dt, x, bm, c, A)

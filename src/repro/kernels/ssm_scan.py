@@ -27,6 +27,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 
 def _kernel(a_ref, b_ref, c_ref, y_ref, h_ref, *, chunk):
     s = pl.program_id(2)
@@ -65,7 +67,7 @@ def ssm_scan(a, b, c, *, bd=512, chunk=64, interpret=False):
         out_specs=pl.BlockSpec((1, chunk, bd), lambda i, j, s: (i, s, j)),
         out_shape=jax.ShapeDtypeStruct((B, S, D), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bd, N), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(a, b, c)
@@ -130,7 +132,7 @@ def ssm_scan_fused(dt, x, bm, c, A, *, bd=512, chunk=64, interpret=False):
         out_shape=[jax.ShapeDtypeStruct((B, S, D), jnp.float32),
                    jax.ShapeDtypeStruct((B, D, N), jnp.float32)],
         scratch_shapes=[pltpu.VMEM((bd, N), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(dt, x, bm, c, A)

@@ -61,7 +61,14 @@ def lora_delta(ad, x, scaling, vera_shared=None):
         h = h @ B.astype(jnp.float32)
         return (h * ad["b"].astype(jnp.float32)).astype(x.dtype)
     h = x.astype(jnp.float32) @ ad["A"].astype(jnp.float32)
-    h = h @ ad["B"].astype(jnp.float32)
+    B = ad["B"].astype(jnp.float32)
+    if B.ndim == 3 and x.ndim == 3:
+        # Grouped multi-tenant serving (repro.serving): one B_i per batch
+        # row, gathered from the registry slot table; Ā stays batch-global
+        # (the FedSA invariant), so h above is computed once for the batch.
+        h = jnp.einsum("bsr,brn->bsn", h, B)
+    else:
+        h = h @ B
     return (h * scaling).astype(x.dtype)
 
 

@@ -58,6 +58,22 @@ def _model_axis_size():
 # inside vmap cannot express "replicated over model, sharded over dp".)
 
 
+def _shard_map_model(fn, mesh, in_specs, out_specs):
+    """jax version compat: ``jax.shard_map`` (new spelling, manual over
+    "model" only) vs ``jax.experimental.shard_map`` (0.4.x, ``auto=`` set
+    for the axes left automatic, ``check_rep`` for ``check_vma``)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(fn, mesh=mesh, axis_names={"model"},
+                             in_specs=in_specs, out_specs=out_specs,
+                             check_vma=False)
+    from jax.experimental.shard_map import shard_map
+    # 0.4.x partial-auto lowering emits PartitionId, unsupported by the
+    # XLA-CPU SPMD partitioner — run fully manual instead: ``fn`` only
+    # uses "model" collectives, and the specs replicate the other axes.
+    return shard_map(fn, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_rep=False)
+
+
 def _moe_expert_parallel(cfg, p, x, probs_k, ids, capacity):
     """Explicit expert-parallel dispatch via shard_map (§Perf it. 2f).
 
@@ -127,10 +143,10 @@ def _moe_expert_parallel(cfg, p, x, probs_k, ids, capacity):
     wg = jax.lax.stop_gradient(p["w_gate"])
     wu = jax.lax.stop_gradient(p["w_up"])
     wd = jax.lax.stop_gradient(p["w_down"])
-    y_parts = jax.shard_map(
-        fn, mesh=mesh, axis_names={"model"},
-        in_specs=(P("model"), P("model"), P("model"), P(), P(), P()),
-        out_specs=P("model"), check_vma=False,
+    y_parts = _shard_map_model(
+        fn, mesh,
+        (P("model"), P("model"), P("model"), P(), P(), P()),
+        P("model"),
     )(wg, wu, wd, x.astype(jnp.float32), probs_k, ids)
     return jnp.sum(y_parts, axis=0).reshape(B, S, d)  # AR over model
 

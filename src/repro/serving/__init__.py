@@ -1,0 +1,21 @@
+"""Multi-tenant personalized-adapter serving for FedSA-LoRA.
+
+At serving time the paper's structure — one aggregated Ā shared by every
+client, a client-specific B_i per tenant — means millions of personalized
+models differ only by a tiny rank-r×N matrix. One base forward plus one
+shared x·Ā projection can therefore serve a *mixed* batch of clients:
+
+  ``registry``   AdapterRegistry: LRU slot tables packing the hot B_i set
+  ``scheduler``  continuous-batching FIFO scheduler over decode rows
+  ``engine``     ServingEngine: prefill/decode loop + throughput metrics
+
+The matching compute primitive is ``repro.kernels.bgmv`` (grouped
+shared-Ā LoRA matmul); the model-integration path is the grouped branch
+of ``repro.models.common.lora_delta``.
+"""
+from repro.serving.engine import ServingEngine
+from repro.serving.registry import AdapterRegistry, gather_adapters
+from repro.serving.scheduler import Request, Scheduler, Sequence
+
+__all__ = ["AdapterRegistry", "gather_adapters", "Request", "Scheduler",
+           "Sequence", "ServingEngine"]

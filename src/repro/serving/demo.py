@@ -1,0 +1,43 @@
+"""Stand-in tenant populations for serving demos, benchmarks, and tests.
+
+A trained ``FedSystem`` is the real source of per-client adapters
+(``AdapterRegistry.from_system``); these helpers fabricate the same
+structure — SHARED leaves (the aggregated Ā) identical across clients,
+LOCAL leaves (B_i) drawn per client — without paying for federated
+training in a throughput benchmark or launcher demo.
+"""
+from __future__ import annotations
+
+import zlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.strategies import LOCAL, leaf_role
+
+
+def _path_id(path):
+    parts = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+    return zlib.crc32("/".join(parts).encode())
+
+
+def synthetic_clients(template, n_clients, *, mode="fedsa", seed=0,
+                      scale=0.02):
+    """``n_clients`` trainables trees sharing ``template``'s SHARED
+    leaves, with each LOCAL leaf drawn per (client, leaf-path) — distinct
+    even when two modules have identical shapes."""
+    root = jax.random.PRNGKey(seed)
+
+    def one(i):
+        ck = jax.random.fold_in(root, i)
+
+        def leaf(path, x):
+            if leaf_role(path, mode) != LOCAL:
+                return x
+            k = jax.random.fold_in(ck, _path_id(path))
+            return (jax.random.normal(k, x.shape, jnp.float32)
+                    * scale).astype(x.dtype)
+
+        return jax.tree_util.tree_map_with_path(leaf, template)
+
+    return [one(i) for i in range(n_clients)]

@@ -1,0 +1,172 @@
+"""ServingEngine: registry + scheduler + model → one decode loop.
+
+``step()`` interleaves prefill and decode the way a continuous-batching
+server does:
+
+  1. admit queued requests into free batch rows (registry pins a slot),
+  2. prefill each new request at batch 1 and scatter its KV row into the
+     shared fixed-shape decode cache,
+  3. run ONE grouped decode step for the whole mixed-client batch — the
+     per-row B_i is gathered from the registry slot tables inside the
+     jitted step (the grouped branch of ``lora_delta``; the fused TPU
+     form of the same contraction is ``repro.kernels.bgmv``),
+  4. retire finished rows, freeing their row + registry pin.
+
+The decode step is jitted once: slot tables, slot ids, tokens, positions
+and cache are all traced arguments with fixed shapes. Per-row positions
+let rows sit at different sequence depths (``decode_step`` already takes
+``pos: (B,)``).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer import decode_step, init_cache, prefill, segments
+from repro.serving.registry import gather_adapters
+from repro.serving.scheduler import Scheduler
+
+
+def _scatter_row(big, small, row):
+    """Insert a batch-1 cache pytree into row ``row`` of the batch cache.
+    Every non-hybrid cache leaf carries batch at axis 1: (n, B, ...)."""
+    def one(dst, src):
+        start = (0, row) + (0,) * (dst.ndim - 2)
+        return jax.lax.dynamic_update_slice(dst, src.astype(dst.dtype), start)
+    return jax.tree_util.tree_map(one, big, small)
+
+
+class ServingEngine:
+    def __init__(self, cfg, params, acfg, registry, *, max_batch=8,
+                 max_seq=64, cache_dtype=jnp.float32):
+        if cfg.family == "hybrid":
+            raise NotImplementedError(
+                "hybrid cache layout (inner axis before batch) not wired")
+        if any(s["kind"] == "dec_attn" for s in segments(cfg)):
+            raise NotImplementedError("enc-dec serving needs frame plumbing")
+        if cfg.mla is not None:
+            raise NotImplementedError(
+                "MLA decode merges W+ΔW via effective_weight, which has no "
+                "grouped per-row-B form yet")
+        self.cfg, self.params, self.acfg = cfg, params, acfg
+        self.registry = registry
+        self.scheduler = Scheduler(max_batch)
+        self.max_batch, self.max_seq = max_batch, max_seq
+        self.cache = init_cache(cfg, max_batch, max_seq, cache_dtype)
+        self._toks = np.zeros((max_batch, 1), np.int32)
+        self._pos = np.zeros((max_batch,), np.int32)
+        self._slots = np.zeros((max_batch,), np.int32)
+        self.finished = {}              # rid → dict(client_id, tokens)
+        self.decoded_tokens = 0
+        self.prefill_tokens = 0
+        self.decode_steps = 0
+        self._occ_sum = 0.0
+        self._t0 = None
+        local = registry.local_tree
+
+        def _adapters(tree):
+            # registry templates are either the adapters tree itself or a
+            # full trainables tree ({"adapters": ..., "cls_head": ...})
+            return tree["adapters"] if "adapters" in tree else tree
+
+        def _prefill_fn(tables, slot, tokens):
+            ad = _adapters(gather_adapters(tables, local, slot[None]))
+            logits, cache1, _ = prefill(cfg, params, ad, acfg, tokens,
+                                        max_seq, cache_dtype=cache_dtype)
+            return jnp.argmax(logits[:, -1], -1).astype(jnp.int32), cache1
+
+        def _decode_fn(tables, slots, toks, pos, cache):
+            ad = _adapters(gather_adapters(tables, local, slots))
+            logits, cache = decode_step(cfg, params, ad, acfg, toks, pos,
+                                        cache)
+            return jnp.argmax(logits[:, 0], -1).astype(jnp.int32), cache
+
+        # prefill retraces per distinct prompt length; decode compiles once
+        self._prefill = jax.jit(_prefill_fn)
+        self._decode = jax.jit(_decode_fn)
+        self._scatter = jax.jit(_scatter_row)
+
+    def reset_stats(self):
+        """Zero throughput counters (e.g. after a warm-up pass); keeps the
+        compiled functions, cache buffers, and registry residency."""
+        self.finished = {}
+        self.decoded_tokens = self.prefill_tokens = self.decode_steps = 0
+        self._occ_sum = 0.0
+        self._t0 = None
+        self.registry.hits = self.registry.misses = 0
+        self.registry.evictions = 0
+
+    # -- request plane ------------------------------------------------------
+    def submit(self, client_id, prompt, max_new_tokens=16):
+        assert len(prompt) + max_new_tokens <= self.max_seq, \
+            "prompt + generation exceeds engine max_seq"
+        return self.scheduler.submit(client_id, prompt, max_new_tokens)
+
+    # -- serving loop -------------------------------------------------------
+    def step(self):
+        """One scheduler tick: admit/prefill new requests, decode one token
+        for every active row, retire finished sequences."""
+        if self._t0 is None:
+            self._t0 = time.perf_counter()
+        for seq in self.scheduler.admit(self.registry):
+            row, req = seq.row, seq.request
+            tok0, cache1 = self._prefill(
+                self.registry.tables, jnp.int32(seq.slot),
+                jnp.asarray(req.prompt[None]))
+            self.cache = self._scatter(self.cache, cache1, row)
+            first = int(tok0[0])
+            seq.generated.append(first)
+            self.prefill_tokens += 1
+            self._toks[row, 0] = first
+            self._pos[row] = seq.pos
+            self._slots[row] = seq.slot
+        self._retire_done()
+        if self.scheduler.active:
+            out, self.cache = self._decode(
+                self.registry.tables, jnp.asarray(self._slots),
+                jnp.asarray(self._toks), jnp.asarray(self._pos), self.cache)
+            out = np.asarray(out)
+            for row, seq in list(self.scheduler.active.items()):
+                tok = int(out[row])
+                seq.generated.append(tok)
+                seq.pos += 1
+                self._toks[row, 0] = tok
+                self._pos[row] = seq.pos
+                self.decoded_tokens += 1
+            self.decode_steps += 1
+            self._occ_sum += self.scheduler.occupancy
+            self._retire_done()
+
+    def _retire_done(self):
+        for row, seq in list(self.scheduler.active.items()):
+            if seq.done:
+                self.scheduler.retire(row, self.registry)
+                req = seq.request
+                self.finished[req.rid] = {
+                    "client_id": req.client_id,
+                    "tokens": np.asarray(seq.generated, np.int32)}
+
+    def run(self, max_steps=10_000):
+        """Drive ``step()`` until queue and batch drain; returns report."""
+        steps = 0
+        while not self.scheduler.idle and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.report()
+
+    def report(self):
+        dt = (time.perf_counter() - self._t0) if self._t0 else float("nan")
+        total = self.decoded_tokens + self.prefill_tokens
+        return {
+            "requests": len(self.finished),
+            "tokens": total,
+            "tok_per_s": total / dt if dt and dt > 0 else float("nan"),
+            "decode_steps": self.decode_steps,
+            "batch_occupancy": (self._occ_sum / self.decode_steps
+                                if self.decode_steps else 0.0),
+            "adapter_hit_rate": self.registry.stats["hit_rate"],
+            "wall_s": dt,
+        }

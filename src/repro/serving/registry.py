@@ -1,0 +1,169 @@
+"""AdapterRegistry: dense slot tables over the hot set of per-client B_i.
+
+The tenant population can be arbitrarily large (the cold store is a host
+dict of numpy B_i trees, a few KB per client at rank 8), but a decode
+batch only ever references the *hot* set admitted into ``n_slots`` dense
+on-device tables. Each LOCAL adapter leaf (B under FedSA) is packed with
+a slot axis so a whole mixed batch is served by one gather:
+
+  leaf  (n_layers, r, d_out)  →  table (n_layers, n_slots, r, d_out)
+
+SHARED/FROZEN leaves (the aggregated Ā) are stored once, verbatim — the
+FedSA invariant that makes the grouped kernel cheap. Admission is LRU
+with pinning: slots referenced by in-flight sequences are never evicted;
+``acquire`` returns ``None`` when every slot is pinned (the scheduler
+then leaves the request queued).
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.strategies import LOCAL, leaf_role
+
+
+def _pack_axis(leaf_ndim):
+    """Slot-axis position: just before the last two (matmul) dims, so a
+    per-row gather yields a leading batch axis under the layer scan."""
+    return max(0, leaf_ndim - 2)
+
+
+def gather_adapters(tables, local, slot_ids):
+    """Materialize the per-row adapter tree for a batch (jit-safe).
+
+    tables: registry tree (packed LOCAL tables + shared leaves);
+    local: matching pytree of python bools; slot_ids: (B,) int32.
+    LOCAL leaves gain a per-row axis: (n, n_slots, r, d) → (n, B, r, d).
+    """
+    return jax.tree_util.tree_map(
+        lambda leaf, loc: jnp.take(leaf, slot_ids, axis=_pack_axis(
+            leaf.ndim - 1)) if loc else leaf,
+        tables, local)
+
+
+class AdapterRegistry:
+    """LRU admission of per-client local adapters into dense slot tables."""
+
+    def __init__(self, template, n_slots, *, mode="fedsa"):
+        """template: ONE client's trainables tree (e.g.
+        ``{"adapters": ...}`` without the client axis); its SHARED leaves
+        seed the batch-global Ā."""
+        if mode != "fedsa":
+            raise NotImplementedError(
+                "grouped serving relies on the FedSA invariant (batch-"
+                f"global Ā, per-client B); mode={mode!r} has per-client A")
+        self.mode = mode
+        self.n_slots = n_slots
+        flat, self._treedef = jax.tree_util.tree_flatten_with_path(template)
+        self._local = [leaf_role(path, mode) == LOCAL for path, _ in flat]
+        self._leaves = []
+        for (path, leaf), loc in zip(flat, self._local):
+            if loc:
+                name = (str(path[-1].key) if hasattr(path[-1], "key")
+                        else "")
+                if name != "B":
+                    raise NotImplementedError(
+                        "grouped serving packs LoRA B matrices only; "
+                        f"LOCAL leaf {name!r} (e.g. VeRA's b vector) has "
+                        "no per-row gather path in lora_delta")
+                shape = (leaf.shape[:_pack_axis(leaf.ndim)] + (n_slots,)
+                         + leaf.shape[_pack_axis(leaf.ndim):])
+                self._leaves.append(jnp.zeros(shape, leaf.dtype))
+            else:
+                self._leaves.append(jnp.asarray(leaf))
+        self._store = {}                    # client_id → [local leaves] (np)
+        self._lru = OrderedDict()           # client_id → slot (LRU order)
+        self._free = list(range(n_slots))[::-1]
+        self._pins = [0] * n_slots
+        self.hits = self.misses = self.evictions = 0
+
+    # -- cold store ---------------------------------------------------------
+    def ingest(self, client_id, client_tree):
+        """Register a client's trained trainables tree (host-side copy of
+        its LOCAL leaves only — the per-tenant cold store)."""
+        flat = jax.tree_util.tree_leaves(client_tree)
+        assert len(flat) == len(self._local), "tree structure mismatch"
+        self._store[client_id] = [
+            np.asarray(leaf) for leaf, loc in zip(flat, self._local) if loc]
+
+    @classmethod
+    def from_system(cls, system, n_slots, *, clients=None):
+        """Build from a trained ``FedSystem``: splits the client axis off
+        ``system.trainables`` and ingests every (or the given) client."""
+        tr = system.trainables
+        n_clients = system.fed.n_clients
+        template = jax.tree_util.tree_map(lambda x: x[0], tr)
+        reg = cls(template, n_slots, mode=system.acfg.mode)
+        for c in (range(n_clients) if clients is None else clients):
+            reg.ingest(c, jax.tree_util.tree_map(lambda x: x[c], tr))
+        return reg
+
+    # -- admission ----------------------------------------------------------
+    def acquire(self, client_id, *, pin=True):
+        """Slot for ``client_id``, admitting (and LRU-evicting) on miss.
+        Returns None when no unpinned slot is available."""
+        if client_id in self._lru:
+            self.hits += 1
+            self._lru.move_to_end(client_id)
+            slot = self._lru[client_id]
+        else:
+            self.misses += 1
+            if client_id not in self._store:
+                raise KeyError(f"client {client_id} was never ingested")
+            if self._free:
+                slot = self._free.pop()
+            else:
+                victim = next((c for c, s in self._lru.items()
+                               if self._pins[s] == 0), None)
+                if victim is None:
+                    return None
+                slot = self._lru.pop(victim)
+                self.evictions += 1
+            self._write_slot(slot, client_id)
+            self._lru[client_id] = slot
+        if pin:
+            self._pins[slot] += 1
+        return slot
+
+    def release(self, client_id):
+        slot = self._lru[client_id]
+        assert self._pins[slot] > 0
+        self._pins[slot] -= 1
+
+    def _write_slot(self, slot, client_id):
+        stored = iter(self._store[client_id])
+        for i, loc in enumerate(self._local):
+            if loc:
+                table = self._leaves[i]
+                idx = ((slice(None),) * _pack_axis(table.ndim - 1)
+                       + (slot,))
+                self._leaves[i] = table.at[idx].set(
+                    jnp.asarray(next(stored), table.dtype))
+
+    # -- views --------------------------------------------------------------
+    @property
+    def tables(self):
+        """Registry tree: packed LOCAL tables + shared leaves (pass to
+        ``gather_adapters`` together with ``local_tree``)."""
+        return jax.tree_util.tree_unflatten(self._treedef, self._leaves)
+
+    @property
+    def local_tree(self):
+        return jax.tree_util.tree_unflatten(self._treedef, self._local)
+
+    def gather(self, slot_ids):
+        """Per-row adapter tree for a batch of slot ids (eager helper)."""
+        return gather_adapters(self.tables, self.local_tree,
+                               jnp.asarray(slot_ids, jnp.int32))
+
+    @property
+    def stats(self):
+        total = self.hits + self.misses
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions,
+                "hit_rate": self.hits / total if total else 0.0,
+                "resident": len(self._lru), "n_slots": self.n_slots,
+                "clients": len(self._store)}

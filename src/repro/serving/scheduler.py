@@ -1,0 +1,85 @@
+"""Continuous-batching request scheduler.
+
+A fixed decode batch of ``max_batch`` rows; a FIFO queue of
+``(client_id, prompt)`` requests. Admission takes the head of the queue
+whenever (a) a batch row is free and (b) the registry can pin a slot for
+that client (hit, free slot, or unpinned LRU eviction). Finished
+sequences release their row and registry pin, so the next ``admit`` can
+refill the row mid-stream — decode never drains the whole batch to make
+progress on the queue.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    client_id: int
+    prompt: np.ndarray                 # (L,) int32 prompt token ids
+    max_new_tokens: int = 16
+    rid: int = -1                      # assigned on submit
+
+
+@dataclasses.dataclass
+class Sequence:
+    """One in-flight row of the decode batch."""
+    request: Request
+    row: int
+    slot: int
+    pos: int                           # next cache write position
+    generated: list = dataclasses.field(default_factory=list)
+
+    @property
+    def done(self):
+        return len(self.generated) >= self.request.max_new_tokens
+
+
+class Scheduler:
+    def __init__(self, max_batch):
+        self.max_batch = max_batch
+        self.queue = deque()
+        self.active = {}               # row → Sequence
+        self._free_rows = list(range(max_batch))[::-1]
+        self._next_rid = 0
+
+    def submit(self, client_id, prompt, max_new_tokens=16):
+        req = Request(client_id, np.asarray(prompt, np.int32),
+                      max_new_tokens, rid=self._next_rid)
+        self._next_rid += 1
+        self.queue.append(req)
+        return req.rid
+
+    def admit(self, registry):
+        """Move queue heads into free rows while registry slots pin.
+        Returns the newly admitted Sequences (prefill still pending)."""
+        admitted = []
+        while self.queue and self._free_rows:
+            req = self.queue[0]
+            slot = registry.acquire(req.client_id)
+            if slot is None:           # every slot pinned by active rows
+                break
+            self.queue.popleft()
+            row = self._free_rows.pop()
+            seq = Sequence(req, row, slot, pos=len(req.prompt))
+            self.active[row] = seq
+            admitted.append(seq)
+        return admitted
+
+    def retire(self, row, registry):
+        """Free a finished row + its registry pin; returns the Sequence."""
+        seq = self.active.pop(row)
+        registry.release(seq.request.client_id)
+        self._free_rows.append(row)
+        return seq
+
+    @property
+    def occupancy(self):
+        return len(self.active) / self.max_batch
+
+    @property
+    def idle(self):
+        return not self.queue and not self.active

@@ -6,6 +6,29 @@ import pytest
 
 from repro.configs import AdapterConfig, get_config, reduced
 
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:  # bare CI env — property-based tests skip, rest run
+    HAVE_HYPOTHESIS = False
+
+    def given(*a, **k):
+        return lambda f: pytest.mark.optional_deps(
+            pytest.mark.skip(reason="hypothesis not installed")(f))
+    settings = given
+
+    class _AnyStrategy:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+    st = _AnyStrategy()
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "optional_deps: needs an optional dependency (hypothesis); "
+        "skipped rather than errored on bare environments")
+
 
 @pytest.fixture(scope="session")
 def key():

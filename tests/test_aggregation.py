@@ -3,7 +3,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+# real hypothesis when installed, skip-marking stubs otherwise
+from conftest import given, settings, st  # noqa: F401
 
 from repro.core.aggregation import aggregate, broadcast_clients
 from repro.core.strategies import (FROZEN, LOCAL, SHARED, count_params,

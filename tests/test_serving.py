@@ -1,0 +1,207 @@
+"""repro.serving: registry LRU semantics, scheduler slot reuse, and the
+multi-tenant engine vs the naive one-client-at-a-time decode path."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import AdapterConfig, get_config, reduced
+from repro.core.adapters import init_adapters
+from repro.models.transformer import decode_step, init_model, prefill
+from repro.serving import AdapterRegistry, Scheduler, ServingEngine
+from repro.serving.demo import synthetic_clients
+
+KEY = jax.random.PRNGKey(0)
+
+
+def tiny_cfg():
+    return reduced(get_config("deepseek-7b"), n_layers=2, d_model=64)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = tiny_cfg()
+    acfg = AdapterConfig(mode="fedsa", rank=4)
+    params = init_model(KEY, cfg, jnp.float32)
+    base = init_adapters(KEY, cfg, acfg)
+    trees = [t["adapters"] for t in
+             synthetic_clients({"adapters": base}, 5, seed=50, scale=0.05)]
+    return cfg, acfg, params, base, trees
+
+
+def make_registry(base, trees, n_slots):
+    reg = AdapterRegistry({"adapters": base}, n_slots=n_slots)
+    for i, t in enumerate(trees):
+        reg.ingest(i, {"adapters": t})
+    return reg
+
+
+# ---------------------------------------------------------------------------
+# AdapterRegistry
+# ---------------------------------------------------------------------------
+
+def test_registry_lru_admission_and_counters(setup):
+    _, _, _, base, trees = setup
+    reg = make_registry(base, trees, n_slots=2)
+    s0 = reg.acquire(0, pin=False)
+    s1 = reg.acquire(1, pin=False)
+    assert {s0, s1} == {0, 1}
+    assert (reg.hits, reg.misses, reg.evictions) == (0, 2, 0)
+    assert reg.acquire(0, pin=False) == s0          # hit, no movement
+    assert (reg.hits, reg.misses) == (1, 2)
+    # client 1 is now LRU → admitting 2 evicts client 1, reuses its slot
+    s2 = reg.acquire(2, pin=False)
+    assert s2 == s1
+    assert reg.evictions == 1
+    # client 1 re-admission is a miss again and evicts the LRU (client 0)
+    s1b = reg.acquire(1, pin=False)
+    assert s1b == s0
+    assert reg.misses == 4
+    assert reg.stats["hit_rate"] == pytest.approx(1 / 5)
+
+
+def test_registry_pinned_slots_not_evicted(setup):
+    _, _, _, base, trees = setup
+    reg = make_registry(base, trees, n_slots=2)
+    reg.acquire(0)                                   # pinned
+    reg.acquire(1)                                   # pinned
+    assert reg.acquire(2) is None                    # nothing evictable
+    reg.release(0)
+    s = reg.acquire(2)
+    assert s is not None                             # took client 0's slot
+    assert 0 not in reg._lru and 2 in reg._lru
+    with pytest.raises(KeyError):
+        reg.acquire(99)                              # never ingested
+
+
+def test_registry_gather_roundtrip(setup):
+    _, _, _, base, trees = setup
+    reg = make_registry(base, trees, n_slots=3)
+    s3 = reg.acquire(3, pin=False)
+    s1 = reg.acquire(1, pin=False)
+    got = reg.gather(np.array([s1, s3, s1]))["adapters"]
+    want = {"one": trees[1], "three": trees[3]}
+
+    def leaf_of(tree, seg, grp, name, ab):
+        return np.asarray(tree["segments"][seg][grp][name][ab])
+
+    for seg in range(len(base["segments"])):
+        for grp, mods in trees[1]["segments"][seg].items():
+            for name in mods:
+                g = np.asarray(got["segments"][seg][grp][name]["B"])
+                # rows 0, 2 → client 1; row 1 → client 3
+                np.testing.assert_array_equal(
+                    g[:, 0], leaf_of(want["one"], seg, grp, name, "B"))
+                np.testing.assert_array_equal(
+                    g[:, 1], leaf_of(want["three"], seg, grp, name, "B"))
+                np.testing.assert_array_equal(g[:, 0], g[:, 2])
+                # A is shared — no per-row axis
+                a = np.asarray(got["segments"][seg][grp][name]["A"])
+                np.testing.assert_array_equal(
+                    a, leaf_of(want["one"], seg, grp, name, "A"))
+
+
+def test_registry_rejects_per_client_A_modes(setup):
+    _, _, _, base, _ = setup
+    with pytest.raises(NotImplementedError):
+        AdapterRegistry({"adapters": base}, n_slots=2, mode="feddpa")
+
+
+def test_registry_rejects_non_matrix_local_leaves():
+    """VeRA's LOCAL leaf is the b *vector* — no grouped gather path."""
+    vera_like = {"adapters": {"segments": [
+        {"attn": {"wq": {"d": jnp.ones((4,)), "b": jnp.zeros((8,))}}}]}}
+    with pytest.raises(NotImplementedError):
+        AdapterRegistry(vera_like, n_slots=2)
+
+
+def test_engine_rejects_mla_configs(setup):
+    _, acfg, _, base, trees = setup
+    mla_cfg = reduced(get_config("deepseek-v3-671b"))
+    assert mla_cfg.mla is not None
+    reg = make_registry(base, trees, n_slots=2)
+    with pytest.raises(NotImplementedError):
+        ServingEngine(mla_cfg, None, acfg, reg, max_batch=2, max_seq=8)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler
+# ---------------------------------------------------------------------------
+
+def test_scheduler_row_and_slot_reuse(setup):
+    _, _, _, base, trees = setup
+    reg = make_registry(base, trees, n_slots=2)
+    sched = Scheduler(max_batch=2)
+    for i in range(4):
+        sched.submit(i % 2, np.zeros(4, np.int32), max_new_tokens=1)
+    first = sched.admit(reg)
+    assert [s.row for s in first] == [0, 1]
+    assert len(sched.queue) == 2
+    assert sched.admit(reg) == []                   # batch full
+    # finish row 0 → its row AND registry pin free up for the next request
+    sched.active[0].generated.append(1)
+    seq = sched.retire(0, reg)
+    assert seq.done
+    nxt = sched.admit(reg)
+    assert len(nxt) == 1 and nxt[0].row == 0
+    assert nxt[0].request.client_id == 0            # FIFO order preserved
+    assert reg.stats["hits"] >= 1                   # client 0 slot reused
+
+
+def test_scheduler_blocks_when_all_slots_pinned(setup):
+    _, _, _, base, trees = setup
+    reg = make_registry(base, trees, n_slots=1)
+    sched = Scheduler(max_batch=2)
+    sched.submit(0, np.zeros(4, np.int32))
+    sched.submit(1, np.zeros(4, np.int32))
+    got = sched.admit(reg)
+    assert len(got) == 1                            # client 1 can't pin
+    assert sched.queue[0].client_id == 1
+    sched.active[got[0].row].generated = [0] * 16
+    sched.retire(got[0].row, reg)
+    assert len(sched.admit(reg)) == 1               # now it can
+
+
+# ---------------------------------------------------------------------------
+# Engine end-to-end
+# ---------------------------------------------------------------------------
+
+def test_engine_mixed_batch_matches_naive_per_client(setup):
+    """The tentpole invariant: a mixed-client batched decode must produce
+    EXACTLY the tokens each client's personalized model produces alone."""
+    cfg, acfg, params, base, trees = setup
+    n_clients, new_tokens, plen = 3, 5, 6
+    reg = make_registry(base, trees, n_slots=2)     # force eviction churn
+    eng = ServingEngine(cfg, params, acfg, reg, max_batch=2, max_seq=16)
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab_size, plen) for _ in range(4)]
+    for i, p in enumerate(prompts):
+        eng.submit(i % n_clients, p, max_new_tokens=new_tokens)
+    rep = eng.run()
+    assert rep["requests"] == 4
+    assert rep["tokens"] == 4 * new_tokens
+    assert 0.0 < rep["batch_occupancy"] <= 1.0
+
+    for rid, p in enumerate(prompts):
+        ad = trees[rid % n_clients]
+        toks = jnp.asarray(p[None].astype(np.int32))
+        logits, cache, _ = prefill(cfg, params, ad, acfg, toks, 16,
+                                   cache_dtype=jnp.float32)
+        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        want = [int(tok[0, 0])]
+        for s in range(new_tokens - 1):
+            pos = jnp.full((1,), plen + s, jnp.int32)
+            logits, cache = decode_step(cfg, params, ad, acfg, tok, pos,
+                                        cache)
+            tok = jnp.argmax(logits[:, 0], -1)[:, None].astype(jnp.int32)
+            want.append(int(tok[0, 0]))
+        assert eng.finished[rid]["tokens"].tolist() == want, rid
+
+
+def test_engine_rejects_oversized_requests(setup):
+    cfg, acfg, params, base, trees = setup
+    reg = make_registry(base, trees, n_slots=2)
+    eng = ServingEngine(cfg, params, acfg, reg, max_batch=2, max_seq=8)
+    with pytest.raises(AssertionError):
+        eng.submit(0, np.zeros(6, np.int32), max_new_tokens=4)

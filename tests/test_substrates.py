@@ -5,7 +5,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+# real hypothesis when installed, skip-marking stubs otherwise
+from conftest import given, settings, st  # noqa: F401
 
 from repro.core.sketch import compress_roundtrip, make_sketch, sketch, unsketch
 from repro.data.synthetic import (dirichlet_partition,
