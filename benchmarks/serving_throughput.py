@@ -1,22 +1,29 @@
-"""Multi-tenant batched decode vs. naive one-client-per-batch serving.
+"""Serving throughput: paged + chunked-batched-prefill engine vs the
+PR-1 dense/batch-1-prefill engine vs naive one-client-per-batch serving.
 
-The FedSA-LoRA serving claim: because every client shares the aggregated
-Ā and differs only in B_i, requests from DIFFERENT clients can ride one
-decode batch (repro.serving). The naive baseline — what
-``examples/serve_personalized.py`` did before this subsystem — decodes
-each client's request alone at batch 1, so N clients cost N sequential
-decode loops.
+The FedSA-LoRA serving claim (PR 1): because every client shares the
+aggregated Ā and differs only in B_i, requests from DIFFERENT clients
+can ride one decode batch. This benchmark adds the PR-2 claim on top: a
+paged KV cache (block tables + page pool) with length-bucketed batched
+prefill stops charging every sequence for ``max_seq`` — prompts are
+prefilled in a handful of batched power-of-two buckets instead of one
+batch-1 pass per request, and decode attends only over the page bucket
+covering the deepest active row.
 
-Both paths run the same model, the same per-request prefill, and the same
-greedy decode on the host backend; the only difference is batching across
-tenants. Also times the grouped ``bgmv`` kernel (interpret mode) against
-its jnp reference at one serving-shaped operand set for the record.
+All engines run the same model and the same greedy decode on the host
+backend with a warm-up pass (jit caches live on the engine's wrapped
+functions), over a *heterogeneous* prompt-length mix. Results are
+persisted to ``BENCH_serving.json`` at the repo root so the perf
+trajectory is machine-readable across PRs.
 
-  PYTHONPATH=src python benchmarks/serving_throughput.py [--clients 8]
+  PYTHONPATH=src python benchmarks/serving_throughput.py \
+      [--requests 16] [--new-tokens 24]
 """
 from __future__ import annotations
 
 import argparse
+import json
+import pathlib
 import time
 
 import numpy as np
@@ -35,25 +42,26 @@ try:                       # python -m benchmarks.serving_throughput / run.py
 except ImportError:        # python benchmarks/serving_throughput.py
     from common import emit
 
+BENCH_PATH = pathlib.Path(__file__).resolve().parent.parent / \
+    "BENCH_serving.json"
 
-def run_multi_tenant(cfg, params, acfg, base, client_trees, prompts,
-                     new_tokens, batch, max_seq):
+
+def run_engine(cfg, params, acfg, base, client_trees, prompts, new_tokens,
+               batch, max_seq, **engine_kw):
     """Warm-up pass (compiles), then the timed pass on the SAME engine —
     jit caches live on the engine's wrapped functions."""
     reg = AdapterRegistry({"adapters": base}, n_slots=batch)
     for i, tr in enumerate(client_trees):
         reg.ingest(i, {"adapters": tr})
     engine = ServingEngine(cfg, params, acfg, reg, max_batch=batch,
-                           max_seq=max_seq)
+                           max_seq=max_seq, **engine_kw)
     for timed in (False, True):
         engine.reset_stats()
         for i, p in enumerate(prompts):
             engine.submit(i % len(client_trees), p,
                           max_new_tokens=new_tokens)
-        t0 = time.perf_counter()
         rep = engine.run()
-        dt = time.perf_counter() - t0
-    return rep["tokens"], dt, rep
+    return rep
 
 
 def run_naive(cfg, params, acfg, client_trees, prompts, new_tokens,
@@ -103,9 +111,30 @@ def bench_kernel(cfg, acfg, batch):
                                 - y0.astype(jnp.float32))))
     emit("serving.bgmv_kernel_max_err", 0.0, f"{err:.2e}")
     assert err < 1e-4, err
+    return err
 
 
-def main(clients=8, batch=8, requests=8, prompt_len=12, new_tokens=24):
+def _engine_row(rep):
+    """The machine-readable slice of an engine report (non-finite values
+    become null so the JSON stays strict-parser-valid)."""
+    keys = ("tok_per_s", "gen_tok_per_s", "decode_tok_per_s",
+            "prefill_tokens", "decode_tokens", "generated_tokens",
+            "decode_steps", "prefill_batches", "prefill_retraces",
+            "decode_retraces", "batch_occupancy", "page_utilization",
+            "pool_occupancy", "adapter_hit_rate", "wall_s", "kv_layout")
+    def clean(v):
+        if isinstance(v, float) and not np.isfinite(v):
+            return None
+        return v
+    return {k: clean(rep[k]) for k in keys if k in rep}
+
+
+def main(clients=8, batch=8, requests=16, new_tokens=24, page_size=16,
+         max_seq=256):
+    """Both engines get the same ``max_seq`` admission capacity — the
+    dense layout must allocate (and attend over) all of it for every
+    row, while the paged engine's cost follows the traffic actually
+    served. That equal-capacity framing is the paging claim."""
     cfg = reduced(get_config("deepseek-7b"), n_layers=2, d_model=128)
     acfg = AdapterConfig(mode="fedsa", rank=8)
     key = jax.random.PRNGKey(0)
@@ -114,42 +143,80 @@ def main(clients=8, batch=8, requests=8, prompt_len=12, new_tokens=24):
     client_trees = [t["adapters"] for t in
                     synthetic_clients(template, clients, seed=11)]
     base = template["adapters"]
-    max_seq = prompt_len + new_tokens
+    # heterogeneous prompt lengths: short chats to long contexts
+    hetero = [8, 24, 12, 48, 6, 32, 16, 40]
+    lens = [hetero[i % len(hetero)] for i in range(requests)]
+    assert max(lens) + new_tokens <= max_seq
     rng = np.random.default_rng(0)
-    prompts = [rng.integers(0, cfg.vocab_size, prompt_len)
-               for _ in range(requests)]
+    prompts = [rng.integers(0, cfg.vocab_size, n) for n in lens]
 
-    mt_tokens, mt_dt, rep = run_multi_tenant(
-        cfg, params, acfg, base, client_trees, prompts, new_tokens,
-        batch, max_seq)
+    common = (cfg, params, acfg, base, client_trees, prompts, new_tokens,
+              batch, max_seq)
+    paged = run_engine(*common, kv_layout="paged", page_size=page_size)
+    dense = run_engine(*common, kv_layout="dense")
     nv_tokens, nv_dt = run_naive(cfg, params, acfg, client_trees, prompts,
                                  new_tokens, max_seq)
-
-    mt_tps = mt_tokens / mt_dt
     nv_tps = nv_tokens / nv_dt
-    emit("serving.multi_tenant_tok_per_s", mt_dt / mt_tokens * 1e6,
-         f"{mt_tps:.1f}")
+
+    speedup = paged["gen_tok_per_s"] / dense["gen_tok_per_s"]
+    decode_speedup = paged["decode_tok_per_s"] / dense["decode_tok_per_s"]
+    emit("serving.paged_gen_tok_per_s", 1e6 / paged["gen_tok_per_s"],
+         f"{paged['gen_tok_per_s']:.1f}")
+    emit("serving.dense_gen_tok_per_s", 1e6 / dense["gen_tok_per_s"],
+         f"{dense['gen_tok_per_s']:.1f}")
     emit("serving.naive_sequential_tok_per_s", nv_dt / nv_tokens * 1e6,
          f"{nv_tps:.1f}")
-    emit("serving.speedup", 0.0, f"{mt_tps / nv_tps:.2f}x")
-    emit("serving.batch_occupancy", 0.0, f"{rep['batch_occupancy']:.2f}")
-    emit("serving.adapter_hit_rate", 0.0, f"{rep['adapter_hit_rate']:.2f}")
-    bench_kernel(cfg, acfg, batch)
-    print(f"multi-tenant {mt_tps:.1f} tok/s vs naive {nv_tps:.1f} tok/s "
-          f"→ {mt_tps / nv_tps:.2f}x at {clients} clients / "
-          f"batch {batch}")
+    emit("serving.paged_speedup_vs_dense", 0.0, f"{speedup:.2f}x")
+    emit("serving.paged_decode_speedup_vs_dense", 0.0,
+         f"{decode_speedup:.2f}x")
+    emit("serving.prefill_batches", 0.0,
+         f"{paged['prefill_batches']}v{dense['prefill_batches']}")
+    emit("serving.page_utilization", 0.0,
+         f"{paged['page_utilization']:.2f}")
+    emit("serving.batch_occupancy", 0.0, f"{paged['batch_occupancy']:.2f}")
+    emit("serving.adapter_hit_rate", 0.0,
+         f"{paged['adapter_hit_rate']:.2f}")
+    kerr = bench_kernel(cfg, acfg, batch)
+
+    record = {
+        "bench": "serving_throughput",
+        "config": {"arch": cfg.name, "n_layers": cfg.n_layers,
+                   "d_model": cfg.d_model, "rank": acfg.rank,
+                   "clients": clients, "batch": batch,
+                   "requests": requests, "prompt_lens": lens,
+                   "new_tokens": new_tokens, "max_seq": max_seq,
+                   "page_size": page_size, "backend":
+                   jax.default_backend()},
+        "paged": _engine_row(paged),
+        "dense": _engine_row(dense),
+        "naive": {"tok_per_s": nv_tps, "wall_s": nv_dt},
+        "speedup_vs_dense": speedup,
+        "decode_speedup_vs_dense": decode_speedup,
+        "speedup_vs_naive": paged["gen_tok_per_s"] / nv_tps,
+        "bgmv_kernel_max_err": kerr,
+    }
+    BENCH_PATH.write_text(json.dumps(record, indent=2) + "\n")
+    print(f"paged {paged['gen_tok_per_s']:.1f} gen tok/s vs dense "
+          f"{dense['gen_tok_per_s']:.1f} vs naive {nv_tps:.1f} → "
+          f"{speedup:.2f}x over dense ({decode_speedup:.2f}x decode-only) "
+          f"at {requests} heterogeneous requests / batch {batch} "
+          f"[{BENCH_PATH.name}]")
+    return record
 
 
 def _cli():
     ap = argparse.ArgumentParser()
     ap.add_argument("--clients", type=int, default=8)
     ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=24)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--max-seq", type=int, default=256,
+                    help="admission capacity shared by both engines")
     a = ap.parse_args()
     main(clients=a.clients, batch=a.batch, requests=a.requests,
-         prompt_len=a.prompt_len, new_tokens=a.new_tokens)
+         new_tokens=a.new_tokens, page_size=a.page_size,
+         max_seq=a.max_seq)
 
 
 if __name__ == "__main__":

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 from repro.kernels.bgmv import bgmv as _bgmv
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.lora_matmul import lora_matmul as _lora
+from repro.kernels.paged_attention import paged_attention as _paged
 from repro.kernels.ssm_scan import ssm_scan as _ssm
 from repro.kernels.ssd_scan import ssd_scan_fused as _ssd_fused
 from repro.kernels.ssm_scan import ssm_scan_fused as _ssm_fused
@@ -60,6 +61,15 @@ def ssd_scan_fused(dt, x, bm, c, A, *, bh=8, chunk=64, interpret=None):
     interpret = _interpret_default() if interpret is None else interpret
     return _ssd_fused(dt, x, bm, c, A, bh=bh, chunk=chunk,
                       interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_attention(q, k_pages, v_pages, block_tables, pos, *, window=None,
+                    interpret=None):
+    """Paged grouped decode attention (block-table gather in-kernel)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    return _paged(q, k_pages, v_pages, block_tables, pos, window=window,
+                  interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bkv",

@@ -1,0 +1,114 @@
+"""Paged grouped decode-attention: one query token per row against a
+block-table-indirected KV page pool (vLLM-style PagedAttention).
+
+The serving engine stores K/V in fixed-size pages shared by every
+sequence; a per-row block table maps logical page p of row b to the
+physical page ``block_tables[b, p]``. The kernel never materializes the
+gathered (B, S, Hkv, hd) view the jnp path builds: the block table and
+positions ride in as *scalar-prefetch* operands
+(``PrefetchScalarGridSpec``) so the K/V BlockSpec index_map dereferences
+the table directly — grid cell (b, h, p) DMAs exactly one physical page
+from HBM into VMEM.
+
+Grid (B, Hkv, P), page axis sequential. GQA: the G = H // Hkv query
+heads of one KV head share the page read; scores are (G, page) tiles on
+the MXU with the same online-softmax scratch (m, l, acc) as
+``flash_attention``. Pages wholly beyond the row's position (or wholly
+outside the sliding window) are skipped with ``pl.when`` — a row at
+depth t touches ceil((t+1)/page) pages, not P.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import CompilerParams
+
+NEG_INF = -1e30
+
+
+def _kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+            acc_ref, *, page, npages, scale, window):
+    b = pl.program_id(0)
+    p = pl.program_id(2)
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pos = pos_ref[b]
+    base = p * page
+    live = base <= pos                       # page holds positions <= pos
+    if window is not None:                   # ... and inside the window
+        live &= (pos - (base + page - 1)) < window
+
+    @pl.when(live)
+    def _accumulate():
+        q = q_ref[0, 0].astype(jnp.float32)          # (G, hd)
+        k = k_ref[0, :, 0].astype(jnp.float32)       # (page, hd)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        idx = base + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        valid = idx <= pos
+        if window is not None:
+            valid &= (pos - idx) < window
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        pexp = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(pexp, axis=-1,
+                                                 keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+            pexp, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(p == npages - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def paged_attention(q, k_pages, v_pages, block_tables, pos, *, window=None,
+                    interpret=False):
+    """q: (B, H, hd); k_pages/v_pages: (n_pages, page, Hkv, hd);
+    block_tables: (B, P) int32 physical page ids; pos: (B,) int32 index
+    of the newest (already written) token → (B, H, hd)."""
+    B, H, hd = q.shape
+    page, Hkv = k_pages.shape[1], k_pages.shape[2]
+    P = block_tables.shape[1]
+    G = H // Hkv
+    qr = q.reshape(B, Hkv, G, hd)
+    kv_spec = pl.BlockSpec((1, page, 1, hd),
+                           lambda b, h, p, bt, ps: (bt[b, p], 0, h, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv, P),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, p, bt, ps: (b, h, 0, 0)),
+            kv_spec,
+            kv_spec,
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd),
+                               lambda b, h, p, bt, ps: (b, h, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((G, 1), jnp.float32),
+                        pltpu.VMEM((G, 1), jnp.float32),
+                        pltpu.VMEM((G, hd), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, page=page, npages=P, scale=hd ** -0.5,
+                          window=window),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, hd), q.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), pos.astype(jnp.int32),
+      qr, k_pages, v_pages)
+    return out.reshape(B, H, hd)

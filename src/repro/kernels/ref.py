@@ -29,6 +29,35 @@ def bgmv_ref(x, w, a, b_slots, slot_ids, scaling):
     return (y + scaling * jnp.einsum("mr,mrn->mn", h, bsel)).astype(x.dtype)
 
 
+def paged_attention_ref(q, k_pages, v_pages, block_tables, pos, *,
+                        window=None):
+    """Paged grouped decode attention: gather pages into a logical view,
+    then masked softmax over positions <= pos (and inside the window).
+
+    q: (B, H, hd); k_pages/v_pages: (n_pages, page, Hkv, hd);
+    block_tables: (B, P) int32 physical page ids; pos: (B,) int32.
+    Returns (B, H, hd).
+    """
+    B, H, hd = q.shape
+    page, Hkv = k_pages.shape[1], k_pages.shape[2]
+    P = block_tables.shape[1]
+    T = P * page
+    k = k_pages[block_tables.reshape(-1)].reshape(B, T, Hkv, hd)
+    v = v_pages[block_tables.reshape(-1)].reshape(B, T, Hkv, hd)
+    G = H // Hkv
+    qg = q.reshape(B, Hkv, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg,
+                   k.astype(jnp.float32)) * hd ** -0.5
+    idx = jnp.arange(T)[None, :]
+    valid = idx <= pos[:, None]
+    if window is not None:
+        valid &= (pos[:, None] - idx) < window
+    s = jnp.where(valid[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, v.astype(jnp.float32))
+    return out.reshape(B, H, hd).astype(q.dtype)
+
+
 def ssm_scan_ref(a, b, c):
     """Mamba1 selective scan: h_t = a_t⊙h_{t-1} + b_t; y_t = Σ_s h_t·C_t.
 

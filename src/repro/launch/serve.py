@@ -36,17 +36,27 @@ def run_multi_tenant(args, acfg):
                                                mode=acfg.mode, seed=7)):
         reg.ingest(i, tree)
     engine = ServingEngine(cfg, params, acfg, reg,
-                           max_batch=min(8, args.clients), max_seq=48)
+                           max_batch=min(8, args.clients), max_seq=64,
+                           kv_layout=args.kv_layout,
+                           page_size=args.page_size,
+                           attn_backend=args.attn_backend,
+                           lora_backend=args.lora_backend)
     rng = np.random.default_rng(0)
     for r in range(args.requests):
+        plen = int(rng.integers(4, 33))          # heterogeneous prompts
         engine.submit(r % args.clients,
-                      rng.integers(0, cfg.vocab_size, 12), max_new_tokens=16)
+                      rng.integers(0, cfg.vocab_size, plen),
+                      max_new_tokens=16)
     rep = engine.run()
+    extra = (f", page util {rep['page_utilization']:.2f}"
+             if rep["kv_layout"] == "paged" else "")
     print(f"served {rep['requests']} requests from {args.clients} clients "
-          f"({args.slots} adapter slots): {rep['tokens']} tokens in "
-          f"{rep['wall_s']:.1f}s = {rep['tok_per_s']:.1f} tok/s, "
+          f"({args.slots} adapter slots, {rep['kv_layout']} kv): "
+          f"{rep['tokens']} tokens in {rep['wall_s']:.1f}s = "
+          f"{rep['tok_per_s']:.1f} tok/s "
+          f"({rep['decode_tok_per_s']:.1f} decode-only), "
           f"occupancy {rep['batch_occupancy']:.2f}, "
-          f"adapter hit rate {rep['adapter_hit_rate']:.2f}")
+          f"adapter hit rate {rep['adapter_hit_rate']:.2f}{extra}")
 
 
 def main():
@@ -71,6 +81,13 @@ def main():
     ap.add_argument("--clients", type=int, default=8)
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--kv-layout", default="auto",
+                    choices=["auto", "paged", "dense"])
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--attn-backend", default="xla",
+                    choices=["xla", "pallas"])
+    ap.add_argument("--lora-backend", default="jnp",
+                    choices=["jnp", "bgmv"])
     args = ap.parse_args()
 
     acfg = AdapterConfig(mode=args.mode, variant=args.variant)

@@ -141,6 +141,65 @@ def decode_attention(q, k_cache, v_cache, pos, *, window=None):
     return out.reshape(B, 1, H * hd).astype(v_cache.dtype)
 
 
+def paged_gather(pages, block_tables):
+    """Materialize a logical-order KV view from the page pool.
+
+    pages: (n_pages, page_size, Hkv, hd); block_tables: (B, P) int32
+    physical page ids in logical order. Returns (B, P·page_size, Hkv, hd).
+    """
+    B, P = block_tables.shape
+    page = pages.shape[1]
+    flat = jnp.take(pages, block_tables.reshape(-1), axis=0)
+    return flat.reshape(B, P * page, *pages.shape[2:])
+
+
+def attn_decode_paged(cfg, p, ad, acfg, x, pos, k_pages, v_pages,
+                      block_tables, *, window=None, backend="xla",
+                      vera_shared=None):
+    """One-step decode against a paged KV cache.
+
+    x: (B, 1, d); pos: (B,); k_pages/v_pages: (n_pages, page, Hkv, hd);
+    block_tables: (B, P) physical page ids (page 0 of the pool is the
+    write-off page shared by retired/padded rows).
+
+    The pools are READ-ONLY here: threading per-layer pool updates
+    through the layer scan makes XLA rebuild every page each step, which
+    costs exactly the dense-layout traffic paging is meant to avoid.
+    Instead the xla backend inserts the new K/V row into the *gathered*
+    logical view (numerically identical — pages are disjoint) and the
+    caller commits all layers' rows with ONE post-scan scatter into the
+    (donated) pool. The pallas backend hands the kernel the same view
+    via pools updated locally for the read.
+
+    Returns (y, k_row (B, Hkv, hd), v_row (B, Hkv, hd)).
+    """
+    B = x.shape[0]
+    q, k, v = _qkv(cfg, p, ad, acfg, x, x, vera_shared)
+    q = apply_rope(q, pos[:, None], cfg.rope_theta)
+    k = apply_rope(k, pos[:, None], cfg.rope_theta)
+    k_row = k[:, 0].astype(k_pages.dtype)
+    v_row = v[:, 0].astype(v_pages.dtype)
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+        page = k_pages.shape[1]
+        phys = jnp.take_along_axis(block_tables, (pos // page)[:, None],
+                                   axis=1)[:, 0]
+        out = kops.paged_attention(q[:, 0],
+                                   k_pages.at[phys, pos % page].set(k_row),
+                                   v_pages.at[phys, pos % page].set(v_row),
+                                   block_tables, pos, window=window)
+        out = out.reshape(B, 1, -1)
+    else:
+        bidx = jnp.arange(B)
+        ks = paged_gather(k_pages, block_tables).at[bidx, pos].set(k_row)
+        vs = paged_gather(v_pages, block_tables).at[bidx, pos].set(v_row)
+        out = decode_attention(q, ks, vs, pos, window=window)
+    sc = acfg.scaling if acfg is not None else 1.0
+    vs_ = (vera_shared or {})
+    y = adapted(p["wo"], maybe(ad, "wo"), out, sc, vs_.get("wo"))
+    return y, k_row, v_row
+
+
 def attn_forward(cfg, p, ad, acfg, x, positions, *, causal=True,
                  window=None, kv_x=None, rope=True, vera_shared=None):
     """Full-sequence attention (training / prefill / encoder / cross)."""

@@ -14,9 +14,10 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.models.attention import (attn_decode, attn_forward,
-                                    cross_attn_decode, init_attention,
-                                    init_mla, mla_decode, mla_forward)
+from repro.models.attention import (attn_decode, attn_decode_paged,
+                                    attn_forward, cross_attn_decode,
+                                    init_attention, init_mla, mla_decode,
+                                    mla_forward)
 from repro.models.mamba import init_mamba, mamba_forward, mamba_step
 from repro.models.mamba2 import init_mamba2, mamba2_forward, mamba2_step
 from repro.models.mlp import init_mlp, mlp_forward
@@ -150,8 +151,13 @@ def block_forward(cfg, p, ad, acfg, x, positions, kind, *, window=None,
 # ---------------------------------------------------------------------------
 
 def block_decode(cfg, p, ad, acfg, x, pos, cache, kind, *, window=None,
-                 vera_shared=None):
-    """x: (B, 1, d). Returns (x, new_cache_entry)."""
+                 vera_shared=None, paged=None):
+    """x: (B, 1, d). Returns (x, new_cache_entry).
+
+    ``paged`` (attn blocks only): {"block_tables": (B, P) int32,
+    "attn_backend": "xla"|"pallas"} — the cache entry then holds page
+    pools instead of per-row dense K/V (see ``attn_decode_paged``).
+    """
     if kind in ("mamba", "mamba2"):
         step = mamba_step if kind == "mamba" else mamba2_step
         y, h, conv = step(cfg, p["mixer"], maybe(ad, "mixer"), acfg,
@@ -165,6 +171,13 @@ def block_decode(cfg, p, ad, acfg, x, pos, cache, kind, *, window=None,
                                    h_in, pos, cache["ckv"], cache["krope"],
                                    vera_shared=vera_shared)
         new_cache.update({"ckv": ckv, "krope": krope})
+    elif paged is not None:
+        y, k, v = attn_decode_paged(cfg, p["attn"], maybe(ad, "attn"), acfg,
+                                    h_in, pos, cache["k"], cache["v"],
+                                    paged["block_tables"], window=window,
+                                    backend=paged["attn_backend"],
+                                    vera_shared=vera_shared)
+        new_cache.update({"k": k, "v": v})
     else:
         y, k, v = attn_decode(cfg, p["attn"], maybe(ad, "attn"), acfg, h_in,
                               pos, cache["k"], cache["v"], window=window,

@@ -15,8 +15,26 @@ Conventions
 """
 from __future__ import annotations
 
+import contextlib
+
 import jax
 import jax.numpy as jnp
+
+# Grouped multi-tenant LoRA backend: "jnp" (gather + einsum, the default)
+# or "bgmv" (fused repro.kernels.bgmv base+delta matmul). Trace-scoped via
+# ``grouped_lora_backend`` — the serving engine enters the context inside
+# its jitted step so the choice is baked at trace time per engine.
+_GROUPED_LORA_BACKEND = ["jnp"]
+
+
+@contextlib.contextmanager
+def grouped_lora_backend(name):
+    prev = _GROUPED_LORA_BACKEND[0]
+    _GROUPED_LORA_BACKEND[0] = name
+    try:
+        yield
+    finally:
+        _GROUPED_LORA_BACKEND[0] = prev
 
 
 def rms_norm(x, gamma, eps=1e-5):
@@ -79,6 +97,16 @@ def adapted(w, ad, x, scaling, vera_shared=None):
     in ``stop_gradient`` here so callers can simply differentiate w.r.t. the
     adapter pytree.
     """
+    if (_GROUPED_LORA_BACKEND[0] == "bgmv" and ad is not None
+            and "B" in ad and getattr(ad["B"], "ndim", 0) == 3
+            and x.ndim == 3 and x.shape[1] == 1):
+        # Grouped decode on the fused kernel: y[m] = x·W + s·(x·Ā)·B[m].
+        # ad["B"] is already the per-row gather, so the slot table handed
+        # to bgmv is the batch itself with identity slot ids.
+        from repro.kernels import ops as kops
+        y = kops.bgmv(x[:, 0], jax.lax.stop_gradient(w), ad["A"], ad["B"],
+                      jnp.arange(x.shape[0], dtype=jnp.int32), scaling)
+        return y[:, None]
     y = x @ jax.lax.stop_gradient(w)
     if ad is not None:
         if "global" in ad:  # FedDPA: sum of global + personal adapters

@@ -350,6 +350,129 @@ def init_cache(cfg, batch_size, max_seq, dtype=jnp.bfloat16, enc_seq=None):
     return caches
 
 
+def paged_unsupported_reason(cfg):
+    """Why a config cannot use the paged KV layout (None when it can).
+
+    Paging applies to decoder-attention K/V; SSM/hybrid state caches have
+    no sequence axis to page and enc-dec / MLA decode are not wired.
+    """
+    if cfg.mla is not None:
+        return "MLA latent cache has no paged decode path"
+    bad = [s["kind"] for s in segments(cfg) if s["kind"] != "attn"]
+    if bad:
+        return f"segment kinds {sorted(set(bad))} have no paged layout"
+    return None
+
+
+def init_paged_cache(cfg, n_pages, page_size, dtype=jnp.bfloat16):
+    """Paged decode cache: per segment a K/V page pool
+    (n_layers, n_pages, page_size, Hkv, hd) shared by every sequence.
+
+    Logical position t of a row lives at physical page
+    ``block_table[row, t // page_size]``, offset ``t % page_size``; the
+    block table itself is host state (``repro.serving.scheduler``) passed
+    into ``decode_step_paged`` / ``prefill_paged`` as a traced argument.
+    """
+    reason = paged_unsupported_reason(cfg)
+    if reason is not None:
+        raise NotImplementedError(reason)
+    hd = cfg.resolved_head_dim
+    Hkv = cfg.n_kv_heads
+    return [{"k": _zeros((seg["n"], n_pages, page_size, Hkv, hd), dtype),
+             "v": _zeros((seg["n"], n_pages, page_size, Hkv, hd), dtype)}
+            for seg in segments(cfg)]
+
+
+def _scatter_pages(pages, src, page_ids, page_size):
+    """Write prefill K/V straight into the pool.
+
+    pages: (n, n_pages, page, ...); src: (n, G, L, ...) with
+    L % page == 0; page_ids: (G, L // page) physical destination per
+    logical page (write-off page 0 absorbs padded rows).
+    """
+    n, G, L = src.shape[:3]
+    npg = L // page_size
+    srcp = src.reshape(n, G * npg, page_size, *src.shape[3:])
+    return pages.at[:, page_ids.reshape(-1)].set(srcp.astype(pages.dtype))
+
+
+def prefill_paged(cfg, params, adapters, acfg, tokens, lengths, cache,
+                  block_tables, *, window=None):
+    """Chunked batched prefill: one forward over a length-bucketed group,
+    K/V written straight into pages.
+
+    tokens: (G, L) prompts right-padded to the bucket length (L a
+    multiple of the page size); lengths: (G,) true prompt lengths;
+    block_tables: (G, P) physical page ids (unused/padding entries 0).
+    Returns (next-token logits (G, V) f32, updated cache). Causal masking
+    makes the padded positions invisible to the real ones, so per-row
+    results are exactly what a batch-1 unpadded prefill produces.
+    """
+    hidden, _, built, _ = forward_hidden(cfg, params, adapters, acfg,
+                                         tokens, window=window, collect=True)
+    G, L = tokens.shape
+    page = cache[0]["k"].shape[2]
+    npg = L // page
+    new_cache = []
+    for e, b in zip(cache, built):
+        ids = block_tables[:, :npg]
+        new_cache.append(
+            {"k": _scatter_pages(e["k"], b["k"], ids, page),
+             "v": _scatter_pages(e["v"], b["v"], ids, page)})
+    last = jnp.take_along_axis(
+        hidden, (lengths - 1)[:, None, None].astype(jnp.int32), axis=1)
+    logits = (last[:, 0] @ head_weight(cfg, params)).astype(jnp.float32)
+    return logits, new_cache
+
+
+def decode_step_paged(cfg, params, adapters, acfg, token, pos, cache,
+                      block_tables, *, window=None, attn_backend="xla"):
+    """One decode step against the paged cache (``init_paged_cache``).
+
+    token: (B, 1) int32; pos: (B,); block_tables: (B, P') — P' may be a
+    prefix of the full table (the serving engine buckets it to the
+    longest active sequence so short batches never attend over max_seq).
+    Returns (logits (B, 1, V) f32, new cache).
+
+    The page pools ride the layer scan as READ-ONLY xs; each layer emits
+    its new K/V row and all rows are committed afterwards with one
+    scatter per pool — with the cache donated into the jitted step this
+    updates pages in place instead of rebuilding the pool every token.
+    """
+    vera_shared = maybe(adapters, "vera_shared") if adapters else None
+    window = window if window is not None else cfg.sliding_window
+    paged = {"block_tables": block_tables, "attn_backend": attn_backend}
+    x = params["embed"][token]
+    page = cache[0]["k"].shape[2]
+    phys = jnp.take_along_axis(block_tables, (pos // page)[:, None],
+                               axis=1)[:, 0]
+    off = pos % page
+    new_caches = []
+    for i, seg in enumerate(segments(cfg)):
+        sp = params["segments"][i]
+        sad = _seg_adapters(adapters, i)
+
+        def body(x, xs):
+            if sad is not None:
+                p, ad, ci = xs
+            else:
+                p, ci = xs
+                ad = None
+            x, rows = block_decode(cfg, p, ad, acfg, x, pos, ci, seg["kind"],
+                                   window=window, vera_shared=vera_shared,
+                                   paged=paged)
+            return x, rows
+
+        xs = (sp, sad, cache[i]) if sad is not None else (sp, cache[i])
+        x, rows = jax.lax.scan(body, x, xs)     # rows: (n, B, Hkv, hd)
+        new_caches.append(
+            {"k": cache[i]["k"].at[:, phys, off].set(rows["k"]),
+             "v": cache[i]["v"].at[:, phys, off].set(rows["v"])})
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = x @ head_weight(cfg, params)
+    return logits.astype(jnp.float32), new_caches
+
+
 def _fill_cache(cfg, empty, built, seq_len):
     """Copy prefill-produced K/V/state tensors into the fixed-size cache."""
     def place(dst, src):

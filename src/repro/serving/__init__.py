@@ -9,13 +9,20 @@ shared x·Ā projection can therefore serve a *mixed* batch of clients:
   ``scheduler``  continuous-batching FIFO scheduler over decode rows
   ``engine``     ServingEngine: prefill/decode loop + throughput metrics
 
-The matching compute primitive is ``repro.kernels.bgmv`` (grouped
-shared-Ā LoRA matmul); the model-integration path is the grouped branch
-of ``repro.models.common.lora_delta``.
+The matching compute primitives are ``repro.kernels.bgmv`` (grouped
+shared-Ā LoRA matmul; engine config ``lora_backend="bgmv"``) and
+``repro.kernels.paged_attention`` (block-table decode attention; engine
+config ``attn_backend="pallas"``); the jnp paths are the grouped branch
+of ``repro.models.common.lora_delta`` and the gather in
+``repro.models.attention.attn_decode_paged``. K/V lives in a paged pool
+(``PagePool`` + scheduler-owned block tables) with the PR-1 dense layout
+kept as ``kv_layout="dense"`` fallback.
 """
 from repro.serving.engine import ServingEngine
 from repro.serving.registry import AdapterRegistry, gather_adapters
-from repro.serving.scheduler import Request, Scheduler, Sequence
+from repro.serving.scheduler import (PagePool, Request, Scheduler, Sequence,
+                                     bucket_len, prefill_batches)
 
-__all__ = ["AdapterRegistry", "gather_adapters", "Request", "Scheduler",
-           "Sequence", "ServingEngine"]
+__all__ = ["AdapterRegistry", "gather_adapters", "PagePool", "Request",
+           "Scheduler", "Sequence", "ServingEngine", "bucket_len",
+           "prefill_batches"]

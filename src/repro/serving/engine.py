@@ -3,19 +3,29 @@
 ``step()`` interleaves prefill and decode the way a continuous-batching
 server does:
 
-  1. admit queued requests into free batch rows (registry pins a slot),
-  2. prefill each new request at batch 1 and scatter its KV row into the
-     shared fixed-shape decode cache,
+  1. admit queued requests (registry pins a slot; under the paged layout
+     the scheduler also reserves KV pages and fills the row's block
+     table),
+  2. prefill the admitted prompts — **chunked and batched**: prompts are
+     packed into length-bucketed groups (padded to power-of-two lengths
+     and group sizes so jit compiles O(log max_seq · log max_batch)
+     variants) and their K/V is written straight into pages. The dense
+     fallback layout keeps the PR-1 behavior: batch-1 prefill scattered
+     into a (B, max_seq) cache,
   3. run ONE grouped decode step for the whole mixed-client batch — the
      per-row B_i is gathered from the registry slot tables inside the
-     jitted step (the grouped branch of ``lora_delta``; the fused TPU
-     form of the same contraction is ``repro.kernels.bgmv``),
-  4. retire finished rows, freeing their row + registry pin.
+     jitted step. The paged decode attends through the block table,
+     truncated to the power-of-two page bucket covering the deepest
+     active row, so a batch of short sequences never pays for max_seq,
+  4. retire finished rows, freeing row + registry pin + pages.
 
-The decode step is jitted once: slot tables, slot ids, tokens, positions
-and cache are all traced arguments with fixed shapes. Per-row positions
-let rows sit at different sequence depths (``decode_step`` already takes
-``pos: (B,)``).
+Backends (``attn_backend``-style config, jnp fallbacks always available):
+
+  ``kv_layout``     "auto" | "paged" | "dense" — KV cache layout
+  ``attn_backend``  "xla" (block-table gather + masked softmax) |
+                    "pallas" (repro.kernels.paged_attention)
+  ``lora_backend``  "jnp" (gather + einsum grouped lora_delta) |
+                    "bgmv" (repro.kernels.bgmv fused grouped matmul)
 """
 from __future__ import annotations
 
@@ -25,9 +35,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.transformer import decode_step, init_cache, prefill, segments
+from repro.models.common import grouped_lora_backend
+from repro.models.transformer import (decode_step, decode_step_paged,
+                                      init_cache, init_paged_cache,
+                                      paged_unsupported_reason, prefill,
+                                      prefill_paged, segments)
 from repro.serving.registry import gather_adapters
-from repro.serving.scheduler import Scheduler
+from repro.serving.scheduler import (PagePool, Scheduler, bucket_len,
+                                     prefill_batches)
 
 
 def _scatter_row(big, small, row):
@@ -41,7 +56,9 @@ def _scatter_row(big, small, row):
 
 class ServingEngine:
     def __init__(self, cfg, params, acfg, registry, *, max_batch=8,
-                 max_seq=64, cache_dtype=jnp.float32):
+                 max_seq=64, cache_dtype=jnp.float32, kv_layout="auto",
+                 page_size=16, n_pages=None, attn_backend="xla",
+                 lora_backend="jnp"):
         if cfg.family == "hybrid":
             raise NotImplementedError(
                 "hybrid cache layout (inner axis before batch) not wired")
@@ -51,50 +68,107 @@ class ServingEngine:
             raise NotImplementedError(
                 "MLA decode merges W+ΔW via effective_weight, which has no "
                 "grouped per-row-B form yet")
+        paged_reason = paged_unsupported_reason(cfg)
+        if kv_layout == "auto":
+            kv_layout = "dense" if paged_reason else "paged"
+        elif kv_layout == "paged" and paged_reason:
+            raise NotImplementedError(paged_reason)
+        assert kv_layout in ("paged", "dense"), kv_layout
+        assert attn_backend in ("xla", "pallas"), attn_backend
+        assert lora_backend in ("jnp", "bgmv"), lora_backend
         self.cfg, self.params, self.acfg = cfg, params, acfg
         self.registry = registry
-        self.scheduler = Scheduler(max_batch)
         self.max_batch, self.max_seq = max_batch, max_seq
-        self.cache = init_cache(cfg, max_batch, max_seq, cache_dtype)
+        self.kv_layout = kv_layout
+        self.attn_backend, self.lora_backend = attn_backend, lora_backend
+
+        if kv_layout == "paged":
+            self.page_size = page_size
+            # table width covers the largest prefill bucket (pow2 >= max_seq)
+            self.table_pages = bucket_len(max_seq, page_size) // page_size
+            if n_pages is None:        # worst case + the write-off page
+                n_pages = max_batch * (-(-max_seq // page_size)) + 1
+            self.pool = PagePool(n_pages, page_size)
+            self.scheduler = Scheduler(max_batch, pool=self.pool,
+                                       table_pages=self.table_pages)
+            self.cache = init_paged_cache(cfg, n_pages, page_size,
+                                          cache_dtype)
+        else:
+            self.pool = None
+            self.scheduler = Scheduler(max_batch)
+            self.cache = init_cache(cfg, max_batch, max_seq, cache_dtype)
         self._toks = np.zeros((max_batch, 1), np.int32)
         self._pos = np.zeros((max_batch,), np.int32)
         self._slots = np.zeros((max_batch,), np.int32)
         self.finished = {}              # rid → dict(client_id, tokens)
-        self.decoded_tokens = 0
-        self.prefill_tokens = 0
-        self.decode_steps = 0
-        self._occ_sum = 0.0
-        self._t0 = None
+        self.prefill_retraces = 0       # jit trace counts (never reset)
+        self.decode_retraces = 0
+        self.reset_stats()
         local = registry.local_tree
+        engine = self
 
         def _adapters(tree):
             # registry templates are either the adapters tree itself or a
             # full trainables tree ({"adapters": ..., "cls_head": ...})
             return tree["adapters"] if "adapters" in tree else tree
 
-        def _prefill_fn(tables, slot, tokens):
+        def _prefill_dense_fn(tables, slot, tokens):
+            engine.prefill_retraces += 1
             ad = _adapters(gather_adapters(tables, local, slot[None]))
             logits, cache1, _ = prefill(cfg, params, ad, acfg, tokens,
                                         max_seq, cache_dtype=cache_dtype)
             return jnp.argmax(logits[:, -1], -1).astype(jnp.int32), cache1
 
-        def _decode_fn(tables, slots, toks, pos, cache):
+        def _prefill_paged_fn(tables, slots, tokens, lengths, bts, cache):
+            engine.prefill_retraces += 1
             ad = _adapters(gather_adapters(tables, local, slots))
-            logits, cache = decode_step(cfg, params, ad, acfg, toks, pos,
-                                        cache)
+            with grouped_lora_backend(engine.lora_backend):
+                logits, cache = prefill_paged(cfg, params, ad, acfg, tokens,
+                                              lengths, cache, bts)
+            return jnp.argmax(logits, -1).astype(jnp.int32), cache
+
+        def _decode_dense_fn(tables, slots, toks, pos, cache):
+            engine.decode_retraces += 1
+            ad = _adapters(gather_adapters(tables, local, slots))
+            with grouped_lora_backend(engine.lora_backend):
+                logits, cache = decode_step(cfg, params, ad, acfg, toks,
+                                            pos, cache)
             return jnp.argmax(logits[:, 0], -1).astype(jnp.int32), cache
 
-        # prefill retraces per distinct prompt length; decode compiles once
-        self._prefill = jax.jit(_prefill_fn)
-        self._decode = jax.jit(_decode_fn)
-        self._scatter = jax.jit(_scatter_row)
+        def _decode_paged_fn(tables, slots, toks, pos, bts, cache):
+            engine.decode_retraces += 1
+            ad = _adapters(gather_adapters(tables, local, slots))
+            with grouped_lora_backend(engine.lora_backend):
+                logits, cache = decode_step_paged(
+                    cfg, params, ad, acfg, toks, pos, cache, bts,
+                    attn_backend=engine.attn_backend)
+            return jnp.argmax(logits[:, 0], -1).astype(jnp.int32), cache
+
+        # paged prefill retraces per (group, bucket) pair; decode per page
+        # bucket — both O(log) families. The dense fallback retraces per
+        # distinct prompt length and compiles decode once.
+        # donate the cache on every path so updates can reuse the buffers
+        # in place instead of copying the whole cache each step (the paged
+        # step is structured so its one post-scan scatter per pool actually
+        # aliases; the dense scan-carried cache benefits where XLA can)
+        if kv_layout == "paged":
+            self._prefill = jax.jit(_prefill_paged_fn, donate_argnums=(5,))
+            self._decode = jax.jit(_decode_paged_fn, donate_argnums=(5,))
+        else:
+            self._prefill = jax.jit(_prefill_dense_fn)
+            self._decode = jax.jit(_decode_dense_fn, donate_argnums=(4,))
+            self._scatter = jax.jit(_scatter_row, donate_argnums=(0,))
 
     def reset_stats(self):
         """Zero throughput counters (e.g. after a warm-up pass); keeps the
         compiled functions, cache buffers, and registry residency."""
         self.finished = {}
         self.decoded_tokens = self.prefill_tokens = self.decode_steps = 0
+        self.prefilled_requests = self.prefill_batch_count = 0
         self._occ_sum = 0.0
+        self._page_util_sum = 0.0
+        self._pool_occ_sum = 0.0
+        self._decode_wall = 0.0
         self._t0 = None
         self.registry.hits = self.registry.misses = 0
         self.registry.evictions = 0
@@ -103,6 +177,10 @@ class ServingEngine:
     def submit(self, client_id, prompt, max_new_tokens=16):
         assert len(prompt) + max_new_tokens <= self.max_seq, \
             "prompt + generation exceeds engine max_seq"
+        if self.pool is not None:
+            assert (self.pool.pages_needed(len(prompt) + max_new_tokens)
+                    <= self.pool.capacity), \
+                "request needs more KV pages than the pool holds"
         return self.scheduler.submit(client_id, prompt, max_new_tokens)
 
     # -- serving loop -------------------------------------------------------
@@ -111,24 +189,27 @@ class ServingEngine:
         for every active row, retire finished sequences."""
         if self._t0 is None:
             self._t0 = time.perf_counter()
-        for seq in self.scheduler.admit(self.registry):
-            row, req = seq.row, seq.request
-            tok0, cache1 = self._prefill(
-                self.registry.tables, jnp.int32(seq.slot),
-                jnp.asarray(req.prompt[None]))
-            self.cache = self._scatter(self.cache, cache1, row)
-            first = int(tok0[0])
-            seq.generated.append(first)
-            self.prefill_tokens += 1
-            self._toks[row, 0] = first
-            self._pos[row] = seq.pos
-            self._slots[row] = seq.slot
+        admitted = self.scheduler.admit(self.registry)
+        if self.kv_layout == "paged":
+            self._prefill_paged_groups(admitted)
+        else:
+            self._prefill_dense_rows(admitted)
+        if admitted:
+            # drain the async prefill→cache chain so its cost is charged
+            # to prefill, not to the decode step that would block on it
+            jax.block_until_ready(self.cache)
         self._retire_done()
         if self.scheduler.active:
-            out, self.cache = self._decode(
-                self.registry.tables, jnp.asarray(self._slots),
-                jnp.asarray(self._toks), jnp.asarray(self._pos), self.cache)
-            out = np.asarray(out)
+            t0 = time.perf_counter()
+            if self.kv_layout == "paged":
+                out = self._decode_paged_step()
+            else:
+                out, self.cache = self._decode(
+                    self.registry.tables, jnp.asarray(self._slots),
+                    jnp.asarray(self._toks), jnp.asarray(self._pos),
+                    self.cache)
+                out = np.asarray(out)
+            self._decode_wall += time.perf_counter() - t0
             for row, seq in list(self.scheduler.active.items()):
                 tok = int(out[row])
                 seq.generated.append(tok)
@@ -138,12 +219,94 @@ class ServingEngine:
                 self.decoded_tokens += 1
             self.decode_steps += 1
             self._occ_sum += self.scheduler.occupancy
+            if self.pool is not None:
+                used = self.pool.used_count
+                held = sum(s.pos + 1 for s in self.scheduler.active.values())
+                self._page_util_sum += (held / (used * self.page_size)
+                                        if used else 0.0)
+                self._pool_occ_sum += used / self.pool.capacity
             self._retire_done()
+
+    # -- prefill paths ------------------------------------------------------
+    def _prefill_dense_rows(self, admitted):
+        """PR-1 fallback: batch-1 prefill per request, row scatter."""
+        for seq in admitted:
+            row, req = seq.row, seq.request
+            tok0, cache1 = self._prefill(
+                self.registry.tables, jnp.int32(seq.slot),
+                jnp.asarray(req.prompt[None]))
+            self.cache = self._scatter(self.cache, cache1, row)
+            self._account_prefill(seq, int(tok0[0]))
+            self.prefill_batch_count += 1
+
+    def _prefill_paged_groups(self, admitted):
+        """Chunked batched prefill: one forward per length bucket, K/V
+        written straight into pages through the block table."""
+        for L, group in prefill_batches(admitted, min_len=self.page_size):
+            Gp = bucket_len(len(group))          # pad batch to pow2 too
+            toks = np.zeros((Gp, L), np.int32)
+            lens = np.ones((Gp,), np.int32)      # padding rows read idx 0
+            slots = np.zeros((Gp,), np.int32)
+            bts = np.zeros((Gp, self.table_pages), np.int32)
+            for g, seq in enumerate(group):
+                p = seq.request.prompt
+                toks[g, :len(p)] = p
+                lens[g] = len(p)
+                slots[g] = seq.slot
+                bts[g] = self.scheduler.block_tables[seq.row]
+            tok0, self.cache = self._prefill(
+                self.registry.tables, jnp.asarray(slots), jnp.asarray(toks),
+                jnp.asarray(lens), jnp.asarray(bts), self.cache)
+            tok0 = np.asarray(tok0)
+            self.prefill_batch_count += 1
+            for g, seq in enumerate(group):
+                self._account_prefill(seq, int(tok0[g]))
+
+    def _account_prefill(self, seq, first_token):
+        seq.generated.append(first_token)
+        self.prefill_tokens += len(seq.request.prompt)
+        self.prefilled_requests += 1
+        self._toks[seq.row, 0] = first_token
+        self._pos[seq.row] = seq.pos
+        self._slots[seq.row] = seq.slot
+
+    # -- decode path --------------------------------------------------------
+    @staticmethod
+    def _page_bucket(n):
+        """Smallest {2^k, 3·2^k} ladder value >= n: half-pow2 steps keep
+        the attended KV length within 1.5× of the deepest active row at
+        ~2·log2 compiled decode variants."""
+        b = 1
+        while True:
+            if n <= b:
+                return b
+            if n <= 3 * b // 2 and b > 1:
+                return 3 * b // 2
+            b *= 2
+
+    def _decode_paged_step(self):
+        """Grouped decode through the block table, truncated to the page
+        bucket covering the deepest active row (so short batches attend
+        over a fraction of max_seq; bounded retraces)."""
+        max_pos = max(s.pos for s in self.scheduler.active.values())
+        # ladder bucket, capped at the pages max_seq actually needs (the
+        # bucket of a non-pow2 max_seq would overshoot the dense layout)
+        npg = min(-(-self.max_seq // self.page_size),
+                  self._page_bucket(self.pool.pages_needed(max_pos + 1)))
+        bts = jnp.asarray(self.scheduler.block_tables[:, :npg])
+        out, self.cache = self._decode(
+            self.registry.tables, jnp.asarray(self._slots),
+            jnp.asarray(self._toks), jnp.asarray(self._pos), bts, self.cache)
+        return np.asarray(out)
 
     def _retire_done(self):
         for row, seq in list(self.scheduler.active.items()):
             if seq.done:
                 self.scheduler.retire(row, self.registry)
+                if self.pool is not None:
+                    # idle rows write to the write-off page at offset 0
+                    self._pos[row] = 0
+                    self._toks[row, 0] = 0
                 req = seq.request
                 self.finished[req.rid] = {
                     "client_id": req.client_id,
@@ -160,13 +323,33 @@ class ServingEngine:
     def report(self):
         dt = (time.perf_counter() - self._t0) if self._t0 else float("nan")
         total = self.decoded_tokens + self.prefill_tokens
+        generated = self.decoded_tokens + self.prefilled_requests
+        steps = self.decode_steps
         return {
             "requests": len(self.finished),
+            # prefill_tokens counts every prompt token processed (NOT one
+            # per request); tokens = prompt + decode tokens processed.
+            "prefill_tokens": self.prefill_tokens,
+            "decode_tokens": self.decoded_tokens,
+            "generated_tokens": generated,
             "tokens": total,
             "tok_per_s": total / dt if dt and dt > 0 else float("nan"),
-            "decode_steps": self.decode_steps,
-            "batch_occupancy": (self._occ_sum / self.decode_steps
-                                if self.decode_steps else 0.0),
+            "gen_tok_per_s": generated / dt if dt and dt > 0 else
+            float("nan"),
+            "decode_tok_per_s": (self.decoded_tokens / self._decode_wall
+                                 if self._decode_wall else float("nan")),
+            "decode_steps": steps,
+            "prefill_batches": self.prefill_batch_count,
+            "prefill_retraces": self.prefill_retraces,
+            "decode_retraces": self.decode_retraces,
+            "batch_occupancy": self._occ_sum / steps if steps else 0.0,
+            "page_utilization": (self._page_util_sum / steps
+                                 if steps and self.pool is not None else
+                                 float("nan")),
+            "pool_occupancy": (self._pool_occ_sum / steps
+                               if steps and self.pool is not None else
+                               float("nan")),
             "adapter_hit_rate": self.registry.stats["hit_rate"],
+            "kv_layout": self.kv_layout,
             "wall_s": dt,
         }

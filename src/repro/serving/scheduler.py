@@ -1,12 +1,20 @@
-"""Continuous-batching request scheduler.
+"""Continuous-batching request scheduler + KV page bookkeeping.
 
 A fixed decode batch of ``max_batch`` rows; a FIFO queue of
 ``(client_id, prompt)`` requests. Admission takes the head of the queue
-whenever (a) a batch row is free and (b) the registry can pin a slot for
-that client (hit, free slot, or unpinned LRU eviction). Finished
-sequences release their row and registry pin, so the next ``admit`` can
-refill the row mid-stream — decode never drains the whole batch to make
-progress on the queue.
+whenever (a) a batch row is free, (b) the registry can pin a slot for
+that client (hit, free slot, or unpinned LRU eviction), and — under the
+paged KV layout — (c) the ``PagePool`` can reserve enough pages for
+``prompt + max_new_tokens``. Finished sequences release their row,
+registry pin, and pages, so the next ``admit`` can refill the row
+mid-stream — decode never drains the whole batch to make progress on
+the queue.
+
+The scheduler owns the **block table**: a ``(max_batch, P)`` int32 array
+mapping each row's logical page index to a physical page of the pool.
+Rows without a sequence (and logical pages past a sequence's
+reservation) point at physical page 0, the pool's *write-off page* —
+writes land there harmlessly and reads are masked by position.
 """
 from __future__ import annotations
 
@@ -14,6 +22,69 @@ import dataclasses
 from collections import deque
 
 import numpy as np
+
+
+def bucket_len(n, lo=1):
+    """Smallest power-of-two >= max(n, lo) — the padding bucket, so jit
+    compiles O(log max_seq) prefill variants instead of one per length."""
+    b = max(int(lo), 1)
+    while b < n:
+        b *= 2
+    return b
+
+
+def prefill_batches(seqs, *, min_len):
+    """Group admitted sequences into length-bucketed prefill batches.
+
+    Returns ``[(L, [Sequence, ...]), ...]`` sorted by bucket length L
+    (a power of two >= min_len, so L is a whole number of pages whenever
+    min_len is the page size).
+    """
+    groups = {}
+    for s in seqs:
+        groups.setdefault(bucket_len(len(s.request.prompt), min_len),
+                          []).append(s)
+    return sorted(groups.items())
+
+
+class PagePool:
+    """Fixed pool of KV-cache pages with a free-list allocator.
+
+    Physical page 0 is reserved as the shared write-off page (absorbs
+    writes from padded prefill rows and idle decode rows); ``capacity``
+    counts the allocatable pages.
+    """
+
+    def __init__(self, n_pages, page_size):
+        assert page_size >= 1 and (page_size & (page_size - 1)) == 0, \
+            "page_size must be a power of two"
+        assert n_pages >= 2, "need at least one page beyond the write-off"
+        self.n_pages, self.page_size = n_pages, page_size
+        self._free = list(range(1, n_pages))[::-1]
+
+    def pages_needed(self, n_tokens):
+        return -(-n_tokens // self.page_size)
+
+    @property
+    def capacity(self):
+        return self.n_pages - 1
+
+    @property
+    def free_count(self):
+        return len(self._free)
+
+    @property
+    def used_count(self):
+        return self.capacity - len(self._free)
+
+    def alloc(self, n):
+        """n physical page ids, or None if the pool can't cover them."""
+        if n > len(self._free):
+            return None
+        return [self._free.pop() for _ in range(n)]
+
+    def release(self, pages):
+        self._free.extend(pages)
 
 
 @dataclasses.dataclass
@@ -32,6 +103,7 @@ class Sequence:
     slot: int
     pos: int                           # next cache write position
     generated: list = dataclasses.field(default_factory=list)
+    pages: list = dataclasses.field(default_factory=list)
 
     @property
     def done(self):
@@ -39,12 +111,15 @@ class Sequence:
 
 
 class Scheduler:
-    def __init__(self, max_batch):
+    def __init__(self, max_batch, *, pool=None, table_pages=0):
         self.max_batch = max_batch
+        self.pool = pool
         self.queue = deque()
         self.active = {}               # row → Sequence
         self._free_rows = list(range(max_batch))[::-1]
         self._next_rid = 0
+        self.block_tables = (np.zeros((max_batch, table_pages), np.int32)
+                             if pool is not None else None)
 
     def submit(self, client_id, prompt, max_new_tokens=16):
         req = Request(client_id, np.asarray(prompt, np.int32),
@@ -54,7 +129,8 @@ class Scheduler:
         return req.rid
 
     def admit(self, registry):
-        """Move queue heads into free rows while registry slots pin.
+        """Move queue heads into free rows while registry slots pin and
+        (paged layout) the page pool can reserve the sequence's pages.
         Returns the newly admitted Sequences (prefill still pending)."""
         admitted = []
         while self.queue and self._free_rows:
@@ -62,17 +138,32 @@ class Scheduler:
             slot = registry.acquire(req.client_id)
             if slot is None:           # every slot pinned by active rows
                 break
+            pages = []
+            if self.pool is not None:
+                needed = self.pool.pages_needed(
+                    len(req.prompt) + req.max_new_tokens)
+                pages = self.pool.alloc(needed)
+                if pages is None:      # pool exhausted: stay queued
+                    registry.release(req.client_id)
+                    break
             self.queue.popleft()
             row = self._free_rows.pop()
-            seq = Sequence(req, row, slot, pos=len(req.prompt))
+            seq = Sequence(req, row, slot, pos=len(req.prompt), pages=pages)
+            if self.pool is not None:
+                self.block_tables[row] = 0
+                self.block_tables[row, :len(pages)] = pages
             self.active[row] = seq
             admitted.append(seq)
         return admitted
 
     def retire(self, row, registry):
-        """Free a finished row + its registry pin; returns the Sequence."""
+        """Free a finished row + its registry pin + its pages."""
         seq = self.active.pop(row)
         registry.release(seq.request.client_id)
+        if self.pool is not None:
+            self.pool.release(seq.pages)
+            seq.pages = []
+            self.block_tables[row] = 0
         self._free_rows.append(row)
         return seq
 

@@ -1,0 +1,106 @@
+"""Paged decode-attention kernel (interpret mode) vs the jnp oracle and
+the dense ``decode_attention`` path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.models.attention import decode_attention, paged_gather
+
+KEY = jax.random.PRNGKey(3)
+
+
+def _operands(B, Hkv, G, hd, page, P, n_pages, seed=0, dtype=jnp.float32):
+    """Random pool + per-row block tables of distinct physical pages
+    (page 0 left as the shared write-off page)."""
+    assert n_pages > B * P, "need distinct pages per row + write-off"
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, Hkv * G, hd), dtype)
+    kp = jax.random.normal(ks[1], (n_pages, page, Hkv, hd), dtype)
+    vp = jax.random.normal(ks[2], (n_pages, page, Hkv, hd), dtype)
+    perm = np.random.default_rng(seed).permutation(n_pages - 1) + 1
+    bt = jnp.asarray(perm[: B * P].reshape(B, P), jnp.int32)
+    return q, kp, vp, bt
+
+
+@pytest.mark.parametrize("shape", [
+    # (B, Hkv, G, hd, page, P)
+    (2, 2, 2, 16, 8, 4),
+    (4, 1, 4, 32, 16, 2),
+    (1, 2, 1, 8, 4, 8),
+])
+def test_paged_attention_matches_ref(shape):
+    B, Hkv, G, hd, page, P = shape
+    q, kp, vp, bt = _operands(B, Hkv, G, hd, page, P, n_pages=B * P + 3)
+    pos = jnp.asarray(
+        np.random.default_rng(1).integers(0, P * page, B), jnp.int32)
+    y = ops.paged_attention(q, kp, vp, bt, pos)
+    y0 = ref.paged_attention_ref(q, kp, vp, bt, pos)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y0),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_paged_attention_sliding_window():
+    q, kp, vp, bt = _operands(3, 2, 2, 16, 8, 4, n_pages=16, seed=2)
+    pos = jnp.array([5, 17, 31], jnp.int32)
+    for window in (4, 9, 64):
+        y = ops.paged_attention(q, kp, vp, bt, pos, window=window)
+        y0 = ref.paged_attention_ref(q, kp, vp, bt, pos, window=window)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y0),
+                                   rtol=1e-5, atol=1e-5, err_msg=str(window))
+
+
+def test_paged_attention_writeoff_page_masked():
+    """Table entries past a row's reservation point at the write-off page
+    (id 0, shared across rows); positions mask them out of the softmax."""
+    q, kp, vp, bt = _operands(2, 2, 2, 16, 8, 4, n_pages=12, seed=4)
+    bt = bt.at[:, 2:].set(0)                    # only 2 real pages per row
+    pos = jnp.array([3, 15], jnp.int32)         # within the real pages
+    y = ops.paged_attention(q, kp, vp, bt, pos)
+    y0 = ref.paged_attention_ref(q, kp, vp, bt, pos)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y0),
+                               rtol=1e-5, atol=1e-5)
+    # write-off contents must not leak: perturbing page 0 changes nothing
+    y2 = ops.paged_attention(q, kp.at[0].add(7.0), vp.at[0].add(-3.0),
+                             bt, pos)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y2))
+
+
+def test_paged_matches_dense_decode_attention():
+    """Paging a dense cache through an identity-ish block table must
+    reproduce ``decode_attention`` exactly (same masked softmax)."""
+    B, Hkv, G, hd, page, P = 3, 2, 2, 16, 8, 3
+    S = page * P
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, 1, Hkv * G, hd), jnp.float32)
+    k_dense = jax.random.normal(ks[1], (B, S, Hkv, hd), jnp.float32)
+    v_dense = jax.random.normal(ks[2], (B, S, Hkv, hd), jnp.float32)
+    pos = jnp.array([2, 11, 23], jnp.int32)
+    want = decode_attention(q, k_dense, v_dense, pos)       # (B, 1, H*hd)
+
+    # scatter the dense rows into a scrambled pool
+    n_pages = 1 + B * P
+    perm = np.random.default_rng(0).permutation(B * P) + 1
+    bt = jnp.asarray(perm.reshape(B, P), jnp.int32)
+    kp = jnp.zeros((n_pages, page, Hkv, hd), jnp.float32)
+    vp = jnp.zeros((n_pages, page, Hkv, hd), jnp.float32)
+    kp = kp.at[bt.reshape(-1)].set(k_dense.reshape(B * P, page, Hkv, hd))
+    vp = vp.at[bt.reshape(-1)].set(v_dense.reshape(B * P, page, Hkv, hd))
+    np.testing.assert_array_equal(np.asarray(paged_gather(kp, bt)),
+                                  np.asarray(k_dense))
+
+    got = ops.paged_attention(q[:, 0], kp, vp, bt, pos)
+    np.testing.assert_allclose(np.asarray(got.reshape(B, 1, -1)),
+                               np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_paged_attention_bf16():
+    q, kp, vp, bt = _operands(2, 2, 2, 16, 8, 2, n_pages=8, seed=5,
+                              dtype=jnp.bfloat16)
+    pos = jnp.array([7, 13], jnp.int32)
+    y = ops.paged_attention(q, kp, vp, bt, pos)
+    y0 = ref.paged_attention_ref(q, kp, vp, bt, pos)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y0, np.float32),
+                               rtol=2e-2, atol=2e-2)

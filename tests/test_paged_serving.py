@@ -1,0 +1,220 @@
+"""Paged KV cache + chunked batched prefill: engine-level parity with the
+dense layout, page-pool fragmentation/reuse, bounded jit retraces, and
+the bgmv / pallas backend wiring."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import AdapterConfig, get_config, reduced
+from repro.core.adapters import init_adapters
+from repro.models.transformer import init_model
+from repro.serving import (AdapterRegistry, PagePool, Scheduler,
+                           ServingEngine, bucket_len, prefill_batches)
+from repro.serving.demo import synthetic_clients
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced(get_config("deepseek-7b"), n_layers=2, d_model=64)
+    acfg = AdapterConfig(mode="fedsa", rank=4)
+    params = init_model(KEY, cfg, jnp.float32)
+    base = init_adapters(KEY, cfg, acfg)
+    trees = [t["adapters"] for t in
+             synthetic_clients({"adapters": base}, 5, seed=50, scale=0.05)]
+    return cfg, acfg, params, base, trees
+
+
+def make_registry(base, trees, n_slots):
+    reg = AdapterRegistry({"adapters": base}, n_slots=n_slots)
+    for i, t in enumerate(trees):
+        reg.ingest(i, {"adapters": t})
+    return reg
+
+
+def make_engine(setup, **kw):
+    cfg, acfg, params, base, trees = setup
+    reg = make_registry(base, trees, kw.pop("n_slots", 2))
+    return ServingEngine(cfg, params, acfg, reg, **kw)
+
+
+def serve(eng, prompts, *, n_clients=3, new_tokens=5):
+    for i, p in enumerate(prompts):
+        eng.submit(i % n_clients, p, max_new_tokens=new_tokens)
+    rep = eng.run()
+    return rep, {r: eng.finished[r]["tokens"].tolist() for r in eng.finished}
+
+
+HETERO = [6, 13, 4, 9, 17, 6, 11, 3]
+
+
+def hetero_prompts(cfg, lens=HETERO, seed=1):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, int(n)) for n in lens]
+
+
+# ---------------------------------------------------------------------------
+# paged vs dense exact parity (the tentpole invariant)
+# ---------------------------------------------------------------------------
+
+def test_paged_vs_dense_token_parity(setup):
+    """Same mixed-client prompts through both layouts (slot eviction
+    churn included) → token-identical output per request."""
+    cfg = setup[0]
+    prompts = hetero_prompts(cfg)
+    _, want = serve(make_engine(setup, max_batch=2, max_seq=32,
+                                kv_layout="dense"), prompts)
+    rep, got = serve(make_engine(setup, max_batch=2, max_seq=32,
+                                 kv_layout="paged", page_size=8), prompts)
+    assert got == want
+    assert rep["requests"] == len(prompts)
+    assert rep["kv_layout"] == "paged"
+    assert 0.0 < rep["page_utilization"] <= 1.0
+    assert 0.0 < rep["pool_occupancy"] <= 1.0
+
+
+def test_paged_pallas_attn_backend_parity(setup):
+    """attn_backend="pallas" routes decode through the Pallas paged
+    kernel (interpret mode on CPU) — tokens must not change."""
+    cfg = setup[0]
+    prompts = hetero_prompts(cfg, lens=[6, 13, 4, 9])
+    _, want = serve(make_engine(setup, max_batch=2, max_seq=32,
+                                kv_layout="paged", page_size=8), prompts)
+    _, got = serve(make_engine(setup, max_batch=2, max_seq=32,
+                               kv_layout="paged", page_size=8,
+                               attn_backend="pallas"), prompts)
+    assert got == want
+
+
+def test_engine_bgmv_lora_backend_parity(setup):
+    """lora_backend="bgmv" fuses the grouped decode matmul into the
+    Pallas bgmv kernel — engine-level token parity with the jnp branch,
+    on both layouts."""
+    cfg = setup[0]
+    prompts = hetero_prompts(cfg, lens=[6, 13, 4, 9])
+    _, want = serve(make_engine(setup, max_batch=2, max_seq=32,
+                                kv_layout="paged", page_size=8), prompts)
+    for layout in ("paged", "dense"):
+        _, got = serve(make_engine(setup, max_batch=2, max_seq=32,
+                                   kv_layout=layout, page_size=8,
+                                   lora_backend="bgmv"), prompts)
+        assert got == want, layout
+
+
+# ---------------------------------------------------------------------------
+# page pool: fragmentation / reuse / exhaustion
+# ---------------------------------------------------------------------------
+
+def test_pagepool_retire_frees_and_reuses_pages(setup):
+    _, _, _, base, trees = setup
+    reg = make_registry(base, trees, n_slots=2)
+    pool = PagePool(n_pages=5, page_size=4)          # capacity 4
+    sched = Scheduler(max_batch=2, pool=pool, table_pages=2)
+    for i in range(3):                               # 2 pages each
+        sched.submit(i % 2, np.zeros(6, np.int32), max_new_tokens=2)
+    first = sched.admit(reg)
+    assert len(first) == 2 and pool.free_count == 0
+    held = {row: set(seq.pages) for row, seq in sched.active.items()}
+    assert held[0].isdisjoint(held[1])
+    assert 0 not in held[0] | held[1]                # write-off reserved
+    assert sched.admit(reg) == []                    # pool exhausted
+    sched.active[0].generated.extend([1, 1])
+    sched.retire(0, reg)
+    assert pool.free_count == 2                      # pages released
+    assert not np.any(sched.block_tables[0])         # row remapped to 0
+    nxt = sched.admit(reg)
+    assert len(nxt) == 1
+    assert set(nxt[0].pages) == held[0]              # physical reuse
+
+
+def test_engine_pool_exhaustion_queues_and_drains(setup):
+    """A pool half the worst case: admission throttles instead of
+    overflowing, and every request still completes."""
+    cfg = setup[0]
+    prompts = hetero_prompts(cfg)
+    eng = make_engine(setup, max_batch=4, max_seq=32, kv_layout="paged",
+                      page_size=8, n_pages=9)        # 2 full seqs max
+    rep, got = serve(eng, prompts)
+    assert rep["requests"] == len(prompts)
+    assert eng.pool.free_count == eng.pool.capacity  # nothing leaked
+    _, want = serve(make_engine(setup, max_batch=4, max_seq=32,
+                                kv_layout="dense"), prompts)
+    assert got == want                               # throttling is exact
+
+
+def test_submit_rejects_pool_overflow(setup):
+    eng = make_engine(setup, max_batch=2, max_seq=32, kv_layout="paged",
+                      page_size=8, n_pages=3)        # capacity 2 pages
+    with pytest.raises(AssertionError):
+        eng.submit(0, np.zeros(20, np.int32), max_new_tokens=5)
+
+
+# ---------------------------------------------------------------------------
+# bucketed prefill: bounded retraces
+# ---------------------------------------------------------------------------
+
+def test_bucketed_prefill_retrace_count(setup):
+    """14 distinct prompt lengths must land in O(log max_seq · log
+    max_batch) compiled prefill variants (dense retraces once per
+    length), and decode in O(log table_pages) variants."""
+    cfg = setup[0]
+    lens = [3, 4, 5, 6, 7, 9, 11, 13, 17, 19, 23, 29, 31, 33]
+    prompts = hetero_prompts(cfg, lens=lens)
+    eng = make_engine(setup, max_batch=4, max_seq=64, kv_layout="paged",
+                      page_size=16, n_slots=3)
+    rep, _ = serve(eng, prompts, new_tokens=3)
+    # length buckets {16, 32, 64} × group-size buckets {1, 2, 4}
+    assert rep["prefill_retraces"] <= 9 < len(set(lens))
+    # page-count buckets {1, 2, 4}
+    assert rep["decode_retraces"] <= 3
+    assert rep["prefill_batches"] < len(lens)        # batching happened
+
+
+def test_bucket_len_and_prefill_batches():
+    assert [bucket_len(n, 16) for n in (1, 16, 17, 33, 64)] == \
+        [16, 16, 32, 64, 64]
+
+    class Seq:                                       # minimal stand-in
+        def __init__(self, n):
+            self.request = type("R", (), {"prompt": np.zeros(n)})()
+
+    groups = prefill_batches([Seq(3), Seq(20), Seq(16), Seq(40)],
+                             min_len=16)
+    assert [(L, len(g)) for L, g in groups] == [(16, 2), (32, 1), (64, 1)]
+
+
+# ---------------------------------------------------------------------------
+# accounting + layout guards
+# ---------------------------------------------------------------------------
+
+def test_report_token_accounting(setup):
+    """prefill_tokens counts prompt tokens (not one per request);
+    generated/decode tokens and the decode-only rate are separated."""
+    cfg = setup[0]
+    lens, new_tokens = [6, 13, 4, 9], 5
+    prompts = hetero_prompts(cfg, lens=lens)
+    for layout in ("paged", "dense"):
+        rep, _ = serve(make_engine(setup, max_batch=2, max_seq=32,
+                                   kv_layout=layout, page_size=8), prompts,
+                       new_tokens=new_tokens)
+        assert rep["prefill_tokens"] == sum(lens), layout
+        assert rep["generated_tokens"] == len(lens) * new_tokens
+        assert rep["decode_tokens"] == len(lens) * (new_tokens - 1)
+        assert rep["tokens"] == sum(lens) + rep["decode_tokens"]
+        assert rep["decode_tok_per_s"] > 0
+
+
+def test_paged_layout_rejects_ssm_and_auto_falls_back(setup):
+    _, _, _, base, trees = setup
+    ssm_cfg = reduced(get_config("falcon-mamba-7b"))
+    assert ssm_cfg.family == "ssm"
+    reg = make_registry(base, trees, n_slots=2)
+    acfg = setup[1]
+    with pytest.raises(NotImplementedError):
+        ServingEngine(ssm_cfg, None, acfg, reg, max_batch=2, max_seq=16,
+                      kv_layout="paged")
+    eng = ServingEngine(ssm_cfg, None, acfg, reg, max_batch=2, max_seq=16)
+    assert eng.kv_layout == "dense"                  # auto fallback

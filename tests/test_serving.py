@@ -180,7 +180,9 @@ def test_engine_mixed_batch_matches_naive_per_client(setup):
         eng.submit(i % n_clients, p, max_new_tokens=new_tokens)
     rep = eng.run()
     assert rep["requests"] == 4
-    assert rep["tokens"] == 4 * new_tokens
+    assert rep["generated_tokens"] == 4 * new_tokens
+    assert rep["prefill_tokens"] == 4 * plen
+    assert rep["tokens"] == 4 * plen + rep["decode_tokens"]
     assert 0.0 < rep["batch_occupancy"] <= 1.0
 
     for rid, p in enumerate(prompts):
