@@ -1,0 +1,88 @@
+"""CI regression gate for the serving benchmark.
+
+Compares a fresh ``serving_throughput.py --out BENCH_fresh.json`` run
+against the committed ``BENCH_serving.json`` baseline. The gate fails
+(exit 1) when the paged engine regresses:
+
+  * hard floor: paged must stay at least ``--floor`` (default 1.0×) as
+    fast as the dense engine — paging that loses to dense is a bug, not
+    noise;
+  * baseline band: the fresh paged-vs-dense speedup must stay within
+    ``--tolerance`` (default 0.5, i.e. 50%) of the committed baseline —
+    wide because the CI smoke run is tiny (2 requests) and shared
+    runners are noisy, tight enough to catch a real collapse.
+
+``--invert`` flips the verdict — used once locally to prove the gate
+actually trips on a synthetic regression (ISSUE 3 acceptance).
+
+  PYTHONPATH=src python benchmarks/bench_gate.py \
+      --fresh BENCH_fresh.json [--baseline BENCH_serving.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+# a baseline-band comparison only means something when both records ran
+# the same workload; otherwise the hard floor is the whole gate
+_WORKLOAD_KEYS = ("arch", "n_layers", "d_model", "rank", "clients",
+                  "batch", "requests", "new_tokens", "max_seq",
+                  "page_size")
+
+
+def evaluate(fresh, baseline, *, floor=1.0, tolerance=0.5):
+    """(ok, lines) verdict for a fresh record vs the committed baseline."""
+    got = fresh["speedup_vs_dense"]
+    ref = baseline["speedup_vs_dense"]
+    lines = [
+        f"paged-vs-dense speedup: fresh {got:.3f}x, baseline {ref:.3f}x",
+        f"hard floor {floor:.2f}x: {'ok' if got >= floor else 'FAIL'}",
+    ]
+    fc, bc = fresh.get("config", {}), baseline.get("config", {})
+    same = all(fc.get(k) == bc.get(k) for k in _WORKLOAD_KEYS)
+    if same:
+        band = ref * (1.0 - tolerance)
+        lines.append(
+            f"baseline band >= {band:.3f}x (tolerance {tolerance:.0%}): "
+            f"{'ok' if got >= band else 'FAIL'}")
+    else:
+        band = None
+        diff = [k for k in _WORKLOAD_KEYS if fc.get(k) != bc.get(k)]
+        lines.append(
+            f"baseline band skipped: workload differs from baseline "
+            f"({', '.join(diff)}) — hard floor only")
+    return got >= floor and (band is None or got >= band), lines
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh", required=True,
+                    help="JSON written by serving_throughput.py --out")
+    ap.add_argument("--baseline",
+                    default=str(REPO / "BENCH_serving.json"))
+    ap.add_argument("--floor", type=float, default=1.0)
+    ap.add_argument("--tolerance", type=float, default=0.5)
+    ap.add_argument("--invert", action="store_true",
+                    help="fail when the gate would pass (local check "
+                         "that the gate trips on a regression)")
+    args = ap.parse_args(argv)
+    fresh = json.loads(pathlib.Path(args.fresh).read_text())
+    baseline = json.loads(pathlib.Path(args.baseline).read_text())
+    ok, lines = evaluate(fresh, baseline, floor=args.floor,
+                         tolerance=args.tolerance)
+    for line in lines:
+        print(line)
+    if args.invert:
+        ok = not ok
+        print(f"inverted verdict: {'pass' if ok else 'FAIL'}")
+    print("bench gate:", "pass" if ok else "FAIL")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -49,7 +49,6 @@ def main():
         with mesh:
             compiled = fn.lower(ad).compile()
         res = analyze(compiled.as_text())
-        n_dev = mesh.devices.size
         out[mode] = res["collective_bytes"]
         print(f"comm_collectives/{args.arch}/{mode},0,"
               f"aggregation_coll_bytes_per_dev={res['collective_bytes']:.0f}"

@@ -18,10 +18,10 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (fig2_similarity, nlg_generation, roofline,
-                            serving_throughput, table1_accuracy,
-                            table2_comm, table3_heterogeneity,
-                            table4_clients, table5_rank,
-                            table10_compression)
+                            serving_refresh, serving_throughput,
+                            table1_accuracy, table2_comm,
+                            table3_heterogeneity, table4_clients,
+                            table5_rank, table10_compression)
 
     q = args.quick
     suites = {
@@ -36,6 +36,8 @@ def main() -> None:
         "roofline": roofline.main,
         "serving": lambda: serving_throughput.main(
             new_tokens=12 if q else 24),
+        "refresh": lambda: serving_refresh.main(
+            requests=6 if q else 12, rounds=1 if q else 2),
     }
     only = set(args.only.split(",")) if args.only else set(suites)
     for name, fn in suites.items():

@@ -1,0 +1,210 @@
+"""Live adapter refresh vs drain-and-rebuild under a weight schedule.
+
+The PR-3 claim: because FedSA-LoRA publishes one aggregated Ā plus a
+rank-r B_i per tenant each round, a running engine can absorb round t+1
+through the double-buffered slot tables (``repro.serving.refresh``)
+instead of draining the batch and rebuilding — which pays engine
+construction plus a fresh jit of every prefill/decode variant per
+round. Both arms serve the SAME requests under the SAME per-segment
+weight schedule:
+
+  live   one engine; a publish lands between segments; flips absorb it
+  drain  a new engine per segment (the pre-refresh upgrade path)
+
+Also records publish→flip latency in engine ticks and the refresh
+stats (flips, staleness). Results go to ``BENCH_refresh.json``.
+
+  PYTHONPATH=src python benchmarks/serving_refresh.py \
+      [--requests 12] [--rounds 2] [--new-tokens 8]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import AdapterConfig, get_config, reduced
+from repro.core.adapters import init_adapters
+from repro.models.transformer import init_model
+from repro.serving import AdapterFeed, AdapterRegistry, ServingEngine
+from repro.serving.demo import synthetic_clients
+
+try:                       # python -m benchmarks.serving_refresh / run.py
+    from benchmarks.common import emit
+except ImportError:        # python benchmarks/serving_refresh.py
+    from common import emit
+
+BENCH_PATH = pathlib.Path(__file__).resolve().parent.parent / \
+    "BENCH_refresh.json"
+
+
+def make_rounds(template, clients, rounds, seed=5):
+    """Per-round client populations (round r: fresh B_i per client —
+    SHARED Ā kept so both arms share one registry template tree)."""
+    return [synthetic_clients(template, clients, seed=seed + r)
+            for r in range(rounds + 1)]
+
+
+def segments_of(prompts, rounds):
+    """Split the request list into rounds+1 contiguous segments."""
+    per = -(-len(prompts) // (rounds + 1))
+    return [prompts[i:i + per] for i in range(0, len(prompts), per)]
+
+
+def run_live(cfg, params, acfg, rounds_trees, segs, new_tokens, batch,
+             max_seq):
+    clients = len(rounds_trees[0])
+    reg = AdapterRegistry(rounds_trees[0][0], n_slots=batch,
+                          versioned=True)
+    for i, t in enumerate(rounds_trees[0]):
+        reg.ingest(i, t)
+    feed = AdapterFeed()
+    engine = ServingEngine(cfg, params, acfg, reg, max_batch=batch,
+                           max_seq=max_seq, feed=feed)
+    # warm-up: compile prefill/decode variants on round-0 weights
+    engine.submit(0, segs[0][0], max_new_tokens=new_tokens)
+    engine.run()
+    engine.reset_stats()
+    flip_lat = []
+    rid = 0
+    t0 = time.perf_counter()
+    for version, seg in enumerate(segs):
+        if version > 0:
+            feed.publish(version, jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *rounds_trees[version]))
+            waited = 0
+            while reg.version < version:     # publish→flip latency
+                engine.step()
+                waited += 1
+            flip_lat.append(waited)
+        for p in seg:
+            engine.submit(rid % clients, p, max_new_tokens=new_tokens)
+            rid += 1
+        while not engine.scheduler.idle:
+            engine.step()
+    wall = time.perf_counter() - t0
+    rep = engine.report()
+    rep["schedule_wall_s"] = wall
+    rep["flip_latency_ticks"] = flip_lat
+    return rep
+
+
+def run_drain(cfg, params, acfg, rounds_trees, segs, new_tokens, batch,
+              max_seq):
+    """The pre-refresh path: a publish means drain, rebuild, recompile.
+
+    The segment-0 engine is built AND warmed before the clock starts —
+    both upgrade paths pay the initial build/compile exactly once, so
+    only the per-round rebuild+recompile (the refresh-vs-rebuild delta)
+    is timed, mirroring the live arm's untimed warm-up."""
+    clients = len(rounds_trees[0])
+
+    def build(version):
+        reg = AdapterRegistry(rounds_trees[version][0], n_slots=batch)
+        for i, t in enumerate(rounds_trees[version]):
+            reg.ingest(i, t)
+        return ServingEngine(cfg, params, acfg, reg, max_batch=batch,
+                             max_seq=max_seq)
+
+    engine = build(0)
+    engine.submit(0, segs[0][0], max_new_tokens=new_tokens)
+    engine.run()
+    engine.reset_stats()
+    tokens = 0
+    rebuild_wall = 0.0
+    rid = 0
+    t0 = time.perf_counter()
+    for version, seg in enumerate(segs):
+        if version > 0:
+            r0 = time.perf_counter()
+            engine = build(version)
+            rebuild_wall += time.perf_counter() - r0
+        for p in seg:
+            engine.submit(rid % clients, p, max_new_tokens=new_tokens)
+            rid += 1
+        engine.run()
+        tokens += engine.decoded_tokens + engine.prefilled_requests
+    wall = time.perf_counter() - t0
+    return {"schedule_wall_s": wall, "generated_tokens": tokens,
+            "rebuild_wall_s": rebuild_wall}
+
+
+def main(clients=6, batch=4, requests=12, rounds=2, new_tokens=8,
+         max_seq=64):
+    cfg = reduced(get_config("deepseek-7b"), n_layers=2, d_model=128)
+    acfg = AdapterConfig(mode="fedsa", rank=8)
+    key = jax.random.PRNGKey(0)
+    params = init_model(key, cfg, jnp.float32)
+    template = {"adapters": init_adapters(key, cfg, acfg)}
+    rounds_trees = make_rounds(template, clients, rounds)
+    rng = np.random.default_rng(0)
+    lens = [int(rng.integers(6, 25)) for _ in range(requests)]
+    prompts = [rng.integers(0, cfg.vocab_size, n) for n in lens]
+    segs = segments_of(prompts, rounds)
+
+    live = run_live(cfg, params, acfg, rounds_trees, segs, new_tokens,
+                    batch, max_seq)
+    drain = run_drain(cfg, params, acfg, rounds_trees, segs, new_tokens,
+                      batch, max_seq)
+    live_tps = live["generated_tokens"] / live["schedule_wall_s"]
+    drain_tps = drain["generated_tokens"] / drain["schedule_wall_s"]
+    speedup = live_tps / drain_tps
+    emit("serving.refresh_live_tok_per_s", 1e6 / live_tps,
+         f"{live_tps:.1f}")
+    emit("serving.refresh_drain_tok_per_s", 1e6 / drain_tps,
+         f"{drain_tps:.1f}")
+    emit("serving.refresh_speedup_vs_drain", 0.0, f"{speedup:.2f}x")
+    emit("serving.refresh_flip_latency_ticks", 0.0,
+         "/".join(str(t) for t in live["flip_latency_ticks"]) or "0")
+    emit("serving.refresh_rebuild_wall_s", drain["rebuild_wall_s"] * 1e6,
+         f"{drain['rebuild_wall_s']:.2f}s")
+
+    record = {
+        "bench": "serving_refresh",
+        "config": {"arch": cfg.name, "n_layers": cfg.n_layers,
+                   "d_model": cfg.d_model, "rank": acfg.rank,
+                   "clients": clients, "batch": batch,
+                   "requests": requests, "rounds": rounds,
+                   "new_tokens": new_tokens, "max_seq": max_seq,
+                   "backend": jax.default_backend()},
+        "live": {"tok_per_s": live_tps,
+                 "wall_s": live["schedule_wall_s"],
+                 "flips": live["flips"],
+                 "deferred_flips": live["deferred_flips"],
+                 "flip_latency_ticks": live["flip_latency_ticks"],
+                 "staleness_mean": live["staleness_mean"],
+                 "staleness_max": live["staleness_max"]},
+        "drain": {"tok_per_s": drain_tps,
+                  "wall_s": drain["schedule_wall_s"],
+                  "rebuild_wall_s": drain["rebuild_wall_s"]},
+        "speedup_vs_drain": speedup,
+    }
+    BENCH_PATH.write_text(json.dumps(record, indent=2) + "\n")
+    print(f"live refresh {live_tps:.1f} gen tok/s vs drain+rebuild "
+          f"{drain_tps:.1f} → {speedup:.2f}x across {rounds} adapter "
+          f"rounds ({live['flips']} flips, rebuild cost "
+          f"{drain['rebuild_wall_s']:.2f}s) [{BENCH_PATH.name}]")
+    return record
+
+
+def _cli():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--clients", type=int, default=6)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--rounds", type=int, default=2)
+    ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--max-seq", type=int, default=64)
+    a = ap.parse_args()
+    main(clients=a.clients, batch=a.batch, requests=a.requests,
+         rounds=a.rounds, new_tokens=a.new_tokens, max_seq=a.max_seq)
+
+
+if __name__ == "__main__":
+    _cli()

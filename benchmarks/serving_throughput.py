@@ -130,7 +130,7 @@ def _engine_row(rep):
 
 
 def main(clients=8, batch=8, requests=16, new_tokens=24, page_size=16,
-         max_seq=256):
+         max_seq=256, out=None):
     """Both engines get the same ``max_seq`` admission capacity — the
     dense layout must allocate (and attend over) all of it for every
     row, while the paged engine's cost follows the traffic actually
@@ -178,6 +178,7 @@ def main(clients=8, batch=8, requests=16, new_tokens=24, page_size=16,
          f"{paged['adapter_hit_rate']:.2f}")
     kerr = bench_kernel(cfg, acfg, batch)
 
+    bench_path = BENCH_PATH if out is None else pathlib.Path(out)
     record = {
         "bench": "serving_throughput",
         "config": {"arch": cfg.name, "n_layers": cfg.n_layers,
@@ -195,12 +196,12 @@ def main(clients=8, batch=8, requests=16, new_tokens=24, page_size=16,
         "speedup_vs_naive": paged["gen_tok_per_s"] / nv_tps,
         "bgmv_kernel_max_err": kerr,
     }
-    BENCH_PATH.write_text(json.dumps(record, indent=2) + "\n")
+    bench_path.write_text(json.dumps(record, indent=2) + "\n")
     print(f"paged {paged['gen_tok_per_s']:.1f} gen tok/s vs dense "
           f"{dense['gen_tok_per_s']:.1f} vs naive {nv_tps:.1f} → "
           f"{speedup:.2f}x over dense ({decode_speedup:.2f}x decode-only) "
           f"at {requests} heterogeneous requests / batch {batch} "
-          f"[{BENCH_PATH.name}]")
+          f"[{bench_path.name}]")
     return record
 
 
@@ -213,10 +214,14 @@ def _cli():
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--max-seq", type=int, default=256,
                     help="admission capacity shared by both engines")
+    ap.add_argument("--out", default=None,
+                    help="write the JSON record here instead of the "
+                         "committed BENCH_serving.json (CI keeps the "
+                         "baseline intact for the regression gate)")
     a = ap.parse_args()
     main(clients=a.clients, batch=a.batch, requests=a.requests,
          new_tokens=a.new_tokens, page_size=a.page_size,
-         max_seq=a.max_seq)
+         max_seq=a.max_seq, out=a.out)
 
 
 if __name__ == "__main__":

@@ -12,7 +12,6 @@ The *in-mesh* (TPU pod) counterpart of the same round lives in
 from __future__ import annotations
 
 import dataclasses
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -114,11 +113,17 @@ def build(key, cfg, acfg, fed, *, task="classification", n_classes=4,
 
 
 def run_rounds(system, clients, *, rounds, batch_size, seed=0,
-               eval_every=0, test_batch=None, target_acc=None):
+               eval_every=0, test_batch=None, target_acc=None,
+               publish=None, publish_every=1):
     """Drive the federated loop. Returns history dict.
 
     clients: list of per-client numpy data dicts.
     test_batch: stacked (C, ...) eval batch for eval_every / target_acc.
+    publish: optional ``(round_version, trainables)`` callback streaming
+    each round's post-aggregation trainables to a serving-side sink
+    (e.g. ``repro.serving.AdapterFeed.publish`` — the live train→serve
+    bridge); invoked every ``publish_every`` rounds with the global
+    round number (1-based) as the version.
     """
     fed = system.fed
     rng = np.random.default_rng(seed)
@@ -140,6 +145,8 @@ def run_rounds(system, clients, *, rounds, batch_size, seed=0,
             part = jnp.ones((fed.n_clients,), jnp.float32)
         tr, ost, losses = system.round_fn(tr, ost, batches, part)
         history["loss"].append(float(jnp.mean(losses)))
+        if publish is not None and (r + 1) % publish_every == 0:
+            publish(r + 1, tr)
         if eval_every and test_batch is not None and (r + 1) % eval_every == 0:
             accs = system.eval_fn(tr, test_batch)
             acc = float(jnp.mean(accs))

@@ -35,7 +35,6 @@ def dirichlet_partition(labels, n_clients, alpha, rng, min_per_client=8):
         for i, part in enumerate(np.split(pool, cuts)):
             client_idx[i].extend(part.tolist())
     out = []
-    spare = []
     for i in range(n_clients):
         arr = rng.permutation(np.array(client_idx[i], dtype=np.int64))
         out.append(arr)

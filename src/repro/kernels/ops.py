@@ -9,7 +9,6 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels.bgmv import bgmv as _bgmv
 from repro.kernels.flash_attention import flash_attention as _flash

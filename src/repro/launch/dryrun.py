@@ -28,7 +28,7 @@ import sys
 import time
 import traceback
 
-import jax
+import jax  # noqa: F401  — locks the device count with XLA_FLAGS set above
 
 from repro.configs import ASSIGNED, SHAPES, AdapterConfig, get_config, get_shape
 from repro.launch.entry import build_entry, lower_entry, skip_reason

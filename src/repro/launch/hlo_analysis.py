@@ -122,7 +122,6 @@ def _operands(op):
     seg = op.line[i + len(op.opcode) + 1:]
     # cut at the matching close paren — approximate: stop at '), '
     depth = 1
-    out = []
     buf = []
     for ch in seg:
         if ch == "(":

@@ -4,6 +4,8 @@ or run a real batched decode on the host mesh.
   python -m repro.launch.serve --arch qwen3-32b --shape decode_32k [--multi-pod]
   python -m repro.launch.serve --arch qwen3-32b --execute
   python -m repro.launch.serve --arch deepseek-7b --multi-tenant [--clients 8]
+  python -m repro.launch.serve --arch deepseek-7b --live-refresh \
+      [--train-rounds 4]
 """
 import os
 
@@ -59,13 +61,29 @@ def run_multi_tenant(args, acfg):
           f"adapter hit rate {rep['adapter_hit_rate']:.2f}{extra}")
 
 
+def run_live_refresh(args, acfg):
+    """Background federation publishing into a foreground engine — the
+    repro.serving.refresh bridge, end to end on the host backend."""
+    from repro.configs import FedConfig, get_config, reduced
+    from repro.serving import train_and_serve
+
+    cfg = reduced(get_config(args.arch), n_layers=2, d_model=64)
+    fed = FedConfig(n_clients=args.clients, local_steps=2)
+    report, history = train_and_serve(
+        cfg, acfg, fed, rounds=args.train_rounds, n_slots=args.slots,
+        requests=args.requests, log=print)
+    print(f"final train loss {history['loss'][-1]:.4f}; engine at "
+          f"adapter version {report['adapter_version']}, "
+          f"{report['decode_tok_per_s']:.1f} decode tok/s")
+
+
 def main():
     import jax
     import jax.numpy as jnp
 
     from repro.configs import AdapterConfig, get_config, get_shape, reduced
     from repro.launch.entry import build_entry, lower_entry, skip_reason
-    from repro.launch.mesh import make_host_mesh, make_production_mesh
+    from repro.launch.mesh import make_production_mesh
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -78,6 +96,11 @@ def main():
     ap.add_argument("--multi-tenant", action="store_true",
                     help="run the repro.serving engine: mixed-client "
                          "batched decode on the host backend")
+    ap.add_argument("--live-refresh", action="store_true",
+                    help="train federated rounds in the background and "
+                         "absorb each round's adapters into a running "
+                         "engine (repro.serving.refresh)")
+    ap.add_argument("--train-rounds", type=int, default=4)
     ap.add_argument("--clients", type=int, default=8)
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
@@ -91,6 +114,8 @@ def main():
     args = ap.parse_args()
 
     acfg = AdapterConfig(mode=args.mode, variant=args.variant)
+    if args.live_refresh:
+        return run_live_refresh(args, acfg)
     if args.multi_tenant:
         return run_multi_tenant(args, acfg)
     if args.execute:

@@ -234,7 +234,6 @@ def attn_forward(cfg, p, ad, acfg, x, positions, *, causal=True,
 def attn_decode(cfg, p, ad, acfg, x, pos, cache_k, cache_v, *,
                 window=None, vera_shared=None):
     """One-step decode. x: (B, 1, d); pos: (B,). Returns (y, new_k, new_v)."""
-    B = x.shape[0]
     H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
     q, k, v = _qkv(cfg, p, ad, acfg, x, x, vera_shared)
     q = apply_rope(q, pos[:, None], cfg.rope_theta)

@@ -78,12 +78,16 @@ def lora_delta(ad, x, scaling, vera_shared=None):
         h = h * ad["d"].astype(jnp.float32)
         h = h @ B.astype(jnp.float32)
         return (h * ad["b"].astype(jnp.float32)).astype(x.dtype)
+    # Grouped multi-tenant serving (repro.serving): a 3-D B is one B_i per
+    # batch row, gathered from the registry slot table; Ā normally stays
+    # batch-global (the FedSA invariant), so x @ A computes once for the
+    # batch. Under the version-indexed gather of a double-buffered registry
+    # (repro.serving.refresh) A is ALSO per-row — (B, d_in, r) — and the
+    # same ``@`` runs as a batched matmul, letting one decode batch mix
+    # rows admitted under different federation rounds.
     h = x.astype(jnp.float32) @ ad["A"].astype(jnp.float32)
     B = ad["B"].astype(jnp.float32)
     if B.ndim == 3 and x.ndim == 3:
-        # Grouped multi-tenant serving (repro.serving): one B_i per batch
-        # row, gathered from the registry slot table; Ā stays batch-global
-        # (the FedSA invariant), so h above is computed once for the batch.
         h = jnp.einsum("bsr,brn->bsn", h, B)
     else:
         h = h @ B
@@ -99,7 +103,11 @@ def adapted(w, ad, x, scaling, vera_shared=None):
     """
     if (_GROUPED_LORA_BACKEND[0] == "bgmv" and ad is not None
             and "B" in ad and getattr(ad["B"], "ndim", 0) == 3
+            and getattr(ad.get("A"), "ndim", 0) == 2
             and x.ndim == 3 and x.shape[1] == 1):
+        # the fused kernel needs the batch-global Ā; a per-row 3-D A
+        # (version-indexed gather, repro.serving.refresh) falls through
+        # to the grouped jnp path below
         # Grouped decode on the fused kernel: y[m] = x·W + s·(x·Ā)·B[m].
         # ad["B"] is already the per-row gather, so the slot table handed
         # to bgmv is the batch itself with identity slot ids.

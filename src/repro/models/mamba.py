@@ -12,7 +12,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.models.common import adapted, dense_init, maybe, rms_norm
+from repro.models.common import adapted, dense_init, maybe
 
 
 def init_mamba(key, cfg, dtype):
@@ -121,7 +121,6 @@ def _ssm_inputs(cfg, p, xc):
 def mamba_forward(cfg, p, ad, acfg, x, *, vera_shared=None):
     """Full-sequence Mamba1. x: (B, S, d) → (y, final_state, conv_tail)."""
     s = cfg.ssm
-    di = cfg.d_inner
     sc = acfg.scaling if acfg is not None else 1.0
     vs = (vera_shared or {})
     xz = adapted(p["in_proj"], maybe(ad, "in_proj"), x, sc, vs.get("in_proj"))
@@ -149,7 +148,6 @@ def mamba_forward(cfg, p, ad, acfg, x, *, vera_shared=None):
 
 def mamba_step(cfg, p, ad, acfg, x, h, conv_buf, *, vera_shared=None):
     """One decode step. x: (B, 1, d); h: (B, di, ds); conv_buf: (B, k-1, di)."""
-    s = cfg.ssm
     sc = acfg.scaling if acfg is not None else 1.0
     vs = (vera_shared or {})
     xz = adapted(p["in_proj"], maybe(ad, "in_proj"), x[:, 0], sc,

@@ -8,6 +8,10 @@ shared x·Ā projection can therefore serve a *mixed* batch of clients:
   ``registry``   AdapterRegistry: LRU slot tables packing the hot B_i set
   ``scheduler``  continuous-batching FIFO scheduler over decode rows
   ``engine``     ServingEngine: prefill/decode loop + throughput metrics
+  ``refresh``    live train→serve bridge: AdapterFeed pub/sub channel +
+                 versioned double-buffered slot tables, so a federation
+                 round's new Ā/B_i is absorbed mid-stream with no batch
+                 drain and token parity for in-flight sequences
 
 The matching compute primitives are ``repro.kernels.bgmv`` (grouped
 shared-Ā LoRA matmul; engine config ``lora_backend="bgmv"``) and
@@ -19,10 +23,14 @@ of ``repro.models.common.lora_delta`` and the gather in
 kept as ``kv_layout="dense"`` fallback.
 """
 from repro.serving.engine import ServingEngine
-from repro.serving.registry import AdapterRegistry, gather_adapters
+from repro.serving.refresh import (AdapterFeed, snapshot_clients,
+                                   train_and_serve)
+from repro.serving.registry import (AdapterRegistry, gather_adapters,
+                                    gather_adapters_versioned)
 from repro.serving.scheduler import (PagePool, Request, Scheduler, Sequence,
                                      bucket_len, prefill_batches)
 
-__all__ = ["AdapterRegistry", "gather_adapters", "PagePool", "Request",
-           "Scheduler", "Sequence", "ServingEngine", "bucket_len",
-           "prefill_batches"]
+__all__ = ["AdapterFeed", "AdapterRegistry", "gather_adapters",
+           "gather_adapters_versioned", "PagePool", "Request", "Scheduler",
+           "Sequence", "ServingEngine", "bucket_len", "prefill_batches",
+           "snapshot_clients", "train_and_serve"]

@@ -17,7 +17,17 @@ server does:
      jitted step. The paged decode attends through the block table,
      truncated to the power-of-two page bucket covering the deepest
      active row, so a batch of short sequences never pays for max_seq,
-  4. retire finished rows, freeing row + registry pin + pages.
+  4. refresh: drain the adapter feed (live train→serve bridge) and
+     attempt the deferred double-buffer flip — between the decode tick
+     and retirement, so a publish never touches weights a still-active
+     row reads,
+  5. retire finished rows, freeing row + registry pin, buffer + pages.
+
+With a ``versioned`` registry the jitted steps also carry per-row buffer
+ids; the gather is version-indexed (``gather_adapters_versioned``) so a
+mixed batch can span two federation rounds — sequences admitted under
+round t decode round-t weights to their last token while later rows
+already read round t+1, with no prompt recompute, drain, or rebuild.
 
 Backends (``attn_backend``-style config, jnp fallbacks always available):
 
@@ -40,7 +50,8 @@ from repro.models.transformer import (decode_step, decode_step_paged,
                                       init_cache, init_paged_cache,
                                       paged_unsupported_reason, prefill,
                                       prefill_paged, segments)
-from repro.serving.registry import gather_adapters
+from repro.serving.registry import (gather_adapters,
+                                    gather_adapters_versioned)
 from repro.serving.scheduler import (PagePool, Scheduler, bucket_len,
                                      prefill_batches)
 
@@ -58,7 +69,7 @@ class ServingEngine:
     def __init__(self, cfg, params, acfg, registry, *, max_batch=8,
                  max_seq=64, cache_dtype=jnp.float32, kv_layout="auto",
                  page_size=16, n_pages=None, attn_backend="xla",
-                 lora_backend="jnp"):
+                 lora_backend="jnp", feed=None):
         if cfg.family == "hybrid":
             raise NotImplementedError(
                 "hybrid cache layout (inner axis before batch) not wired")
@@ -76,8 +87,13 @@ class ServingEngine:
         assert kv_layout in ("paged", "dense"), kv_layout
         assert attn_backend in ("xla", "pallas"), attn_backend
         assert lora_backend in ("jnp", "bgmv"), lora_backend
+        self.versioned = getattr(registry, "versioned", False)
+        if feed is not None and not self.versioned:
+            raise ValueError("an adapter feed needs a double-buffered "
+                             "registry (AdapterRegistry versioned=True)")
         self.cfg, self.params, self.acfg = cfg, params, acfg
         self.registry = registry
+        self.feed = feed
         self.max_batch, self.max_seq = max_batch, max_seq
         self.kv_layout = kv_layout
         self.attn_backend, self.lora_backend = attn_backend, lora_backend
@@ -100,11 +116,13 @@ class ServingEngine:
         self._toks = np.zeros((max_batch, 1), np.int32)
         self._pos = np.zeros((max_batch,), np.int32)
         self._slots = np.zeros((max_batch,), np.int32)
-        self.finished = {}              # rid → dict(client_id, tokens)
+        self._bufs = np.zeros((max_batch,), np.int32)
+        self.finished = {}              # rid → dict(client_id, tokens, ...)
         self.prefill_retraces = 0       # jit trace counts (never reset)
         self.decode_retraces = 0
         self.reset_stats()
         local = registry.local_tree
+        n_slots = registry.n_slots
         engine = self
 
         def _adapters(tree):
@@ -112,32 +130,43 @@ class ServingEngine:
             # full trainables tree ({"adapters": ..., "cls_head": ...})
             return tree["adapters"] if "adapters" in tree else tree
 
-        def _prefill_dense_fn(tables, slot, tokens):
+        if self.versioned:
+            def _gather(tables, slots, bufs):
+                return _adapters(gather_adapters_versioned(
+                    tables, local, slots, bufs, n_slots))
+        else:
+            # bufs rides the signature unused — XLA drops it, and both
+            # registry kinds share one set of step functions
+            def _gather(tables, slots, bufs):
+                return _adapters(gather_adapters(tables, local, slots))
+
+        def _prefill_dense_fn(tables, slot, buf, tokens):
             engine.prefill_retraces += 1
-            ad = _adapters(gather_adapters(tables, local, slot[None]))
+            ad = _gather(tables, slot[None], buf[None])
             logits, cache1, _ = prefill(cfg, params, ad, acfg, tokens,
                                         max_seq, cache_dtype=cache_dtype)
             return jnp.argmax(logits[:, -1], -1).astype(jnp.int32), cache1
 
-        def _prefill_paged_fn(tables, slots, tokens, lengths, bts, cache):
+        def _prefill_paged_fn(tables, slots, bufs, tokens, lengths, bts,
+                              cache):
             engine.prefill_retraces += 1
-            ad = _adapters(gather_adapters(tables, local, slots))
+            ad = _gather(tables, slots, bufs)
             with grouped_lora_backend(engine.lora_backend):
                 logits, cache = prefill_paged(cfg, params, ad, acfg, tokens,
                                               lengths, cache, bts)
             return jnp.argmax(logits, -1).astype(jnp.int32), cache
 
-        def _decode_dense_fn(tables, slots, toks, pos, cache):
+        def _decode_dense_fn(tables, slots, bufs, toks, pos, cache):
             engine.decode_retraces += 1
-            ad = _adapters(gather_adapters(tables, local, slots))
+            ad = _gather(tables, slots, bufs)
             with grouped_lora_backend(engine.lora_backend):
                 logits, cache = decode_step(cfg, params, ad, acfg, toks,
                                             pos, cache)
             return jnp.argmax(logits[:, 0], -1).astype(jnp.int32), cache
 
-        def _decode_paged_fn(tables, slots, toks, pos, bts, cache):
+        def _decode_paged_fn(tables, slots, bufs, toks, pos, bts, cache):
             engine.decode_retraces += 1
-            ad = _adapters(gather_adapters(tables, local, slots))
+            ad = _gather(tables, slots, bufs)
             with grouped_lora_backend(engine.lora_backend):
                 logits, cache = decode_step_paged(
                     cfg, params, ad, acfg, toks, pos, cache, bts,
@@ -152,11 +181,11 @@ class ServingEngine:
         # step is structured so its one post-scan scatter per pool actually
         # aliases; the dense scan-carried cache benefits where XLA can)
         if kv_layout == "paged":
-            self._prefill = jax.jit(_prefill_paged_fn, donate_argnums=(5,))
-            self._decode = jax.jit(_decode_paged_fn, donate_argnums=(5,))
+            self._prefill = jax.jit(_prefill_paged_fn, donate_argnums=(6,))
+            self._decode = jax.jit(_decode_paged_fn, donate_argnums=(6,))
         else:
             self._prefill = jax.jit(_prefill_dense_fn)
-            self._decode = jax.jit(_decode_dense_fn, donate_argnums=(4,))
+            self._decode = jax.jit(_decode_dense_fn, donate_argnums=(5,))
             self._scatter = jax.jit(_scatter_row, donate_argnums=(0,))
 
     def reset_stats(self):
@@ -169,6 +198,10 @@ class ServingEngine:
         self._page_util_sum = 0.0
         self._pool_occ_sum = 0.0
         self._decode_wall = 0.0
+        self._stale_sum = 0
+        self._stale_rows = 0
+        self._stale_max = 0
+        self._tenant_stale = {}         # client_id → max observed staleness
         self._t0 = None
         self.registry.hits = self.registry.misses = 0
         self.registry.evictions = 0
@@ -185,10 +218,15 @@ class ServingEngine:
 
     # -- serving loop -------------------------------------------------------
     def step(self):
-        """One scheduler tick: admit/prefill new requests, decode one token
-        for every active row, retire finished sequences."""
+        """One scheduler tick: refresh adapters, admit/prefill new
+        requests, decode one token for every active row, refresh again
+        (flips unblock between the decode tick and retirement), retire
+        finished sequences."""
         if self._t0 is None:
             self._t0 = time.perf_counter()
+        # publishes that unblocked at the last tick's retirement commit
+        # here, so this tick's admissions already read the new round
+        self._refresh()
         admitted = self.scheduler.admit(self.registry)
         if self.kv_layout == "paged":
             self._prefill_paged_groups(admitted)
@@ -206,8 +244,8 @@ class ServingEngine:
             else:
                 out, self.cache = self._decode(
                     self.registry.tables, jnp.asarray(self._slots),
-                    jnp.asarray(self._toks), jnp.asarray(self._pos),
-                    self.cache)
+                    jnp.asarray(self._bufs), jnp.asarray(self._toks),
+                    jnp.asarray(self._pos), self.cache)
                 out = np.asarray(out)
             self._decode_wall += time.perf_counter() - t0
             for row, seq in list(self.scheduler.active.items()):
@@ -217,6 +255,13 @@ class ServingEngine:
                 self._toks[row, 0] = tok
                 self._pos[row] = seq.pos
                 self.decoded_tokens += 1
+                stale = self.registry.version - seq.version
+                self._stale_sum += stale
+                self._stale_rows += 1
+                self._stale_max = max(self._stale_max, stale)
+                cid = seq.request.client_id
+                self._tenant_stale[cid] = max(
+                    self._tenant_stale.get(cid, 0), stale)
             self.decode_steps += 1
             self._occ_sum += self.scheduler.occupancy
             if self.pool is not None:
@@ -225,7 +270,21 @@ class ServingEngine:
                 self._page_util_sum += (held / (used * self.page_size)
                                         if used else 0.0)
                 self._pool_occ_sum += used / self.pool.capacity
+            self._refresh()
             self._retire_done()
+
+    def _refresh(self):
+        """Refresh phase of the live train→serve bridge: drain the
+        adapter feed into the registry and attempt the (possibly
+        deferred) double-buffer flip. A no-op without a feed and without
+        a staged publish, so plain engines pay nothing."""
+        if self.feed is not None:
+            pub = self.feed.poll()
+            if pub is not None:
+                version, trees = pub
+                self.registry.publish(version, trees)
+        if self.versioned:
+            self.registry.try_flip()
 
     # -- prefill paths ------------------------------------------------------
     def _prefill_dense_rows(self, admitted):
@@ -234,7 +293,7 @@ class ServingEngine:
             row, req = seq.row, seq.request
             tok0, cache1 = self._prefill(
                 self.registry.tables, jnp.int32(seq.slot),
-                jnp.asarray(req.prompt[None]))
+                jnp.int32(seq.buf), jnp.asarray(req.prompt[None]))
             self.cache = self._scatter(self.cache, cache1, row)
             self._account_prefill(seq, int(tok0[0]))
             self.prefill_batch_count += 1
@@ -247,16 +306,19 @@ class ServingEngine:
             toks = np.zeros((Gp, L), np.int32)
             lens = np.ones((Gp,), np.int32)      # padding rows read idx 0
             slots = np.zeros((Gp,), np.int32)
+            bufs = np.zeros((Gp,), np.int32)
             bts = np.zeros((Gp, self.table_pages), np.int32)
             for g, seq in enumerate(group):
                 p = seq.request.prompt
                 toks[g, :len(p)] = p
                 lens[g] = len(p)
                 slots[g] = seq.slot
+                bufs[g] = seq.buf
                 bts[g] = self.scheduler.block_tables[seq.row]
             tok0, self.cache = self._prefill(
-                self.registry.tables, jnp.asarray(slots), jnp.asarray(toks),
-                jnp.asarray(lens), jnp.asarray(bts), self.cache)
+                self.registry.tables, jnp.asarray(slots), jnp.asarray(bufs),
+                jnp.asarray(toks), jnp.asarray(lens), jnp.asarray(bts),
+                self.cache)
             tok0 = np.asarray(tok0)
             self.prefill_batch_count += 1
             for g, seq in enumerate(group):
@@ -269,6 +331,7 @@ class ServingEngine:
         self._toks[seq.row, 0] = first_token
         self._pos[seq.row] = seq.pos
         self._slots[seq.row] = seq.slot
+        self._bufs[seq.row] = seq.buf
 
     # -- decode path --------------------------------------------------------
     @staticmethod
@@ -296,7 +359,8 @@ class ServingEngine:
         bts = jnp.asarray(self.scheduler.block_tables[:, :npg])
         out, self.cache = self._decode(
             self.registry.tables, jnp.asarray(self._slots),
-            jnp.asarray(self._toks), jnp.asarray(self._pos), bts, self.cache)
+            jnp.asarray(self._bufs), jnp.asarray(self._toks),
+            jnp.asarray(self._pos), bts, self.cache)
         return np.asarray(out)
 
     def _retire_done(self):
@@ -310,7 +374,8 @@ class ServingEngine:
                 req = seq.request
                 self.finished[req.rid] = {
                     "client_id": req.client_id,
-                    "tokens": np.asarray(seq.generated, np.int32)}
+                    "tokens": np.asarray(seq.generated, np.int32),
+                    "version": seq.version}
 
     def run(self, max_steps=10_000):
         """Drive ``step()`` until queue and batch drain; returns report."""
@@ -351,5 +416,16 @@ class ServingEngine:
                                float("nan")),
             "adapter_hit_rate": self.registry.stats["hit_rate"],
             "kv_layout": self.kv_layout,
+            # live refresh (versioned registry; zeros on plain engines)
+            "adapter_version": getattr(self.registry, "version", 0),
+            "flips": getattr(self.registry, "flips", 0),
+            "deferred_flips": getattr(self.registry, "deferred_flips", 0),
+            "publishes": getattr(self.registry, "publishes", 0),
+            # staleness: rounds behind the committed version, summed over
+            # active rows at every decode tick (per-tenant max alongside)
+            "staleness_mean": (self._stale_sum / self._stale_rows
+                               if self._stale_rows else 0.0),
+            "staleness_max": self._stale_max,
+            "tenant_staleness": dict(self._tenant_stale),
             "wall_s": dt,
         }

@@ -1,0 +1,163 @@
+"""Live train→serve bridge: async adapter refresh without a drain.
+
+FedSA-LoRA's split (one aggregated Ā, a personal B_i per tenant) means a
+federation round only ever publishes a rank-r delta per tenant — small
+enough to absorb into a *running* engine. This module is the versioned
+publish/subscribe channel between ``repro.core.federation.run_rounds``
+and ``ServingEngine``:
+
+  trainer thread                          serving thread
+  --------------                          --------------
+  run_rounds(..., publish=feed.publish)   engine.step()
+    → AdapterFeed.publish(round, tr)        → refresh phase polls feed
+      (host snapshot per client,              → registry.publish(...)
+       coalesced: latest round wins)          → registry.try_flip()
+                                                (deferred while the
+                                                 inactive buffer still
+                                                 has in-flight rows)
+
+Sequences admitted under round t keep decoding round-t weights to the
+last token (token parity — no prompt is ever recomputed); sequences
+admitted after the flip read round t+1 from the other buffer of the
+double-buffered slot tables. ``train_and_serve`` wires the whole loop
+end to end (used by ``examples/train_and_serve.py`` and
+``python -m repro.launch.serve --live-refresh``).
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+import jax
+import numpy as np
+
+
+def snapshot_clients(trainables, clients=None):
+    """Host-side per-client snapshot of a client-axis trainables tree:
+    one ``device_get`` for the whole tree, then numpy views per client."""
+    host = jax.device_get(trainables)
+    n = jax.tree_util.tree_leaves(host)[0].shape[0]
+    ids = range(n) if clients is None else clients
+    return {int(c): jax.tree_util.tree_map(lambda x: x[c], host)
+            for c in ids}
+
+
+class AdapterFeed:
+    """Thread-safe single-slot pub/sub channel of round publications.
+
+    The producer (training loop) publishes ``(version, trainables)``;
+    the consumer (the engine's refresh phase) polls. Unconsumed
+    publications coalesce — the serving side only ever wants the newest
+    round, and per-client trees from a skipped round are superseded by
+    the next one (newer round wins per client).
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._slot = None               # (version, {cid: host tree})
+        self.published = 0
+        self.coalesced = 0
+
+    def publish(self, version, trainables, clients=None):
+        """Producer side — matches ``run_rounds``'s ``publish=`` callback
+        signature ``(round_version, trainables)``."""
+        trees = snapshot_clients(trainables, clients)
+        with self._lock:
+            if self._slot is not None:
+                self.coalesced += 1
+                _, old = self._slot
+                old.update(trees)
+                trees = old
+            self._slot = (version, trees)
+            self.published += 1
+
+    def poll(self):
+        """Consumer side: latest unconsumed ``(version, trees)`` or None."""
+        with self._lock:
+            slot, self._slot = self._slot, None
+        return slot
+
+    @property
+    def pending(self):
+        with self._lock:
+            return self._slot is not None
+
+
+def train_and_serve(cfg, acfg, fed, *, rounds=6, n_slots=4, requests=16,
+                    max_new_tokens=8, batch_size=8, publish_every=1,
+                    submit_every=2, seed=0, engine_kw=None, log=None,
+                    max_steps=200_000):
+    """Run federated training in a background thread while the foreground
+    serving engine absorbs each round's adapters live.
+
+    Builds the FedSystem (LM task on synthetic Markov-chain clients), a
+    ``versioned`` registry seeded from round 0, and a paged engine
+    subscribed to an ``AdapterFeed``; trickles ``requests`` heterogeneous
+    prompts while ``rounds`` rounds train and publish. Returns
+    ``(report, history)`` — the engine report carries version/staleness
+    stats, the history is ``run_rounds``'s.
+    """
+    from repro.core import federation
+    from repro.data.synthetic import make_lm_task
+    from repro.serving.engine import ServingEngine
+    from repro.serving.registry import AdapterRegistry
+
+    log = log or (lambda *_: None)
+    clients_data, _ = make_lm_task(n_clients=fed.n_clients,
+                                   vocab=cfg.vocab_size, seq=32,
+                                   n_train=64 * fed.n_clients, n_test=32,
+                                   seed=seed)
+    system = federation.build(jax.random.PRNGKey(seed), cfg, acfg, fed,
+                              task="lm", lr=5e-2)
+    registry = AdapterRegistry.from_system(system, n_slots, versioned=True)
+    feed = AdapterFeed()
+    kw = {"max_batch": 4, "max_seq": 32}
+    kw.update(engine_kw or {})
+    engine = ServingEngine(cfg, system.params, acfg, registry, feed=feed,
+                           **kw)
+
+    history = {}
+
+    def trainer():
+        history.update(federation.run_rounds(
+            system, clients_data, rounds=rounds, batch_size=batch_size,
+            seed=seed, publish=feed.publish, publish_every=publish_every))
+
+    thread = threading.Thread(target=trainer, daemon=True)
+    rng = np.random.default_rng(seed)
+    submitted = steps = 0
+    thread.start()
+    while (thread.is_alive() or submitted < requests
+           or not engine.scheduler.idle or feed.pending
+           or registry.stats.get("pending_version") is not None):
+        # pace the stream across rounds: each published version unlocks
+        # its share of the request budget, so served traffic spans
+        # adapter versions instead of racing ahead of the first round
+        budget = requests if not thread.is_alive() else min(
+            requests, max(1, (requests * (registry.version + 1))
+                          // (rounds + 1)))
+        if submitted < budget and steps % submit_every == 0:
+            plen = int(rng.integers(4, kw["max_seq"] - max_new_tokens))
+            engine.submit(submitted % fed.n_clients,
+                          rng.integers(0, cfg.vocab_size, plen),
+                          max_new_tokens=max_new_tokens)
+            submitted += 1
+        engine.step()
+        steps += 1
+        if engine.scheduler.idle and submitted >= budget:
+            # nothing to decode and nothing unlocked: yield to the
+            # trainer thread until the next publish arrives
+            time.sleep(0.005)
+        if steps >= max_steps:
+            raise RuntimeError("train_and_serve failed to drain")
+    thread.join()
+    report = engine.report()
+    served_versions = sorted({rec["version"]
+                              for rec in engine.finished.values()})
+    log(f"served {report['requests']} requests across adapter versions "
+        f"{served_versions} while training {rounds} rounds: "
+        f"{report['flips']} flips ({report['deferred_flips']} deferred "
+        f"ticks), staleness mean {report['staleness_mean']:.2f} / max "
+        f"{report['staleness_max']}, {report['decode_tokens']} decode "
+        f"tokens with no drain or rebuild")
+    return report, history

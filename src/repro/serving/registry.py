@@ -11,8 +11,18 @@ a slot axis so a whole mixed batch is served by one gather:
 SHARED/FROZEN leaves (the aggregated Ā) are stored once, verbatim — the
 FedSA invariant that makes the grouped kernel cheap. Admission is LRU
 with pinning: slots referenced by in-flight sequences are never evicted;
-``acquire`` returns ``None`` when every slot is pinned (the scheduler
-then leaves the request queued).
+``acquire`` raises ``RuntimeError`` when every slot is pinned (the
+scheduler then leaves the request queued).
+
+Versioned mode (``versioned=True``) double-buffers every table for the
+live train→serve bridge (``repro.serving.refresh``): LOCAL tables double
+their slot axis (buffer b of slot s lives at index ``b*n_slots + s``)
+and SHARED leaves gain a 2-wide version axis at the same pack position,
+so one version-indexed gather serves a mixed batch whose rows span two
+federation rounds. ``publish`` stages a round's post-aggregation weights
+host-side; ``try_flip`` commits them into the *inactive* buffer — and is
+deferred while any in-flight sequence still reads that buffer, so tokens
+of already-admitted sequences never change mid-generation.
 """
 from __future__ import annotations
 
@@ -44,10 +54,26 @@ def gather_adapters(tables, local, slot_ids):
         tables, local)
 
 
+def gather_adapters_versioned(tables, local, slot_ids, buf_ids, n_slots):
+    """Version-indexed per-row gather for double-buffered registries.
+
+    LOCAL tables index the doubled slot axis at ``buf*n_slots + slot``;
+    SHARED leaves index their 2-wide version axis per row, so the
+    aggregated Ā ALSO gains a per-row axis — ``lora_delta`` handles the
+    resulting (B, d_in, r) A as a batched matmul, letting one decode
+    batch mix rows admitted under different federation rounds.
+    """
+    eff = buf_ids * n_slots + slot_ids
+    return jax.tree_util.tree_map(
+        lambda leaf, loc: jnp.take(leaf, eff if loc else buf_ids,
+                                   axis=_pack_axis(leaf.ndim - 1)),
+        tables, local)
+
+
 class AdapterRegistry:
     """LRU admission of per-client local adapters into dense slot tables."""
 
-    def __init__(self, template, n_slots, *, mode="fedsa"):
+    def __init__(self, template, n_slots, *, mode="fedsa", versioned=False):
         """template: ONE client's trainables tree (e.g.
         ``{"adapters": ...}`` without the client axis); its SHARED leaves
         seed the batch-global Ā."""
@@ -57,10 +83,13 @@ class AdapterRegistry:
                 f"global Ā, per-client B); mode={mode!r} has per-client A")
         self.mode = mode
         self.n_slots = n_slots
+        self.versioned = versioned
+        self.n_buffers = 2 if versioned else 1
         flat, self._treedef = jax.tree_util.tree_flatten_with_path(template)
         self._local = [leaf_role(path, mode) == LOCAL for path, _ in flat]
         self._leaves = []
         for (path, leaf), loc in zip(flat, self._local):
+            ax = _pack_axis(leaf.ndim)
             if loc:
                 name = (str(path[-1].key) if hasattr(path[-1], "key")
                         else "")
@@ -69,34 +98,64 @@ class AdapterRegistry:
                         "grouped serving packs LoRA B matrices only; "
                         f"LOCAL leaf {name!r} (e.g. VeRA's b vector) has "
                         "no per-row gather path in lora_delta")
-                shape = (leaf.shape[:_pack_axis(leaf.ndim)] + (n_slots,)
-                         + leaf.shape[_pack_axis(leaf.ndim):])
+                shape = (leaf.shape[:ax]
+                         + (self.n_buffers * n_slots,) + leaf.shape[ax:])
                 self._leaves.append(jnp.zeros(shape, leaf.dtype))
+            elif versioned:
+                leaf = jnp.asarray(leaf)
+                self._leaves.append(jnp.stack([leaf, leaf], axis=ax))
             else:
                 self._leaves.append(jnp.asarray(leaf))
         self._store = {}                    # client_id → [local leaves] (np)
+        self._client_ver = {}               # client_id → committed version
+        self._seq = 0                       # monotone cold-store write stamp
+        self._store_seq = {}                # client_id → stamp at last write
         self._lru = OrderedDict()           # client_id → slot (LRU order)
         self._free = list(range(n_slots))[::-1]
         self._pins = [0] * n_slots
+        # per-(buffer, slot) record of what was last written there
+        self._slot_tag = [[None] * n_slots for _ in range(self.n_buffers)]
+        # in-flight sequence counts per buffer (scheduler retain/release)
+        self._buf_rows = [0] * self.n_buffers
+        self.active_buf = 0                 # buffer new admissions read
+        self.version = 0                    # round of the active buffer
+        self._pending = None                # staged publish awaiting flip
         self.hits = self.misses = self.evictions = 0
+        self.flips = self.deferred_flips = self.publishes = 0
 
     # -- cold store ---------------------------------------------------------
     def ingest(self, client_id, client_tree):
         """Register a client's trained trainables tree (host-side copy of
-        its LOCAL leaves only — the per-tenant cold store)."""
+        its LOCAL leaves only — the per-tenant cold store). For updates
+        while sequences are in flight use ``publish`` instead: a pinned
+        resident slot keeps serving its admitted weights until it is
+        unpinned (the next unpinned ``acquire`` refreshes it)."""
+        self._store[client_id] = self._local_leaves(client_tree)
+        self._client_ver[client_id] = self.version
+        self._seq += 1
+        self._store_seq[client_id] = self._seq
+
+    def _local_leaves(self, client_tree):
         flat = jax.tree_util.tree_leaves(client_tree)
         assert len(flat) == len(self._local), "tree structure mismatch"
-        self._store[client_id] = [
-            np.asarray(leaf) for leaf, loc in zip(flat, self._local) if loc]
+        return [np.asarray(leaf)
+                for leaf, loc in zip(flat, self._local) if loc]
+
+    def _shared_leaves(self, client_tree):
+        flat = jax.tree_util.tree_leaves(client_tree)
+        assert len(flat) == len(self._local), "tree structure mismatch"
+        return [np.asarray(leaf)
+                for leaf, loc in zip(flat, self._local) if not loc]
 
     @classmethod
-    def from_system(cls, system, n_slots, *, clients=None):
+    def from_system(cls, system, n_slots, *, clients=None, versioned=False):
         """Build from a trained ``FedSystem``: splits the client axis off
         ``system.trainables`` and ingests every (or the given) client."""
         tr = system.trainables
         n_clients = system.fed.n_clients
         template = jax.tree_util.tree_map(lambda x: x[0], tr)
-        reg = cls(template, n_slots, mode=system.acfg.mode)
+        reg = cls(template, n_slots, mode=system.acfg.mode,
+                  versioned=versioned)
         for c in (range(n_clients) if clients is None else clients):
             reg.ingest(c, jax.tree_util.tree_map(lambda x: x[c], tr))
         return reg
@@ -104,13 +163,24 @@ class AdapterRegistry:
     # -- admission ----------------------------------------------------------
     def acquire(self, client_id, *, pin=True):
         """Slot for ``client_id``, admitting (and LRU-evicting) on miss.
-        Returns None when no unpinned slot is available."""
+
+        Raises ``RuntimeError`` when admission would need to evict a
+        pinned slot (every slot referenced by an in-flight sequence); a
+        failed acquire leaves the LRU order and counters untouched, so
+        the scheduler can retry the same request next tick.
+        """
         if client_id in self._lru:
+            slot = self._lru[client_id]
+            if (self._pins[slot] == 0
+                    and self._slot_tag[self.active_buf][slot]
+                    != self._tag_of(client_id)):
+                # resident but stale (a re-ingest or publish landed since
+                # the slot was written): refresh the active half — safe
+                # because an unpinned slot has no in-flight reader
+                self._write_slot(slot, client_id, self.active_buf)
             self.hits += 1
             self._lru.move_to_end(client_id)
-            slot = self._lru[client_id]
         else:
-            self.misses += 1
             if client_id not in self._store:
                 raise KeyError(f"client {client_id} was never ingested")
             if self._free:
@@ -119,29 +189,129 @@ class AdapterRegistry:
                 victim = next((c for c, s in self._lru.items()
                                if self._pins[s] == 0), None)
                 if victim is None:
-                    return None
+                    raise RuntimeError(
+                        f"all {self.n_slots} adapter slots are pinned by "
+                        "in-flight sequences; cannot admit client "
+                        f"{client_id} until one retires")
                 slot = self._lru.pop(victim)
                 self.evictions += 1
-            self._write_slot(slot, client_id)
+            self.misses += 1
+            self._write_slot(slot, client_id, self.active_buf)
             self._lru[client_id] = slot
         if pin:
             self._pins[slot] += 1
         return slot
 
     def release(self, client_id):
-        slot = self._lru[client_id]
-        assert self._pins[slot] > 0
+        """Unpin one reference to ``client_id``'s slot. Unknown or
+        never-pinned clients are a no-op (retire paths may race a
+        registry that already evicted an unpinned tenant)."""
+        slot = self._lru.get(client_id)
+        if slot is None or self._pins[slot] == 0:
+            return
         self._pins[slot] -= 1
 
-    def _write_slot(self, slot, client_id):
+    def _tag_of(self, client_id):
+        """Identity of a client's CURRENT cold-store content: the write
+        stamp disambiguates re-ingests within one version (a version-only
+        tag would treat them as already-served)."""
+        return (client_id, self._store_seq.get(client_id, 0))
+
+    def _write_slot(self, slot, client_id, buf=0):
         stored = iter(self._store[client_id])
         for i, loc in enumerate(self._local):
             if loc:
                 table = self._leaves[i]
                 idx = ((slice(None),) * _pack_axis(table.ndim - 1)
-                       + (slot,))
+                       + (buf * self.n_slots + slot,))
                 self._leaves[i] = table.at[idx].set(
                     jnp.asarray(next(stored), table.dtype))
+        self._slot_tag[buf][slot] = self._tag_of(client_id)
+
+    # -- versioned refresh (repro.serving.refresh) --------------------------
+    def retain_buffer(self):
+        """Record one in-flight sequence on the active buffer (called by
+        the scheduler at admission); returns the buffer id to stamp on
+        the sequence."""
+        self._buf_rows[self.active_buf] += 1
+        return self.active_buf
+
+    def release_buffer(self, buf):
+        """Drop one in-flight reference (called at retirement) — the
+        inactive buffer becomes flippable once its count reaches zero."""
+        if self._buf_rows[buf] > 0:
+            self._buf_rows[buf] -= 1
+
+    def publish(self, version, client_trees, *, shared_from=None):
+        """Stage a federation round's post-aggregation weights.
+
+        client_trees: ``{client_id: trainables tree}`` (host or device);
+        the SHARED leaves (aggregated Ā — identical across clients under
+        FedSA) are taken from ``shared_from`` or any client tree. The
+        stage is host-side; device writes happen at ``try_flip``, which
+        this attempts immediately. Returns True when the flip committed,
+        False when it was deferred behind in-flight sequences (the
+        engine's refresh phase retries each tick). Stale versions
+        (≤ the committed or already-staged version) are ignored.
+        """
+        if not self.versioned:
+            raise RuntimeError(
+                "publish requires a double-buffered registry "
+                "(AdapterRegistry(..., versioned=True))")
+        if version <= self.version:
+            return False
+        if self._pending is not None and version <= self._pending["version"]:
+            return False
+        src = shared_from
+        if src is None:
+            if not client_trees:
+                raise ValueError("publish needs client trees (or "
+                                 "shared_from) to stage")
+            src = next(iter(client_trees.values()))
+        staged = {cid: self._local_leaves(t)
+                  for cid, t in client_trees.items()}
+        if self._pending is not None:       # coalesce: newer round wins
+            merged = self._pending["clients"]
+            merged.update(staged)
+            staged = merged
+        self._pending = {"version": version, "clients": staged,
+                         "shared": self._shared_leaves(src)}
+        self.publishes += 1
+        return self.try_flip()
+
+    def try_flip(self):
+        """Commit the staged publish into the inactive buffer and make it
+        active for new admissions. Deferred (returns False) while any
+        in-flight sequence still reads that buffer — their tokens must
+        not change mid-generation."""
+        if not self.versioned or self._pending is None:
+            return False
+        target = 1 - self.active_buf
+        if self._buf_rows[target] > 0:
+            self.deferred_flips += 1
+            return False
+        pend = self._pending
+        shared = iter(pend["shared"])
+        for i, loc in enumerate(self._local):
+            if not loc:
+                leaf = self._leaves[i]
+                ax = _pack_axis(leaf.ndim - 1)
+                idx = (slice(None),) * ax + (target,)
+                self._leaves[i] = leaf.at[idx].set(
+                    jnp.asarray(next(shared), leaf.dtype))
+        for cid, leaves in pend["clients"].items():
+            self._store[cid] = leaves
+            self._client_ver[cid] = pend["version"]
+            self._seq += 1
+            self._store_seq[cid] = self._seq
+        for cid, slot in self._lru.items():
+            if self._slot_tag[target][slot] != self._tag_of(cid):
+                self._write_slot(slot, cid, target)
+        self.active_buf = target
+        self.version = pend["version"]
+        self.flips += 1
+        self._pending = None
+        return True
 
     # -- views --------------------------------------------------------------
     @property
@@ -154,16 +324,33 @@ class AdapterRegistry:
     def local_tree(self):
         return jax.tree_util.tree_unflatten(self._treedef, self._local)
 
-    def gather(self, slot_ids):
-        """Per-row adapter tree for a batch of slot ids (eager helper)."""
-        return gather_adapters(self.tables, self.local_tree,
-                               jnp.asarray(slot_ids, jnp.int32))
+    def gather(self, slot_ids, buf_ids=None):
+        """Per-row adapter tree for a batch of slot ids (eager helper).
+        Versioned registries default every row to the active buffer."""
+        slot_ids = jnp.asarray(slot_ids, jnp.int32)
+        if not self.versioned:
+            return gather_adapters(self.tables, self.local_tree, slot_ids)
+        if buf_ids is None:
+            buf_ids = jnp.full(slot_ids.shape, self.active_buf, jnp.int32)
+        return gather_adapters_versioned(
+            self.tables, self.local_tree, slot_ids,
+            jnp.asarray(buf_ids, jnp.int32), self.n_slots)
 
     @property
     def stats(self):
         total = self.hits + self.misses
-        return {"hits": self.hits, "misses": self.misses,
-                "evictions": self.evictions,
-                "hit_rate": self.hits / total if total else 0.0,
-                "resident": len(self._lru), "n_slots": self.n_slots,
-                "clients": len(self._store)}
+        out = {"hits": self.hits, "misses": self.misses,
+               "evictions": self.evictions,
+               "hit_rate": self.hits / total if total else 0.0,
+               "resident": len(self._lru), "n_slots": self.n_slots,
+               "clients": len(self._store), "version": self.version,
+               "flips": self.flips, "deferred_flips": self.deferred_flips,
+               "publishes": self.publishes}
+        if self.versioned:
+            out["pending_version"] = (self._pending["version"]
+                                      if self._pending else None)
+            out["blocking_rows"] = self._buf_rows[1 - self.active_buf]
+            # per-tenant staleness of the COLD store vs the committed
+            # round (in-flight row staleness is tracked by the engine)
+            out["tenant_versions"] = dict(self._client_ver)
+        return out

@@ -104,6 +104,8 @@ class Sequence:
     pos: int                           # next cache write position
     generated: list = dataclasses.field(default_factory=list)
     pages: list = dataclasses.field(default_factory=list)
+    buf: int = 0                       # registry buffer at admission
+    version: int = 0                   # adapter round at admission
 
     @property
     def done(self):
@@ -135,8 +137,9 @@ class Scheduler:
         admitted = []
         while self.queue and self._free_rows:
             req = self.queue[0]
-            slot = registry.acquire(req.client_id)
-            if slot is None:           # every slot pinned by active rows
+            try:
+                slot = registry.acquire(req.client_id)
+            except RuntimeError:       # every slot pinned by active rows
                 break
             pages = []
             if self.pool is not None:
@@ -148,7 +151,9 @@ class Scheduler:
                     break
             self.queue.popleft()
             row = self._free_rows.pop()
-            seq = Sequence(req, row, slot, pos=len(req.prompt), pages=pages)
+            seq = Sequence(req, row, slot, pos=len(req.prompt), pages=pages,
+                           buf=registry.retain_buffer(),
+                           version=registry.version)
             if self.pool is not None:
                 self.block_tables[row] = 0
                 self.block_tables[row, :len(pages)] = pages
@@ -157,9 +162,10 @@ class Scheduler:
         return admitted
 
     def retire(self, row, registry):
-        """Free a finished row + its registry pin + its pages."""
+        """Free a finished row + its registry pin, buffer hold + pages."""
         seq = self.active.pop(row)
         registry.release(seq.request.client_id)
+        registry.release_buffer(seq.buf)
         if self.pool is not None:
             self.pool.release(seq.pages)
             seq.pages = []

@@ -9,7 +9,7 @@ from conftest import given, settings, st  # noqa: F401
 
 from repro.core.aggregation import aggregate, broadcast_clients
 from repro.core.strategies import (FROZEN, LOCAL, SHARED, count_params,
-                                   leaf_role, role_tree, trainable_mask)
+                                   role_tree, trainable_mask)
 
 
 def _client_tree(seed, C=4, d=6, r=2, dout=5):

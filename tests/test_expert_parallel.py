@@ -7,8 +7,6 @@ subprocess with 8 forced host devices.
 import subprocess
 import sys
 
-import pytest
-
 _SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"

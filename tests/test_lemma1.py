@@ -9,7 +9,6 @@ asymmetry claim: A* is invariant to the input distribution, B* is not.
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 
 def _setup(seed, k=6, d=8, r=3, n=4096, aniso=None):

@@ -1,0 +1,291 @@
+"""repro.serving.refresh: the live train→serve bridge.
+
+The contract under test (ISSUE 3 acceptance): a mid-generation adapter
+publish never changes the tokens of already-admitted sequences, while
+newly admitted sequences pick up the new round's Ā/B_i with no engine
+rebuild or batch drain; flips are deferred until every sequence reading
+the target buffer retires; staleness is reported per tenant.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import AdapterConfig, get_config, reduced
+from repro.core.adapters import init_adapters
+from repro.core.strategies import LOCAL, leaf_role
+from repro.models.transformer import decode_step, init_model, prefill
+from repro.serving import AdapterFeed, AdapterRegistry, ServingEngine
+from repro.serving.demo import synthetic_clients
+
+KEY = jax.random.PRNGKey(0)
+N_CLIENTS = 3
+
+
+def tiny_cfg():
+    return reduced(get_config("deepseek-7b"), n_layers=2, d_model=64)
+
+
+def perturb_shared(template, seed, scale=0.05):
+    """A new round's template: fresh SHARED leaves (the aggregated Ā
+    changes every round), LOCAL leaves untouched (redrawn per client by
+    synthetic_clients)."""
+    root = jax.random.PRNGKey(seed)
+
+    def leaf(path, x):
+        if leaf_role(path, "fedsa") == LOCAL:
+            return x
+        k = jax.random.fold_in(root, abs(hash(str(path))) % (2 ** 31))
+        return (jax.random.normal(k, x.shape, jnp.float32)
+                * scale).astype(x.dtype)
+
+    return jax.tree_util.tree_map_with_path(leaf, template)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = tiny_cfg()
+    acfg = AdapterConfig(mode="fedsa", rank=4)
+    params = init_model(KEY, cfg, jnp.float32)
+    template0 = {"adapters": init_adapters(KEY, cfg, acfg)}
+    # round-0 and round-1 client populations: different Ā AND different B_i
+    trees0 = synthetic_clients(template0, N_CLIENTS, seed=50, scale=0.05)
+    template1 = perturb_shared(template0, seed=60)
+    trees1 = synthetic_clients(template1, N_CLIENTS, seed=61, scale=0.05)
+    return cfg, acfg, params, template0, trees0, trees1
+
+
+def make_registry(template, trees, n_slots=2):
+    reg = AdapterRegistry(template, n_slots=n_slots, versioned=True)
+    for i, t in enumerate(trees):
+        reg.ingest(i, t)
+    return reg
+
+
+def naive_tokens(cfg, acfg, params, tree, prompt, new_tokens, max_seq=32):
+    """Reference greedy decode for one client's personalized model."""
+    ad = tree["adapters"]
+    toks = jnp.asarray(np.asarray(prompt)[None].astype(np.int32))
+    logits, cache, _ = prefill(cfg, params, ad, acfg, toks, max_seq,
+                               cache_dtype=jnp.float32)
+    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    out = [int(tok[0, 0])]
+    for s in range(new_tokens - 1):
+        pos = jnp.full((1,), len(prompt) + s, jnp.int32)
+        logits, cache = decode_step(cfg, params, ad, acfg, tok, pos, cache)
+        tok = jnp.argmax(logits[:, 0], -1)[:, None].astype(jnp.int32)
+        out.append(int(tok[0, 0]))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Registry-level: versioned gather + flip ordering
+# ---------------------------------------------------------------------------
+
+def test_versioned_gather_spans_buffers(setup):
+    _, _, _, template0, trees0, trees1 = setup
+    reg = make_registry(template0, trees0)
+    s0 = reg.acquire(0, pin=False)
+    assert reg.publish(1, {i: t for i, t in enumerate(trees1)})
+    assert reg.version == 1 and reg.active_buf == 1
+    s0b = reg.acquire(0, pin=False)              # re-admission, new buffer
+    got = reg.gather(np.array([s0, s0b]), np.array([0, 1]))["adapters"]
+
+    def leaves(tree, name):
+        return [np.asarray(leaf) for path, leaf in
+                jax.tree_util.tree_flatten_with_path(tree["adapters"])[0]
+                if str(path[-1].key) == name]
+
+    for name, rows in (("B", (leaves(trees0[0], "B"),
+                              leaves(trees1[0], "B"))),
+                       ("A", (leaves(trees0[0], "A"),
+                              leaves(trees1[0], "A")))):
+        flat = [np.asarray(leaf) for path, leaf in
+                jax.tree_util.tree_flatten_with_path(got)[0]
+                if str(path[-1].key) == name]
+        for g, v0, v1 in zip(flat, rows[0], rows[1]):
+            np.testing.assert_array_equal(g[:, 0], v0)   # row 0 → round 0
+            np.testing.assert_array_equal(g[:, 1], v1)   # row 1 → round 1
+            assert not np.array_equal(v0, v1)
+
+
+def test_flip_deferred_until_buffer_drains(setup):
+    _, _, _, template0, trees0, trees1 = setup
+    reg = make_registry(template0, trees0)
+    trees2 = [jax.tree_util.tree_map(lambda x: x * 2.0, t) for t in trees1]
+    b0 = reg.retain_buffer()                     # in-flight row, round 0
+    assert b0 == 0
+    assert reg.publish(1, {i: t for i, t in enumerate(trees1)})
+    assert (reg.version, reg.active_buf, reg.flips) == (1, 1, 1)
+    b1 = reg.retain_buffer()                     # in-flight row, round 1
+    assert b1 == 1
+    # round 2 targets buffer 0, still held by the round-0 row → deferred
+    assert not reg.publish(2, {i: t for i, t in enumerate(trees2)})
+    assert reg.version == 1 and reg.stats["pending_version"] == 2
+    assert not reg.try_flip()
+    assert reg.deferred_flips >= 2
+    reg.release_buffer(b0)                       # round-0 row retires
+    assert reg.try_flip()
+    assert (reg.version, reg.active_buf, reg.flips) == (2, 0, 2)
+    assert reg.stats["pending_version"] is None
+    reg.release_buffer(b1)
+
+
+def test_publish_coalesces_and_ignores_stale(setup):
+    _, _, _, template0, trees0, trees1 = setup
+    reg = make_registry(template0, trees0)
+    hold0 = reg.retain_buffer()                  # round-0 row on buffer 0
+    assert reg.publish(1, {0: trees1[0]})        # buffer 1 free → flips
+    assert reg.active_buf == 1
+    trees2 = [jax.tree_util.tree_map(lambda x: x * 2.0, t) for t in trees1]
+    trees3 = [jax.tree_util.tree_map(lambda x: x * 3.0, t) for t in trees1]
+    # rounds 2 and 3 both target buffer 0, still held by the round-0 row
+    assert not reg.publish(2, {0: trees2[0]})
+    assert not reg.publish(3, {1: trees3[1]})    # coalesces on top
+    assert not reg.publish(1, {0: trees0[0]})    # stale: ignored
+    assert reg.stats["pending_version"] == 3
+    reg.release_buffer(hold0)
+    assert reg.try_flip()
+    assert reg.version == 3
+    # client 0 kept round-2 leaves (superseded only where round 3 wrote)
+    got0 = reg._store[0][0]
+    np.testing.assert_array_equal(
+        got0, 2.0 * np.asarray(
+            [leaf for path, leaf in
+             jax.tree_util.tree_flatten_with_path(trees1[0])[0]
+             if str(path[-1].key) == "B"][0]))
+    assert reg._client_ver[0] == 3 and reg._client_ver[1] == 3
+
+
+def test_reingest_refreshes_unpinned_resident_slot(setup):
+    """A same-version re-ingest must reach the slot at the next unpinned
+    acquire — the slot tag tracks cold-store writes, not just rounds."""
+    _, _, _, template0, trees0, trees1 = setup
+    for versioned in (False, True):
+        reg = AdapterRegistry(template0, n_slots=2, versioned=versioned)
+        reg.ingest(0, trees0[0])
+        s = reg.acquire(0)
+        reg.release(0)
+        reg.ingest(0, trees1[0])                 # registry.version still 0
+        assert reg.acquire(0, pin=False) == s    # hit, refreshed in place
+        got = reg.gather(np.array([s]))["adapters"]
+        want = [np.asarray(leaf) for path, leaf in
+                jax.tree_util.tree_flatten_with_path(
+                    trees1[0]["adapters"])[0]
+                if str(path[-1].key) == "B"]
+        flat = [np.asarray(leaf)[:, 0] for path, leaf in
+                jax.tree_util.tree_flatten_with_path(got)[0]
+                if str(path[-1].key) == "B"]
+        for g, w in zip(flat, want):
+            np.testing.assert_array_equal(g, w)
+
+
+def test_publish_requires_versioned():
+    cfg = tiny_cfg()
+    acfg = AdapterConfig(mode="fedsa", rank=4)
+    template = {"adapters": init_adapters(KEY, cfg, acfg)}
+    reg = AdapterRegistry(template, n_slots=2)
+    with pytest.raises(RuntimeError, match="versioned"):
+        reg.publish(1, {0: template})
+
+
+# ---------------------------------------------------------------------------
+# Engine-level: token parity + fresh-version pickup + staleness
+# ---------------------------------------------------------------------------
+
+def run_with_publish(setup, publish_at, kv_layout="paged"):
+    """Submit one long request at round 0; optionally publish round 1
+    mid-generation; submit a second request after the publish."""
+    cfg, acfg, params, template0, trees0, trees1 = setup
+    reg = make_registry(template0, trees0)
+    feed = AdapterFeed()
+    eng = ServingEngine(cfg, params, acfg, reg, max_batch=2, max_seq=32,
+                        kv_layout=kv_layout, page_size=8, feed=feed)
+    rng = np.random.default_rng(3)
+    prompt_a = rng.integers(0, cfg.vocab_size, 6)
+    prompt_b = rng.integers(0, cfg.vocab_size, 5)
+    eng.submit(0, prompt_a, max_new_tokens=12)
+    second = False
+    for _ in range(4):
+        eng.step()
+    if publish_at:
+        feed.publish(1, jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *trees1))
+    while not eng.scheduler.idle:
+        eng.step()
+        if publish_at and not second and reg.version == 1:
+            eng.submit(1, prompt_b, max_new_tokens=4)
+            second = True
+    rep = eng.report()
+    return eng, reg, rep, prompt_a, prompt_b
+
+
+def test_mid_publish_token_parity_and_fresh_pickup(setup):
+    """THE acceptance invariant: round-t sequences decode identically
+    with or without a round-t+1 publish mid-generation; the sequence
+    admitted after the flip serves the new round exactly."""
+    cfg, acfg, params, template0, trees0, trees1 = setup
+    eng0, _, _, prompt_a, _ = run_with_publish(setup, publish_at=False)
+    eng1, reg, rep, _, prompt_b = run_with_publish(setup, publish_at=True)
+    base = eng0.finished[0]["tokens"].tolist()
+    assert eng1.finished[0]["tokens"].tolist() == base
+    assert base == naive_tokens(cfg, acfg, params, trees0[0], prompt_a, 12)
+    # the sequence admitted post-flip serves round 1's Ā AND B_1
+    assert eng1.finished[1]["version"] == 1
+    assert eng1.finished[1]["tokens"].tolist() == naive_tokens(
+        cfg, acfg, params, trees1[1], prompt_b, 4)
+    # no rebuild, no drain: the engine decoded a mixed-version batch
+    assert rep["flips"] == 1 and rep["adapter_version"] == 1
+    assert eng1.finished[0]["version"] == 0
+    assert rep["batch_occupancy"] > 0.5
+
+
+def test_mid_publish_token_parity_dense_layout(setup):
+    eng0, _, _, _, _ = run_with_publish(setup, publish_at=False,
+                                        kv_layout="dense")
+    eng1, _, rep, _, _ = run_with_publish(setup, publish_at=True,
+                                          kv_layout="dense")
+    assert (eng1.finished[0]["tokens"].tolist()
+            == eng0.finished[0]["tokens"].tolist())
+    assert rep["flips"] == 1
+
+
+def test_staleness_stats(setup):
+    eng, reg, rep, _, _ = run_with_publish(setup, publish_at=True)
+    # the round-0 sequence kept decoding after the round-1 flip → stale
+    assert rep["staleness_max"] >= 1
+    assert rep["tenant_staleness"][0] >= 1       # client 0 was in flight
+    assert rep["tenant_staleness"].get(1, 0) == 0  # admitted at round 1
+    assert rep["staleness_mean"] > 0
+    assert rep["publishes"] == 1 and rep["deferred_flips"] == 0
+    assert reg.stats["tenant_versions"] == {i: 1 for i in range(N_CLIENTS)}
+
+
+def test_engine_flip_defers_behind_two_generations(setup):
+    """publish → flip only after retire: round 2 cannot flip while a
+    round-0 sequence is still decoding (its buffer is the target)."""
+    cfg, acfg, params, template0, trees0, trees1 = setup
+    reg = make_registry(template0, trees0)
+    feed = AdapterFeed()
+    eng = ServingEngine(cfg, params, acfg, reg, max_batch=2, max_seq=32,
+                        kv_layout="paged", page_size=8, feed=feed)
+    rng = np.random.default_rng(4)
+    eng.submit(0, rng.integers(0, cfg.vocab_size, 4), max_new_tokens=16)
+    eng.step()                                   # admit at round 0, buf 0
+    stack = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees1)
+    feed.publish(1, stack)
+    eng.step()                                   # flip → round 1 active
+    assert reg.version == 1
+    eng.submit(1, rng.integers(0, cfg.vocab_size, 4), max_new_tokens=16)
+    eng.step()                                   # admit at round 1, buf 1
+    feed.publish(2, jax.tree_util.tree_map(lambda x: x * 2.0, stack))
+    versions = []
+    while not eng.scheduler.idle:
+        eng.step()
+        versions.append((len(eng.finished), reg.version))
+    # round 2 committed only once the round-0 sequence retired
+    assert all(v == 1 for done, v in versions if done == 0)
+    assert reg.version == 2
+    assert reg.deferred_flips > 0
+    assert eng.finished[0]["version"] == 0 and eng.finished[1]["version"] == 1

@@ -66,13 +66,34 @@ def test_registry_pinned_slots_not_evicted(setup):
     reg = make_registry(base, trees, n_slots=2)
     reg.acquire(0)                                   # pinned
     reg.acquire(1)                                   # pinned
-    assert reg.acquire(2) is None                    # nothing evictable
+    order = list(reg._lru.items())
+    counters = (reg.hits, reg.misses, reg.evictions)
+    with pytest.raises(RuntimeError, match="pinned"):
+        reg.acquire(2)                               # nothing evictable
+    # a failed acquire must not corrupt the LRU order or the counters
+    assert list(reg._lru.items()) == order
+    assert (reg.hits, reg.misses, reg.evictions) == counters
     reg.release(0)
     s = reg.acquire(2)
     assert s is not None                             # took client 0's slot
     assert 0 not in reg._lru and 2 in reg._lru
     with pytest.raises(KeyError):
         reg.acquire(99)                              # never ingested
+
+
+def test_registry_release_unknown_is_noop(setup):
+    _, _, _, base, trees = setup
+    reg = make_registry(base, trees, n_slots=2)
+    reg.release(3)                                   # never admitted
+    reg.release(99)                                  # never ingested
+    s0 = reg.acquire(0)
+    reg.release(0)
+    reg.release(0)                                   # over-release: no-op
+    assert reg._pins[s0] == 0
+    # the slot is still evictable exactly once over-releases are ignored
+    reg.acquire(1)
+    s2 = reg.acquire(2)
+    assert s2 == s0 and reg.evictions == 1
 
 
 def test_registry_gather_roundtrip(setup):

@@ -4,12 +4,11 @@ import os
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 # real hypothesis when installed, skip-marking stubs otherwise
 from conftest import given, settings, st  # noqa: F401
 
-from repro.core.sketch import compress_roundtrip, make_sketch, sketch, unsketch
+from repro.core.sketch import compress_roundtrip, make_sketch, sketch
 from repro.data.synthetic import (dirichlet_partition,
                                   make_classification_task, make_lm_task,
                                   stack_client_batch)
