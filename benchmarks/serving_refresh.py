@@ -136,7 +136,7 @@ def run_drain(cfg, params, acfg, rounds_trees, segs, new_tokens, batch,
 
 
 def main(clients=6, batch=4, requests=12, rounds=2, new_tokens=8,
-         max_seq=64):
+         max_seq=64, out=None):
     cfg = reduced(get_config("deepseek-7b"), n_layers=2, d_model=128)
     acfg = AdapterConfig(mode="fedsa", rank=8)
     key = jax.random.PRNGKey(0)
@@ -185,11 +185,12 @@ def main(clients=6, batch=4, requests=12, rounds=2, new_tokens=8,
                   "rebuild_wall_s": drain["rebuild_wall_s"]},
         "speedup_vs_drain": speedup,
     }
-    BENCH_PATH.write_text(json.dumps(record, indent=2) + "\n")
+    bench_path = BENCH_PATH if out is None else pathlib.Path(out)
+    bench_path.write_text(json.dumps(record, indent=2) + "\n")
     print(f"live refresh {live_tps:.1f} gen tok/s vs drain+rebuild "
           f"{drain_tps:.1f} → {speedup:.2f}x across {rounds} adapter "
           f"rounds ({live['flips']} flips, rebuild cost "
-          f"{drain['rebuild_wall_s']:.2f}s) [{BENCH_PATH.name}]")
+          f"{drain['rebuild_wall_s']:.2f}s) [{bench_path.name}]")
     return record
 
 
@@ -201,9 +202,14 @@ def _cli():
     ap.add_argument("--rounds", type=int, default=2)
     ap.add_argument("--new-tokens", type=int, default=8)
     ap.add_argument("--max-seq", type=int, default=64)
+    ap.add_argument("--out", default=None,
+                    help="write the JSON record here instead of the "
+                         "committed BENCH_refresh.json (CI keeps the "
+                         "baseline intact for the regression gate)")
     a = ap.parse_args()
     main(clients=a.clients, batch=a.batch, requests=a.requests,
-         rounds=a.rounds, new_tokens=a.new_tokens, max_seq=a.max_seq)
+         rounds=a.rounds, new_tokens=a.new_tokens, max_seq=a.max_seq,
+         out=a.out)
 
 
 if __name__ == "__main__":

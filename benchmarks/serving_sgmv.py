@@ -1,0 +1,222 @@
+"""Generic SGMV serving: grouped personal-A decode vs the per-client
+sequential loop, with the bgmv-legal FedSA workload as the reference.
+
+The PR-4 claim: grouped multi-tenant serving no longer needs FedSA's
+batch-global-Ā invariant. A fleet whose tenants own their WHOLE adapter
+pair (FedIT-style plain LoRA, FedDPA personal adapters) — or a
+mode-heterogeneous fleet mixing such tenants with FedSA ones — serves
+in ONE grouped decode batch through the registry's per-client A tables
+and the per-row-A gather (the SGMV path), instead of one sequential
+batch-1 loop per client (the only pre-PR-4 option for personal-A
+adapters, since the engine rejected those modes outright).
+
+Three arms, same model / prompts / greedy decode, warmed jit caches:
+
+  sgmv       grouped engine over 8 personal-A (fedit) clients — the
+             per-row-A gather path
+  perclient  sequential per-client prefill+decode over the same fleet
+             (what a personal-A deployment had to do before)
+  fedsa      grouped engine over a same-shape FedSA fleet — the
+             bgmv-legal workload, quantifying what the per-row-A
+             generality costs relative to the shared-Ā fast path
+
+On this CPU host the timed engines run the grouped jnp gather paths
+(``lora_backend="jnp"``) — the fused Pallas kernels execute in
+interpret mode here and are not a hot path; ``repro.kernels.sgmv`` is
+parity-checked against its jnp oracle and the error recorded, mirroring
+how ``serving_throughput.py`` treats bgmv. Results →
+``BENCH_sgmv.json``.
+
+  PYTHONPATH=src python benchmarks/serving_sgmv.py \
+      [--clients 8] [--requests 16] [--new-tokens 24]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import AdapterConfig, get_config, reduced
+from repro.core.adapters import init_adapters
+from repro.models.transformer import decode_step, init_model, prefill
+from repro.serving import AdapterRegistry, ServingEngine
+from repro.serving.demo import synthetic_clients
+
+try:                       # python -m benchmarks.serving_sgmv / run.py
+    from benchmarks.common import emit
+except ImportError:        # python benchmarks/serving_sgmv.py
+    from common import emit
+
+BENCH_PATH = pathlib.Path(__file__).resolve().parent.parent / \
+    "BENCH_sgmv.json"
+
+
+def run_grouped(cfg, params, acfg, template, trees, reg_mode, prompts,
+                new_tokens, batch, max_seq, **engine_kw):
+    """Grouped engine over the given fleet: warm-up pass, then the timed
+    pass on the SAME engine (jit caches live on its wrapped functions)."""
+    reg = AdapterRegistry(template, n_slots=batch, mode=reg_mode)
+    for i, tr in enumerate(trees):
+        reg.ingest(i, tr)
+    engine = ServingEngine(cfg, params, acfg, reg, max_batch=batch,
+                           max_seq=max_seq, **engine_kw)
+    for timed in (False, True):
+        engine.reset_stats()
+        for i, p in enumerate(prompts):
+            engine.submit(i % len(trees), p, max_new_tokens=new_tokens)
+        rep = engine.run()
+    return rep
+
+
+def run_perclient(cfg, params, acfg, trees, prompts, new_tokens, max_seq):
+    """Sequential batch-1 loop with each client's FULL adapter pair —
+    the pre-SGMV serving story for personal-A tenants (warm-up pass,
+    then timed pass on the same jitted functions)."""
+    step = jax.jit(lambda ad, t, p, c: decode_step(cfg, params, ad, acfg,
+                                                   t, p, c))
+    pre = jax.jit(lambda ad, toks: prefill(cfg, params, ad, acfg, toks,
+                                           max_seq,
+                                           cache_dtype=jnp.float32))
+    for timed in (False, True):
+        tokens = 0
+        t0 = time.perf_counter()
+        for i, p in enumerate(prompts):
+            ad = trees[i % len(trees)]["adapters"]
+            toks = jnp.asarray(p[None].astype(np.int32))
+            logits, cache, _ = pre(ad, toks)
+            tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+            tokens += 1
+            for s in range(new_tokens - 1):
+                pos = jnp.full((1,), len(p) + s, jnp.int32)
+                logits, cache = step(ad, tok, pos, cache)
+                tok = jnp.argmax(logits[:, 0], -1)[:, None].astype(jnp.int32)
+                tokens += 1
+            jax.block_until_ready(tok)
+        dt = time.perf_counter() - t0
+    return tokens, dt
+
+
+def bench_kernel(cfg, acfg, batch):
+    """Generic SGMV kernel (interpret mode, CPU) vs the jnp oracle —
+    parity record, not a hot path on this backend."""
+    from repro.kernels import ops, ref
+    K = N = max(128, cfg.d_model)
+    r = acfg.rank
+    ks = jax.random.split(jax.random.PRNGKey(0), 6)
+    M = max(8, batch)
+    x = jax.random.normal(ks[0], (M, K), jnp.float32)
+    w = jax.random.normal(ks[1], (K, N), jnp.float32) * 0.05
+    a = jax.random.normal(ks[2], (batch, K, r), jnp.float32) * 0.05
+    bs = jax.random.normal(ks[3], (batch, r, N), jnp.float32) * 0.05
+    sid = jax.random.randint(ks[4], (M,), 0, batch)
+    y = ops.sgmv(x, w, a, bs, sid, acfg.scaling, bm=M, bn=128, bk=128)
+    y0 = ref.sgmv_ref(x, w, a, bs, sid, acfg.scaling)
+    err = float(jnp.max(jnp.abs(y.astype(jnp.float32)
+                                - y0.astype(jnp.float32))))
+    emit("serving.sgmv_kernel_max_err", 0.0, f"{err:.2e}")
+    assert err < 1e-4, err
+    return err
+
+
+def _row(rep):
+    keys = ("tok_per_s", "gen_tok_per_s", "decode_tok_per_s",
+            "decode_steps", "batch_occupancy", "adapter_hit_rate",
+            "wall_s", "kv_layout", "lora_backend", "registry_mode")
+    def clean(v):
+        if isinstance(v, float) and not np.isfinite(v):
+            return None
+        return v
+    return {k: clean(rep[k]) for k in keys if k in rep}
+
+
+def main(clients=8, batch=8, requests=16, new_tokens=24, page_size=16,
+         max_seq=128, out=None):
+    cfg = reduced(get_config("deepseek-7b"), n_layers=2, d_model=128)
+    acfg = AdapterConfig(mode="fedsa", rank=8)
+    key = jax.random.PRNGKey(0)
+    params = init_model(key, cfg, jnp.float32)
+    template = {"adapters": init_adapters(key, cfg, acfg)}
+    # personal-A fleet: every client owns (A_i, B_i)
+    fedit_trees = synthetic_clients(template, clients, mode="fedit",
+                                    seed=13)
+    # same-shape FedSA fleet: shared Ā, per-client B_i (bgmv-legal)
+    fedsa_trees = synthetic_clients(template, clients, mode="fedsa",
+                                    seed=13)
+    hetero = [8, 24, 12, 48, 6, 32, 16, 40]
+    lens = [hetero[i % len(hetero)] for i in range(requests)]
+    assert max(lens) + new_tokens <= max_seq
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, n) for n in lens]
+
+    sgmv = run_grouped(cfg, params, acfg, template, fedit_trees, "fedit",
+                       prompts, new_tokens, batch, max_seq,
+                       page_size=page_size)
+    fedsa = run_grouped(cfg, params, acfg, template, fedsa_trees, "fedsa",
+                        prompts, new_tokens, batch, max_seq,
+                        page_size=page_size)
+    pc_tokens, pc_dt = run_perclient(cfg, params, acfg, fedit_trees,
+                                     prompts, new_tokens, max_seq)
+    pc_tps = pc_tokens / pc_dt
+
+    speedup = sgmv["gen_tok_per_s"] / pc_tps
+    vs_fedsa = sgmv["gen_tok_per_s"] / fedsa["gen_tok_per_s"]
+    emit("serving.sgmv_gen_tok_per_s", 1e6 / sgmv["gen_tok_per_s"],
+         f"{sgmv['gen_tok_per_s']:.1f}")
+    emit("serving.perclient_tok_per_s", pc_dt / pc_tokens * 1e6,
+         f"{pc_tps:.1f}")
+    emit("serving.fedsa_grouped_gen_tok_per_s",
+         1e6 / fedsa["gen_tok_per_s"], f"{fedsa['gen_tok_per_s']:.1f}")
+    emit("serving.sgmv_speedup_vs_perclient", 0.0, f"{speedup:.2f}x")
+    emit("serving.sgmv_vs_fedsa_grouped", 0.0, f"{vs_fedsa:.2f}x")
+    kerr = bench_kernel(cfg, acfg, batch)
+
+    bench_path = BENCH_PATH if out is None else pathlib.Path(out)
+    record = {
+        "bench": "serving_sgmv",
+        "config": {"arch": cfg.name, "n_layers": cfg.n_layers,
+                   "d_model": cfg.d_model, "rank": acfg.rank,
+                   "clients": clients, "batch": batch,
+                   "requests": requests, "prompt_lens": lens,
+                   "new_tokens": new_tokens, "max_seq": max_seq,
+                   "page_size": page_size,
+                   "backend": jax.default_backend()},
+        "sgmv": _row(sgmv),
+        "perclient": {"tok_per_s": pc_tps, "wall_s": pc_dt},
+        "fedsa_grouped": _row(fedsa),
+        "speedup_vs_perclient": speedup,
+        "sgmv_vs_fedsa_grouped": vs_fedsa,
+        "sgmv_kernel_max_err": kerr,
+    }
+    bench_path.write_text(json.dumps(record, indent=2) + "\n")
+    print(f"sgmv grouped {sgmv['gen_tok_per_s']:.1f} gen tok/s vs "
+          f"per-client loop {pc_tps:.1f} → {speedup:.2f}x at {clients} "
+          f"personal-A clients ({vs_fedsa:.2f}x of the bgmv-legal FedSA "
+          f"grouped path) [{bench_path.name}]")
+    return record
+
+
+def _cli():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=24)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--out", default=None,
+                    help="write the JSON record here instead of the "
+                         "committed BENCH_sgmv.json")
+    a = ap.parse_args()
+    main(clients=a.clients, batch=a.batch, requests=a.requests,
+         new_tokens=a.new_tokens, page_size=a.page_size,
+         max_seq=a.max_seq, out=a.out)
+
+
+if __name__ == "__main__":
+    _cli()

@@ -127,7 +127,7 @@ class ModelConfig:
 class AdapterConfig:
     """The paper's technique: LoRA variant × federated aggregation mode."""
     variant: str = "lora"           # lora | rslora | vera
-    mode: str = "fedsa"             # fedavg | ffa | fedsa | feddpa
+    mode: str = "fedsa"             # fedavg | ffa | fedsa | fedit | feddpa
     rank: int = 8
     alpha: float = 16.0
     vera_rank: int = 256

@@ -10,6 +10,12 @@ Every adapter leaf is classified as one of
 | fedavg | shared           | shared           | vanilla LoRA+FL (Eq. 1)    |
 | ffa    | frozen           | shared           | FFA-LoRA (Sun et al. 24)   |
 | fedsa  | shared           | local            | THIS PAPER (Eq. 2)         |
+| fedit  | local            | local            | FedIT-style plain LoRA     |
+|        |                  |                  | served per client: each    |
+|        |                  |                  | tenant keeps its own A_i   |
+|        |                  |                  | AND B_i (pure personal-    |
+|        |                  |                  | ization; nothing is        |
+|        |                  |                  | aggregated)                |
 | feddpa | global: shared   | global: shared   | dual adapters: the whole   |
 |        | personal: local  | personal: local  | personal leaf pair local   |
 
@@ -55,6 +61,12 @@ def leaf_role(path, mode):
         return FROZEN if is_a else SHARED
     if mode == "fedsa":
         return SHARED if is_a else (LOCAL if is_b else SHARED)
+    if mode == "fedit":
+        # serving-side notion of the FedIT / plain-LoRA baseline: every
+        # client owns its local adapter pair (the pre-aggregation state a
+        # personal-adapter deployment actually serves), so both matrices
+        # are per-client and nothing is communicated
+        return LOCAL if (is_a or is_b) else SHARED
     raise ValueError(f"unknown mode {mode!r}")
 
 

@@ -19,9 +19,32 @@ expansion grows only with n_slots·r (the *hot* adapter set, not the
 tenant population), so for n_slots ≤ 64, r ≤ 16 it stays one small
 matmul per output tile.
 
-Tiling mirrors ``lora_matmul``: grid (M/bm, N/bn, K/bk), K sequential;
-scratch acc (bm, bn) f32 + h (bm, r) f32. Slot ids ride along as a
-(bm, 1) int32 VMEM block per M-tile.
+Block-shape constraints
+-----------------------
+Tiling mirrors ``lora_matmul``: grid (M/bm, N/bn, K/bk) with K innermost
+and sequential ("arbitrary"); M, N, K must divide by the (possibly
+clamped) bm/bn/bk — decode batches pad M to the block. Scratch is
+acc (bm, bn) f32 + h (bm, r) f32, accumulated across K tiles and only
+materialized to the output tile at k == nk - 1, so the scratch plus the
+(n_slots·r, bn) B_flat block must fit VMEM (~16 MB/core). Slot ids ride
+along as a (bm, 1) int32 VMEM block per M tile. For f32 operands keep
+bm ≥ 8 and bn, bk multiples of 128 (lane width); n_slots·r need not be
+a multiple of 128 — the compiler pads — but full-lane occupancy of the
+expansion wants it to be.
+
+When the batch's A is NOT shared (per-client A_i under FedIT/FedDPA, or
+the version-indexed gather of a double-buffered registry), this kernel
+does not apply — ``repro.kernels.sgmv`` generalizes the same one-hot
+routing to a per-row A gather.
+
+Validation caveat
+-----------------
+On this CPU container the kernel runs only in ``interpret=True`` mode
+(the Python body with the same block decomposition — what the
+kernel-vs-ref sweeps in ``tests/test_bgmv.py`` exercise). Real-TPU
+block-shape limits, the Mosaic lowering of the one-hot expansion, and
+compiled-vs-interpret numerics are unvalidated (ROADMAP "On-TPU kernel
+validation").
 """
 from __future__ import annotations
 

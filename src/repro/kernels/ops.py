@@ -14,6 +14,7 @@ from repro.kernels.bgmv import bgmv as _bgmv
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.lora_matmul import lora_matmul as _lora
 from repro.kernels.paged_attention import paged_attention as _paged
+from repro.kernels.sgmv import sgmv as _sgmv
 from repro.kernels.ssm_scan import ssm_scan as _ssm
 from repro.kernels.ssd_scan import ssd_scan_fused as _ssd_fused
 from repro.kernels.ssm_scan import ssm_scan_fused as _ssm_fused
@@ -40,6 +41,16 @@ def bgmv(x, w, a, b_slots, slot_ids, scaling=1.0, *, bm=256, bn=256,
     interpret = _interpret_default() if interpret is None else interpret
     return _bgmv(x, w, a, b_slots, slot_ids, scaling, bm=bm, bn=bn, bk=bk,
                  interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("scaling", "bm", "bn", "bk",
+                                             "interpret"))
+def sgmv(x, w, a_slots, b_slots, slot_ids, scaling=1.0, *, bm=256, bn=256,
+         bk=512, interpret=None):
+    """Generic grouped LoRA matmul (per-row A[slot] AND B[slot])."""
+    interpret = _interpret_default() if interpret is None else interpret
+    return _sgmv(x, w, a_slots, b_slots, slot_ids, scaling, bm=bm, bn=bn,
+                 bk=bk, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("bd", "chunk", "interpret"))

@@ -10,12 +10,33 @@ positions ride in as *scalar-prefetch* operands
 the table directly — grid cell (b, h, p) DMAs exactly one physical page
 from HBM into VMEM.
 
-Grid (B, Hkv, P), page axis sequential. GQA: the G = H // Hkv query
-heads of one KV head share the page read; scores are (G, page) tiles on
-the MXU with the same online-softmax scratch (m, l, acc) as
-``flash_attention``. Pages wholly beyond the row's position (or wholly
-outside the sliding window) are skipped with ``pl.when`` — a row at
-depth t touches ceil((t+1)/page) pages, not P.
+Block-shape constraints
+-----------------------
+Grid (B, Hkv, P), page axis innermost and sequential ("arbitrary").
+GQA: the G = H // Hkv query heads of one KV head share the page read;
+scores are (G, page) tiles on the MXU with the same online-softmax
+scratch (m, l, acc — (G, 1), (G, 1), (G, hd) f32) as
+``flash_attention``. H must divide by Hkv; every row's block table must
+be P entries wide (the engine truncates P to the page bucket covering
+the deepest active row, never per-row). One K/V block is
+(1, page, 1, hd) — page · hd · dtype bytes must fit VMEM alongside the
+scratch, and hd wants to be a multiple of 128 (lane width) with
+page ≥ 8 sublanes for f32 K/V. Pages wholly beyond the row's position
+(or wholly outside the sliding window) are skipped with ``pl.when`` —
+a row at depth t touches ceil((t+1)/page) pages, not P.
+
+The newest token's K/V is PRE-scattered into its page before the kernel
+call (``decode_step_paged`` commits rows post-scan); the kernel only
+ever reads pages, it never writes them.
+
+Validation caveat
+-----------------
+On this CPU container the kernel runs only in ``interpret=True`` mode
+(the Python body with the same block decomposition — what the
+kernel-vs-ref sweeps in ``tests/test_paged_attention.py`` exercise).
+Real-TPU block-shape limits, the scalar-prefetch index_map lowering,
+and in-kernel new-token K/V writes are unvalidated (ROADMAP "On-TPU
+kernel validation").
 """
 from __future__ import annotations
 

@@ -29,6 +29,21 @@ def bgmv_ref(x, w, a, b_slots, slot_ids, scaling):
     return (y + scaling * jnp.einsum("mr,mrn->mn", h, bsel)).astype(x.dtype)
 
 
+def sgmv_ref(x, w, a_slots, b_slots, slot_ids, scaling):
+    """Generic grouped LoRA matmul — BOTH matrices gathered per row:
+    y[m] = x[m]·W + s·(x[m]·A[slot[m]])·B[slot[m]].
+
+    x: (M, K); w: (K, N); a_slots: (n_slots, K, r);
+    b_slots: (n_slots, r, N); slot_ids: (M,) int32.
+    """
+    x32 = x.astype(jnp.float32)
+    y = x32 @ w.astype(jnp.float32)
+    asel = a_slots.astype(jnp.float32)[slot_ids]     # (M, K, r) per-row A
+    bsel = b_slots.astype(jnp.float32)[slot_ids]     # (M, r, N) per-row B
+    h = jnp.einsum("mk,mkr->mr", x32, asel)
+    return (y + scaling * jnp.einsum("mr,mrn->mn", h, bsel)).astype(x.dtype)
+
+
 def paged_attention_ref(q, k_pages, v_pages, block_tables, pos, *,
                         window=None):
     """Paged grouped decode attention: gather pages into a logical view,

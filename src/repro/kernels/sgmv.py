@@ -1,0 +1,132 @@
+"""Generic SGMV: grouped LoRA matmul with BOTH matrices gathered per row.
+
+  y[m] = x[m]·W + s·(x[m]·A[slot[m]])·B[slot[m]]
+
+This is the serving contraction for personal-A adapters — FedIT-style
+plain LoRA and FedDPA personal pairs, where every tenant owns its own
+(A_i, B_i) — and for any mixed batch that breaks FedSA-LoRA's
+batch-global-Ā invariant (``repro.kernels.bgmv`` exploits that invariant
+and only gathers B per row; it stays the fast path whenever Ā IS
+batch-global).
+
+One-hot-matmul expansion
+------------------------
+Neither gather is expressed as dynamic VMEM indexing (per-row pointer
+chasing starves the MXU and Mosaic restricts dynamic indices on the
+sublane axis). Instead both sides route through the slot axis
+arithmetically:
+
+  *shrink*  A_flat is the (K, S·r) concatenation of every slot's A, so
+            ht = x @ A_flat projects each row against ALL S slot A's at
+            once — one (bm,bk)×(bk,S·r) MXU matmul per K tile, no
+            per-row selection inside the K loop;
+  *select+expand*  with P the (bm, S) one-hot of slot ids, masking
+            ht.reshape(bm, S, r) by P[:, :, None] zeroes every slot a
+            row did not ask for. The masked (bm, S·r) block IS the
+            routed input of the expansion: delta = (P⊙ht) @ B_flat with
+            B_flat the (S·r, N) flattened B table — rows of B_flat
+            belonging to foreign slots multiply zeros.
+
+Cost of both sides grows with S·r (the *hot* adapter set, never the
+tenant population): the shrink does S× the flops of bgmv's shared-Ā
+projection, which for S ≤ 64, r ≤ 16 keeps A_flat ≤ 1024 lanes — one
+MXU tile column. That S× overdraw is the price of per-row A; prefer
+bgmv when the batch shares one Ā.
+
+Block-shape constraints
+-----------------------
+Grid (M/bm, N/bn, K/bk) with K innermost and sequential ("arbitrary");
+M, N, K must divide by the (possibly clamped) bm/bn/bk. Scratch is
+acc (bm, bn) f32 + ht (bm, S·r) f32, accumulated across K tiles and
+only materialized to the output tile at k == nk-1, so bm·bn + bm·S·r
+f32 scratch plus the (bk, S·r) A_flat and (S·r, bn) B_flat blocks must
+fit VMEM (~16 MB/core). Slot ids ride along as a (bm, 1) int32 block
+per M tile. For f32 operands keep bm ≥ 8 and bn, bk multiples of 128
+(lane width); S·r ideally a multiple of 128 for full-lane occupancy —
+correctness does not require it, the compiler pads.
+
+Validation caveat
+-----------------
+On this CPU container the kernel runs only in ``interpret=True`` mode
+(the Python body with the same block decomposition — what the
+kernel-vs-ref sweeps in ``tests/test_sgmv.py`` exercise). Real-TPU
+block-shape limits, the Mosaic lowering of the one-hot masking, and
+compiled-vs-interpret numerics are unvalidated (ROADMAP "On-TPU kernel
+validation").
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import CompilerParams
+
+
+def _kernel(s_ref, x_ref, w_ref, a_ref, b_ref, o_ref, acc_ref, ht_ref, *,
+            scaling, nk, n_slots, r):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        ht_ref[...] = jnp.zeros_like(ht_ref)
+
+    x = x_ref[...]
+    acc_ref[...] += jnp.dot(x, w_ref[...],
+                            preferred_element_type=jnp.float32)
+    # shrink vs EVERY slot's A at once: (bm, bk) @ (bk, S·r)
+    ht_ref[...] += jnp.dot(x, a_ref[...],
+                           preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _finish():
+        bm = ht_ref.shape[0]
+        slots = s_ref[...][:, 0]                              # (bm,)
+        onehot = (slots[:, None] == jax.lax.broadcasted_iota(
+            jnp.int32, (bm, n_slots), 1)).astype(jnp.float32)
+        # masking the per-slot shrink IS the routed expansion input
+        hp = (ht_ref[...].reshape(bm, n_slots, r)
+              * onehot[:, :, None]).reshape(bm, n_slots * r)
+        delta = jnp.dot(hp.astype(b_ref.dtype), b_ref[...],
+                        preferred_element_type=jnp.float32)
+        o_ref[...] = (acc_ref[...] + scaling * delta).astype(o_ref.dtype)
+
+
+def sgmv(x, w, a_slots, b_slots, slot_ids, scaling, *, bm=256, bn=256,
+         bk=512, interpret=False):
+    """x: (M, K); w: (K, N); a_slots: (n_slots, K, r);
+    b_slots: (n_slots, r, N); slot_ids: (M,) int32 in [0, n_slots)
+    → (M, N)."""
+    M, K = x.shape
+    N = w.shape[1]
+    n_slots, _, r = a_slots.shape
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
+    nk = K // bk
+    grid = (M // bm, N // bn, nk)
+    a_flat = a_slots.transpose(1, 0, 2).reshape(K, n_slots * r)
+    b_flat = b_slots.reshape(n_slots * r, N)
+    sids = slot_ids.astype(jnp.int32).reshape(M, 1)
+    return pl.pallas_call(
+        functools.partial(_kernel, scaling=scaling, nk=nk, n_slots=n_slots,
+                          r=r),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, 1), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bk, n_slots * r), lambda i, j, k: (k, 0)),
+            pl.BlockSpec((n_slots * r, bn), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32),
+                        pltpu.VMEM((bm, n_slots * r), jnp.float32)],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(sids, x, w, a_flat, b_flat)

@@ -4,6 +4,8 @@ or run a real batched decode on the host mesh.
   python -m repro.launch.serve --arch qwen3-32b --shape decode_32k [--multi-pod]
   python -m repro.launch.serve --arch qwen3-32b --execute
   python -m repro.launch.serve --arch deepseek-7b --multi-tenant [--clients 8]
+  python -m repro.launch.serve --arch deepseek-7b --multi-tenant \
+      --fleet mixed --lora-backend sgmv
   python -m repro.launch.serve --arch deepseek-7b --live-refresh \
       [--train-rounds 4]
 """
@@ -13,11 +15,19 @@ if __name__ == "__main__" and os.environ.get("XLA_FLAGS") is None:
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 import argparse  # noqa: E402
+import dataclasses  # noqa: E402
 import time  # noqa: E402
 
 
 def run_multi_tenant(args, acfg):
-    """Serve a mixed-client request stream through repro.serving."""
+    """Serve a mixed-client request stream through repro.serving.
+
+    ``--fleet`` picks the tenant population: ``fedsa`` (shared Ā,
+    per-client B_i — the paper's invariant, bgmv-legal), ``fedit``
+    (every client owns its whole adapter pair — per-client A tables,
+    the SGMV path), or ``mixed`` (half FedSA, half FedIT tenants in ONE
+    registry and ONE grouped batch).
+    """
     import jax
     import jax.numpy as jnp
     import numpy as np
@@ -26,16 +36,29 @@ def run_multi_tenant(args, acfg):
     from repro.core.adapters import init_adapters
     from repro.models.transformer import init_model
     from repro.serving import AdapterRegistry, ServingEngine
-    from repro.serving.demo import synthetic_clients
+    from repro.serving.demo import mixed_fleet, synthetic_clients
 
     cfg = reduced(get_config(args.arch))
     key = jax.random.PRNGKey(0)
     params = init_model(key, cfg, jnp.float32)
+    if args.fleet == "feddpa" and acfg.mode != "feddpa":
+        # the dual-adapter fleet needs the doubled global/personal leaf
+        # structure from init_adapters
+        acfg = dataclasses.replace(acfg, mode="feddpa")
     # stand-in for a trained FedSystem: shared Ā, client-specific B_i
+    # (and client-specific A_i under the fedit / mixed fleets)
     template = {"adapters": init_adapters(key, cfg, acfg)}
-    reg = AdapterRegistry(template, n_slots=args.slots, mode=acfg.mode)
-    for i, tree in enumerate(synthetic_clients(template, args.clients,
-                                               mode=acfg.mode, seed=7)):
+    fleet = args.fleet
+    if fleet == "mixed":
+        trees, modes = mixed_fleet(template, args.clients, seed=7)
+        reg_mode = "fedit"      # A+B tables cover both tenant kinds
+    else:
+        reg_mode = fleet if fleet != "fedsa" else acfg.mode
+        trees = synthetic_clients(template, args.clients, mode=reg_mode,
+                                  seed=7)
+        modes = [reg_mode] * args.clients
+    reg = AdapterRegistry(template, n_slots=args.slots, mode=reg_mode)
+    for i, tree in enumerate(trees):
         reg.ingest(i, tree)
     engine = ServingEngine(cfg, params, acfg, reg,
                            max_batch=min(8, args.clients), max_seq=64,
@@ -52,8 +75,13 @@ def run_multi_tenant(args, acfg):
     rep = engine.run()
     extra = (f", page util {rep['page_utilization']:.2f}"
              if rep["kv_layout"] == "paged" else "")
+    fleet_note = (f"{fleet} fleet "
+                  f"({modes.count('fedsa')} fedsa + "
+                  f"{modes.count('fedit')} fedit)" if fleet == "mixed"
+                  else f"{fleet} fleet")
     print(f"served {rep['requests']} requests from {args.clients} clients "
-          f"({args.slots} adapter slots, {rep['kv_layout']} kv): "
+          f"[{fleet_note}] ({args.slots} adapter slots, "
+          f"{rep['kv_layout']} kv, {rep['lora_backend']} lora): "
           f"{rep['tokens']} tokens in {rep['wall_s']:.1f}s = "
           f"{rep['tok_per_s']:.1f} tok/s "
           f"({rep['decode_tok_per_s']:.1f} decode-only), "
@@ -110,7 +138,14 @@ def main():
     ap.add_argument("--attn-backend", default="xla",
                     choices=["xla", "pallas"])
     ap.add_argument("--lora-backend", default="jnp",
-                    choices=["jnp", "bgmv"])
+                    choices=["jnp", "bgmv", "sgmv"])
+    ap.add_argument("--fleet", default="fedsa",
+                    choices=["fedsa", "fedit", "feddpa", "mixed"],
+                    help="tenant population for --multi-tenant: fedsa "
+                         "(shared Ā, per-client B), fedit (per-client A "
+                         "AND B — the SGMV path), feddpa (dual adapters, "
+                         "personal pair per client), or mixed (half "
+                         "fedsa + half fedit in one grouped batch)")
     args = ap.parse_args()
 
     acfg = AdapterConfig(mode=args.mode, variant=args.variant)

@@ -20,8 +20,11 @@ import contextlib
 import jax
 import jax.numpy as jnp
 
-# Grouped multi-tenant LoRA backend: "jnp" (gather + einsum, the default)
-# or "bgmv" (fused repro.kernels.bgmv base+delta matmul). Trace-scoped via
+# Grouped multi-tenant LoRA backend: "jnp" (gather + einsum, the default),
+# "bgmv" (fused repro.kernels.bgmv base+delta matmul; needs the
+# batch-global Ā), or "sgmv" (fused repro.kernels.sgmv with BOTH matrices
+# per row — personal-A adapters and mixed fleets; uses bgmv as the fast
+# path whenever the gathered A turns out batch-global). Trace-scoped via
 # ``grouped_lora_backend`` — the serving engine enters the context inside
 # its jitted step so the choice is baked at trace time per engine.
 _GROUPED_LORA_BACKEND = ["jnp"]
@@ -79,13 +82,21 @@ def lora_delta(ad, x, scaling, vera_shared=None):
         h = h @ B.astype(jnp.float32)
         return (h * ad["b"].astype(jnp.float32)).astype(x.dtype)
     # Grouped multi-tenant serving (repro.serving): a 3-D B is one B_i per
-    # batch row, gathered from the registry slot table; Ā normally stays
-    # batch-global (the FedSA invariant), so x @ A computes once for the
-    # batch. Under the version-indexed gather of a double-buffered registry
-    # (repro.serving.refresh) A is ALSO per-row — (B, d_in, r) — and the
-    # same ``@`` runs as a batched matmul, letting one decode batch mix
-    # rows admitted under different federation rounds.
-    h = x.astype(jnp.float32) @ ad["A"].astype(jnp.float32)
+    # batch row, gathered from the registry slot table; under FedSA the
+    # aggregated Ā stays batch-global (2-D) so x @ A computes once for
+    # the batch.
+    A = ad["A"].astype(jnp.float32)
+    if A.ndim == 3 and x.ndim == 3:
+        # Generic per-row A_i — the SGMV shrink: personal-A adapters
+        # (FedIT plain LoRA / FedDPA personal pairs, packed into A slot
+        # tables by the registry) and the version-indexed gather of a
+        # double-buffered registry (repro.serving.refresh) both hand one
+        # A per batch row, so the rank-r projection runs as a batched
+        # matmul and one decode batch can mix tenants whose A's differ
+        # (or rows admitted under different federation rounds).
+        h = jnp.einsum("bsd,bdr->bsr", x.astype(jnp.float32), A)
+    else:
+        h = x.astype(jnp.float32) @ A
     B = ad["B"].astype(jnp.float32)
     if B.ndim == 3 and x.ndim == 3:
         h = jnp.einsum("bsr,brn->bsn", h, B)
@@ -101,20 +112,33 @@ def adapted(w, ad, x, scaling, vera_shared=None):
     in ``stop_gradient`` here so callers can simply differentiate w.r.t. the
     adapter pytree.
     """
-    if (_GROUPED_LORA_BACKEND[0] == "bgmv" and ad is not None
+    backend = _GROUPED_LORA_BACKEND[0]
+    if (backend in ("bgmv", "sgmv") and ad is not None
             and "B" in ad and getattr(ad["B"], "ndim", 0) == 3
-            and getattr(ad.get("A"), "ndim", 0) == 2
             and x.ndim == 3 and x.shape[1] == 1):
-        # the fused kernel needs the batch-global Ā; a per-row 3-D A
-        # (version-indexed gather, repro.serving.refresh) falls through
-        # to the grouped jnp path below
-        # Grouped decode on the fused kernel: y[m] = x·W + s·(x·Ā)·B[m].
-        # ad["B"] is already the per-row gather, so the slot table handed
-        # to bgmv is the batch itself with identity slot ids.
+        # Grouped decode on the fused kernels. ad["A"]/ad["B"] are already
+        # the per-row gather, so the slot table handed to the kernel is
+        # the batch itself with identity slot ids.
+        a_ndim = getattr(ad.get("A"), "ndim", 0)
         from repro.kernels import ops as kops
-        y = kops.bgmv(x[:, 0], jax.lax.stop_gradient(w), ad["A"], ad["B"],
-                      jnp.arange(x.shape[0], dtype=jnp.int32), scaling)
-        return y[:, None]
+        if a_ndim == 2:
+            # batch-global Ā (the FedSA invariant): the bgmv fast path —
+            # one shared shrink per tile — is legal under BOTH backend
+            # names, so an sgmv engine serving a pure-FedSA batch pays
+            # nothing for the generality
+            y = kops.bgmv(x[:, 0], jax.lax.stop_gradient(w), ad["A"],
+                          ad["B"], jnp.arange(x.shape[0], dtype=jnp.int32),
+                          scaling)
+            return y[:, None]
+        if a_ndim == 3 and backend == "sgmv":
+            # per-row A_i (personal-A adapters, or the version-indexed
+            # gather of a double-buffered registry): generic SGMV
+            y = kops.sgmv(x[:, 0], jax.lax.stop_gradient(w), ad["A"],
+                          ad["B"], jnp.arange(x.shape[0], dtype=jnp.int32),
+                          scaling)
+            return y[:, None]
+        # backend == "bgmv" with a per-row 3-D A: the shared-Ā kernel
+        # cannot express it — fall through to the grouped jnp path
     y = x @ jax.lax.stop_gradient(w)
     if ad is not None:
         if "global" in ad:  # FedDPA: sum of global + personal adapters

@@ -13,14 +13,23 @@ shared x·Ā projection can therefore serve a *mixed* batch of clients:
                  round's new Ā/B_i is absorbed mid-stream with no batch
                  drain and token parity for in-flight sequences
 
+The registry is not FedSA-only: modes whose clients own their whole
+adapter pair (FedIT-style plain LoRA, FedDPA personal adapters) pack
+per-client A tables next to the B tables, and the generic SGMV gather
+serves them — including mode-heterogeneous fleets — in the same grouped
+batch (``repro.serving.demo.mixed_fleet`` fabricates such populations).
+
 The matching compute primitives are ``repro.kernels.bgmv`` (grouped
-shared-Ā LoRA matmul; engine config ``lora_backend="bgmv"``) and
-``repro.kernels.paged_attention`` (block-table decode attention; engine
-config ``attn_backend="pallas"``); the jnp paths are the grouped branch
-of ``repro.models.common.lora_delta`` and the gather in
+shared-Ā LoRA matmul; engine config ``lora_backend="bgmv"``),
+``repro.kernels.sgmv`` (generic grouped matmul, BOTH matrices per row;
+``lora_backend="sgmv"``) and ``repro.kernels.paged_attention``
+(block-table decode attention; engine config ``attn_backend="pallas"``);
+the jnp paths are the grouped branch of
+``repro.models.common.lora_delta`` and the gather in
 ``repro.models.attention.attn_decode_paged``. K/V lives in a paged pool
 (``PagePool`` + scheduler-owned block tables) with the PR-1 dense layout
-kept as ``kv_layout="dense"`` fallback.
+kept as ``kv_layout="dense"`` fallback. ``docs/serving.md`` is the
+architecture guide for the whole subsystem.
 """
 from repro.serving.engine import ServingEngine
 from repro.serving.refresh import (AdapterFeed, snapshot_clients,

@@ -3,8 +3,11 @@
 A trained ``FedSystem`` is the real source of per-client adapters
 (``AdapterRegistry.from_system``); these helpers fabricate the same
 structure — SHARED leaves (the aggregated Ā) identical across clients,
-LOCAL leaves (B_i) drawn per client — without paying for federated
-training in a throughput benchmark or launcher demo.
+LOCAL leaves drawn per client — without paying for federated training in
+a throughput benchmark or launcher demo. ``mixed_fleet`` builds a
+mode-heterogeneous population (FedSA tenants sharing Ā next to
+FedIT-style tenants owning their whole adapter pair) for the generic
+SGMV serving path.
 """
 from __future__ import annotations
 
@@ -21,23 +24,50 @@ def _path_id(path):
     return zlib.crc32("/".join(parts).encode())
 
 
+def _draw_client(template, root, i, mode, scale):
+    """One client's tree: LOCAL-under-``mode`` leaves redrawn per
+    (client, leaf-path) — distinct even when two modules have identical
+    shapes — everything else shared from the template."""
+    ck = jax.random.fold_in(root, i)
+
+    def leaf(path, x):
+        if leaf_role(path, mode) != LOCAL:
+            return x
+        k = jax.random.fold_in(ck, _path_id(path))
+        return (jax.random.normal(k, x.shape, jnp.float32)
+                * scale).astype(x.dtype)
+
+    return jax.tree_util.tree_map_with_path(leaf, template)
+
+
 def synthetic_clients(template, n_clients, *, mode="fedsa", seed=0,
                       scale=0.02):
     """``n_clients`` trainables trees sharing ``template``'s SHARED
-    leaves, with each LOCAL leaf drawn per (client, leaf-path) — distinct
-    even when two modules have identical shapes."""
+    leaves, with each LOCAL leaf drawn per (client, leaf-path)."""
     root = jax.random.PRNGKey(seed)
+    return [_draw_client(template, root, i, mode, scale)
+            for i in range(n_clients)]
 
-    def one(i):
-        ck = jax.random.fold_in(root, i)
 
-        def leaf(path, x):
-            if leaf_role(path, mode) != LOCAL:
-                return x
-            k = jax.random.fold_in(ck, _path_id(path))
-            return (jax.random.normal(k, x.shape, jnp.float32)
-                    * scale).astype(x.dtype)
+def mixed_fleet(template, n_clients, *, modes=None, seed=0, scale=0.02):
+    """A mode-heterogeneous tenant population: per-client trees whose
+    personalization follows that client's OWN strategy.
 
-        return jax.tree_util.tree_map_with_path(leaf, template)
-
-    return [one(i) for i in range(n_clients)]
+    modes: per-client strategy list (default alternating
+    ``fedsa``/``fedit``). A ``fedsa`` client redraws only B_i and keeps
+    the template's aggregated Ā; a ``fedit`` client redraws its whole
+    (A_i, B_i) pair. Serve the fleet through a registry built with
+    ``mode="fedit"`` packing — per-slot A AND B tables — so the FedSA
+    tenants' A slots simply hold identical copies of Ā while FedIT
+    tenants' slots hold their personal A_i; ``lora_backend="sgmv"``
+    routes the whole batch through the per-row-A gather. Returns
+    ``(trees, modes)``.
+    """
+    if modes is None:
+        modes = ["fedsa" if i % 2 == 0 else "fedit"
+                 for i in range(n_clients)]
+    assert len(modes) == n_clients, (len(modes), n_clients)
+    root = jax.random.PRNGKey(seed)
+    trees = [_draw_client(template, root, i, m, scale)
+             for i, m in enumerate(modes)]
+    return trees, list(modes)

@@ -35,7 +35,20 @@ Backends (``attn_backend``-style config, jnp fallbacks always available):
   ``attn_backend``  "xla" (block-table gather + masked softmax) |
                     "pallas" (repro.kernels.paged_attention)
   ``lora_backend``  "jnp" (gather + einsum grouped lora_delta) |
-                    "bgmv" (repro.kernels.bgmv fused grouped matmul)
+                    "bgmv" (repro.kernels.bgmv fused grouped matmul;
+                    needs the batch-global Ā — per-row A falls back to
+                    jnp) |
+                    "sgmv" (repro.kernels.sgmv fused generic grouped
+                    matmul, BOTH matrices per row — personal-A
+                    registries and mixed fleets; batches whose gathered
+                    A is batch-global take the bgmv fast path)
+
+The registry decides WHAT is per-tenant (B only under FedSA; A and B
+under fedit/feddpa packing — see ``repro.serving.registry``); the
+engine's gather and decode loop are mode-agnostic, so one engine serves
+a mode-heterogeneous fleet as long as every tenant lives in the same
+registry. See ``docs/serving.md`` for the full architecture guide and
+the support matrix.
 """
 from __future__ import annotations
 
@@ -86,7 +99,7 @@ class ServingEngine:
             raise NotImplementedError(paged_reason)
         assert kv_layout in ("paged", "dense"), kv_layout
         assert attn_backend in ("xla", "pallas"), attn_backend
-        assert lora_backend in ("jnp", "bgmv"), lora_backend
+        assert lora_backend in ("jnp", "bgmv", "sgmv"), lora_backend
         self.versioned = getattr(registry, "versioned", False)
         if feed is not None and not self.versioned:
             raise ValueError("an adapter feed needs a double-buffered "
@@ -416,6 +429,9 @@ class ServingEngine:
                                float("nan")),
             "adapter_hit_rate": self.registry.stats["hit_rate"],
             "kv_layout": self.kv_layout,
+            "lora_backend": self.lora_backend,
+            "attn_backend": self.attn_backend,
+            "registry_mode": getattr(self.registry, "mode", "fedsa"),
             # live refresh (versioned registry; zeros on plain engines)
             "adapter_version": getattr(self.registry, "version", 0),
             "flips": getattr(self.registry, "flips", 0),

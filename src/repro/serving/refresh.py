@@ -22,6 +22,12 @@ admitted after the flip read round t+1 from the other buffer of the
 double-buffered slot tables. ``train_and_serve`` wires the whole loop
 end to end (used by ``examples/train_and_serve.py`` and
 ``python -m repro.launch.serve --live-refresh``).
+
+Personal-A rounds (fedit / FedDPA registries, ``repro.kernels.sgmv``
+serving path) ride the SAME machinery unchanged: ``publish`` stages
+every LOCAL leaf per client — A_i tables alongside B_i tables when the
+mode packs both — and the flip commits the pairs atomically per slot,
+so an in-flight row can never read round-t A against round-t+1 B.
 """
 from __future__ import annotations
 

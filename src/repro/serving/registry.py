@@ -1,18 +1,32 @@
-"""AdapterRegistry: dense slot tables over the hot set of per-client B_i.
+"""AdapterRegistry: dense slot tables over the hot set of per-client
+adapter matrices.
 
 The tenant population can be arbitrarily large (the cold store is a host
-dict of numpy B_i trees, a few KB per client at rank 8), but a decode
-batch only ever references the *hot* set admitted into ``n_slots`` dense
-on-device tables. Each LOCAL adapter leaf (B under FedSA) is packed with
-a slot axis so a whole mixed batch is served by one gather:
+dict of numpy adapter trees, a few KB per client at rank 8), but a
+decode batch only ever references the *hot* set admitted into
+``n_slots`` dense on-device tables. Each LOCAL adapter *matrix* leaf is
+packed with a slot axis so a whole mixed batch is served by one gather:
 
-  leaf  (n_layers, r, d_out)  →  table (n_layers, n_slots, r, d_out)
+  B leaf  (n_layers, r, d_out)  →  table (n_layers, n_slots, r, d_out)
+  A leaf  (n_layers, d_in, r)   →  table (n_layers, n_slots, d_in, r)
 
-SHARED/FROZEN leaves (the aggregated Ā) are stored once, verbatim — the
-FedSA invariant that makes the grouped kernel cheap. Admission is LRU
-with pinning: slots referenced by in-flight sequences are never evicted;
-``acquire`` raises ``RuntimeError`` when every slot is pinned (the
-scheduler then leaves the request queued).
+Which leaves are LOCAL depends on the federation strategy
+(``core.strategies``): under FedSA only B_i is per-client — the
+aggregated Ā is SHARED and stored once, verbatim, the invariant that
+makes the ``bgmv`` grouped kernel cheap. Under FedIT-style plain LoRA
+(``mode="fedit"``) and FedDPA's personal adapters BOTH matrices are
+per-client, so A leaves get their own slot tables paired with the B
+tables (one slot index covers the pair — a client's A_i and B_i always
+travel together through admission, eviction, and the versioned flip)
+and serving routes through the generic per-row-A gather (SGMV,
+``repro.kernels.sgmv``). A mode-heterogeneous fleet (FedSA + FedIT
+tenants in one registry) uses ``mode="fedit"`` packing: the FedSA
+tenants' A_i are simply identical copies of Ā. VeRA's LOCAL leaves are
+*vectors* (no per-row gather path in ``lora_delta``) and are rejected.
+
+Admission is LRU with pinning: slots referenced by in-flight sequences
+are never evicted; ``acquire`` raises ``RuntimeError`` when every slot
+is pinned (the scheduler then leaves the request queued).
 
 Versioned mode (``versioned=True``) double-buffers every table for the
 live train→serve bridge (``repro.serving.refresh``): LOCAL tables double
@@ -47,6 +61,9 @@ def gather_adapters(tables, local, slot_ids):
     tables: registry tree (packed LOCAL tables + shared leaves);
     local: matching pytree of python bools; slot_ids: (B,) int32.
     LOCAL leaves gain a per-row axis: (n, n_slots, r, d) → (n, B, r, d).
+    Under per-client-A packing (fedit/feddpa) the A tables gather the
+    same way — (n, n_slots, d, r) → (n, B, d, r) — and ``lora_delta``
+    runs the shrink as a batched matmul (the SGMV path).
     """
     return jax.tree_util.tree_map(
         lambda leaf, loc: jnp.take(leaf, slot_ids, axis=_pack_axis(
@@ -77,27 +94,31 @@ class AdapterRegistry:
         """template: ONE client's trainables tree (e.g.
         ``{"adapters": ...}`` without the client axis); its SHARED leaves
         seed the batch-global Ā."""
-        if mode != "fedsa":
-            raise NotImplementedError(
-                "grouped serving relies on the FedSA invariant (batch-"
-                f"global Ā, per-client B); mode={mode!r} has per-client A")
         self.mode = mode
         self.n_slots = n_slots
         self.versioned = versioned
         self.n_buffers = 2 if versioned else 1
         flat, self._treedef = jax.tree_util.tree_flatten_with_path(template)
         self._local = [leaf_role(path, mode) == LOCAL for path, _ in flat]
+        if not any(self._local):
+            raise ValueError(
+                f"mode={mode!r} keeps no adapter leaf client-local — "
+                "every tenant serves identical weights, there is nothing "
+                "to personalize (fedavg/ffa aggregate or freeze both "
+                "matrices)")
+        self.has_local_A = False
         self._leaves = []
         for (path, leaf), loc in zip(flat, self._local):
             ax = _pack_axis(leaf.ndim)
             if loc:
                 name = (str(path[-1].key) if hasattr(path[-1], "key")
                         else "")
-                if name != "B":
+                if name not in ("A", "B"):
                     raise NotImplementedError(
-                        "grouped serving packs LoRA B matrices only; "
+                        "grouped serving packs LoRA A/B matrices only; "
                         f"LOCAL leaf {name!r} (e.g. VeRA's b vector) has "
                         "no per-row gather path in lora_delta")
+                self.has_local_A |= name == "A"
                 shape = (leaf.shape[:ax]
                          + (self.n_buffers * n_slots,) + leaf.shape[ax:])
                 self._leaves.append(jnp.zeros(shape, leaf.dtype))
@@ -247,7 +268,9 @@ class AdapterRegistry:
 
         client_trees: ``{client_id: trainables tree}`` (host or device);
         the SHARED leaves (aggregated Ā — identical across clients under
-        FedSA) are taken from ``shared_from`` or any client tree. The
+        FedSA; absent under pure-personal modes like fedit, where the
+        A_i ride the per-client LOCAL tables instead) are taken from
+        ``shared_from`` or any client tree. The
         stage is host-side; device writes happen at ``try_flip``, which
         this attempts immediately. Returns True when the flip committed,
         False when it was deferred behind in-flight sequences (the
@@ -343,6 +366,7 @@ class AdapterRegistry:
                "evictions": self.evictions,
                "hit_rate": self.hits / total if total else 0.0,
                "resident": len(self._lru), "n_slots": self.n_slots,
+               "mode": self.mode, "local_A": self.has_local_A,
                "clients": len(self._store), "version": self.version,
                "flips": self.flips, "deferred_flips": self.deferred_flips,
                "publishes": self.publishes}

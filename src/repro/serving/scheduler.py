@@ -5,10 +5,13 @@ A fixed decode batch of ``max_batch`` rows; a FIFO queue of
 whenever (a) a batch row is free, (b) the registry can pin a slot for
 that client (hit, free slot, or unpinned LRU eviction), and — under the
 paged KV layout — (c) the ``PagePool`` can reserve enough pages for
-``prompt + max_new_tokens``. Finished sequences release their row,
-registry pin, and pages, so the next ``admit`` can refill the row
-mid-stream — decode never drains the whole batch to make progress on
-the queue.
+``prompt + max_new_tokens``. One registry pin covers EVERY slot table
+the mode packs (B only under FedSA; the paired A and B tables under
+per-client-A packing — a single slot index addresses the pair, so a
+pinned tenant's matrices can never be torn apart by eviction). Finished
+sequences release their row, registry pin, and pages, so the next
+``admit`` can refill the row mid-stream — decode never drains the whole
+batch to make progress on the queue.
 
 The scheduler owns the **block table**: a ``(max_batch, P)`` int32 array
 mapping each row's logical page index to a physical page of the pool.

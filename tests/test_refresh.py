@@ -181,6 +181,48 @@ def test_reingest_refreshes_unpinned_resident_slot(setup):
             np.testing.assert_array_equal(g, w)
 
 
+def test_personal_A_rounds_flip_pairs_atomically(setup):
+    """Generic SGMV refresh: a fedit-packed versioned registry publishes
+    per-client (A_i, B_i) PAIRS through the same double-buffered
+    machinery — after a flip the gather must hand the new round's A and
+    B together (never round-t A against round-t+1 B), while a row held
+    on the old buffer keeps the old pair intact."""
+    cfg, _, _, _, _, _ = setup
+    acfg = AdapterConfig(mode="fedsa", rank=4)
+    template = {"adapters": init_adapters(KEY, cfg, acfg)}
+    trees0 = synthetic_clients(template, N_CLIENTS, mode="fedit", seed=70,
+                               scale=0.05)
+    trees1 = synthetic_clients(template, N_CLIENTS, mode="fedit", seed=71,
+                               scale=0.05)
+    reg = AdapterRegistry(template, n_slots=2, mode="fedit",
+                          versioned=True)
+    assert reg.has_local_A
+    for i, t in enumerate(trees0):
+        reg.ingest(i, t)
+    s0 = reg.acquire(0, pin=False)
+    hold = reg.retain_buffer()                   # in-flight row, round 0
+    assert reg.publish(1, {i: t for i, t in enumerate(trees1)})
+    assert reg.version == 1 and reg.active_buf == 1
+    s0b = reg.acquire(0, pin=False)              # re-admission, new buffer
+    got = reg.gather(np.array([s0, s0b]), np.array([0, 1]))["adapters"]
+
+    def leaves(tree, name):
+        return [np.asarray(leaf) for path, leaf in
+                jax.tree_util.tree_flatten_with_path(tree["adapters"])[0]
+                if str(path[-1].key) == name]
+
+    for name in ("A", "B"):
+        flat = [np.asarray(leaf) for path, leaf in
+                jax.tree_util.tree_flatten_with_path(got)[0]
+                if str(path[-1].key) == name]
+        for g, v0, v1 in zip(flat, leaves(trees0[0], name),
+                             leaves(trees1[0], name)):
+            np.testing.assert_array_equal(g[:, 0], v0)   # row 0 → round 0
+            np.testing.assert_array_equal(g[:, 1], v1)   # row 1 → round 1
+            assert not np.array_equal(v0, v1)
+    reg.release_buffer(hold)
+
+
 def test_publish_requires_versioned():
     cfg = tiny_cfg()
     acfg = AdapterConfig(mode="fedsa", rank=4)

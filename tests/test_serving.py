@@ -123,10 +123,13 @@ def test_registry_gather_roundtrip(setup):
                     a, leaf_of(want["one"], seg, grp, name, "A"))
 
 
-def test_registry_rejects_per_client_A_modes(setup):
+def test_registry_rejects_modes_without_local_leaves(setup):
+    """fedavg/ffa aggregate or freeze both matrices: every tenant would
+    serve identical weights — nothing to pack, nothing to personalize."""
     _, _, _, base, _ = setup
-    with pytest.raises(NotImplementedError):
-        AdapterRegistry({"adapters": base}, n_slots=2, mode="feddpa")
+    for mode in ("fedavg", "ffa"):
+        with pytest.raises(ValueError, match="client-local"):
+            AdapterRegistry({"adapters": base}, n_slots=2, mode=mode)
 
 
 def test_registry_rejects_non_matrix_local_leaves():
@@ -135,6 +138,117 @@ def test_registry_rejects_non_matrix_local_leaves():
         {"attn": {"wq": {"d": jnp.ones((4,)), "b": jnp.zeros((8,))}}}]}}
     with pytest.raises(NotImplementedError):
         AdapterRegistry(vera_like, n_slots=2)
+
+
+# ---------------------------------------------------------------------------
+# Per-client A slot tables (generic SGMV packing: fedit / feddpa)
+# ---------------------------------------------------------------------------
+
+def leaves_named(tree, name):
+    return [np.asarray(leaf) for path, leaf in
+            jax.tree_util.tree_flatten_with_path(tree)[0]
+            if str(path[-1].key) == name]
+
+
+def test_registry_fedit_packs_A_and_B_tables(setup):
+    """Under fedit packing BOTH matrices are per-client: the gather must
+    hand per-row A_i next to per-row B_i, slot-consistent."""
+    _, _, _, base, _ = setup
+    template = {"adapters": base}
+    from repro.serving.demo import synthetic_clients
+    trees = synthetic_clients(template, 4, mode="fedit", seed=9,
+                              scale=0.05)
+    reg = AdapterRegistry(template, n_slots=3, mode="fedit")
+    assert reg.has_local_A
+    for i, t in enumerate(trees):
+        reg.ingest(i, t)
+    s2 = reg.acquire(2, pin=False)
+    s0 = reg.acquire(0, pin=False)
+    got = reg.gather(np.array([s0, s2]))["adapters"]
+    for name in ("A", "B"):
+        flat = leaves_named(got, name)
+        want0 = leaves_named(trees[0]["adapters"], name)
+        want2 = leaves_named(trees[2]["adapters"], name)
+        for g, w0, w2 in zip(flat, want0, want2):
+            np.testing.assert_array_equal(g[:, 0], w0)
+            np.testing.assert_array_equal(g[:, 1], w2)
+            assert not np.array_equal(w0, w2)
+
+
+def test_registry_feddpa_packs_personal_pair_only(setup):
+    """FedDPA: the personal (A, B) pair is per-client (slot tables),
+    the global pair stays SHARED (verbatim, no per-row axis)."""
+    cfg, _, _, _, _ = setup
+    acfg = AdapterConfig(mode="feddpa", rank=4)
+    base = init_adapters(KEY, cfg, acfg)
+    template = {"adapters": base}
+    from repro.serving.demo import synthetic_clients
+    trees = synthetic_clients(template, 3, mode="feddpa", seed=10,
+                              scale=0.05)
+    reg = AdapterRegistry(template, n_slots=2, mode="feddpa")
+    assert reg.has_local_A
+    for i, t in enumerate(trees):
+        reg.ingest(i, t)
+    s1 = reg.acquire(1, pin=False)
+    got = reg.gather(np.array([s1]))["adapters"]
+    flat_got = jax.tree_util.tree_flatten_with_path(got)[0]
+    flat_want = jax.tree_util.tree_flatten_with_path(
+        trees[1]["adapters"])[0]
+    checked_personal = checked_global = 0
+    for (path, g), (_, w) in zip(flat_got, flat_want):
+        names = [str(p.key) for p in path if hasattr(p, "key")]
+        if "personal" in names:
+            assert g.ndim == w.ndim + 1          # gained the per-row axis
+            np.testing.assert_array_equal(np.asarray(g)[:, 0],
+                                          np.asarray(w))
+            checked_personal += 1
+        elif "global" in names:
+            assert g.shape == w.shape            # shared: stored verbatim
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+            checked_global += 1
+    assert checked_personal and checked_global
+
+
+def test_registry_paired_tables_evict_and_pin_together(setup):
+    """The satellite invariant: one slot index addresses a client's A
+    AND B tables — eviction rewrites both, pinning protects both, and a
+    resident tenant's pair is never torn (A from one client, B from
+    another)."""
+    _, _, _, base, _ = setup
+    template = {"adapters": base}
+    from repro.serving.demo import synthetic_clients
+    trees = synthetic_clients(template, 4, mode="fedit", seed=12,
+                              scale=0.05)
+    reg = AdapterRegistry(template, n_slots=2, mode="fedit")
+    for i, t in enumerate(trees):
+        reg.ingest(i, t)
+
+    def assert_pair(slot, client):
+        got = reg.gather(np.array([slot]))["adapters"]
+        for name in ("A", "B"):
+            for g, w in zip(leaves_named(got, name),
+                            leaves_named(trees[client]["adapters"], name)):
+                np.testing.assert_array_equal(g[:, 0], w)
+
+    s0 = reg.acquire(0)                          # pinned
+    s1 = reg.acquire(1, pin=False)
+    assert_pair(s0, 0)
+    assert_pair(s1, 1)
+    # eviction may only take the unpinned slot, and must rewrite BOTH
+    # tables of that slot to the new client
+    s2 = reg.acquire(2, pin=False)
+    assert s2 == s1 and reg.evictions == 1
+    assert_pair(s2, 2)
+    assert_pair(s0, 0)                           # pinned pair untouched
+    # pinned slot blocks admission entirely (neither table is reusable)
+    reg.acquire(2)                               # pin the second slot too
+    with pytest.raises(RuntimeError, match="pinned"):
+        reg.acquire(3)
+    # one release frees the PAIR at once — the next admission owns both
+    reg.release(0)
+    s3 = reg.acquire(3, pin=False)
+    assert s3 == s0
+    assert_pair(s3, 3)
 
 
 def test_engine_rejects_mla_configs(setup):
@@ -228,3 +342,109 @@ def test_engine_rejects_oversized_requests(setup):
     eng = ServingEngine(cfg, params, acfg, reg, max_batch=2, max_seq=8)
     with pytest.raises(AssertionError):
         eng.submit(0, np.zeros(6, np.int32), max_new_tokens=4)
+
+
+# ---------------------------------------------------------------------------
+# Generic SGMV serving: mixed fleets + the sgmv lora_backend
+# ---------------------------------------------------------------------------
+
+def naive_tokens(cfg, acfg, params, ad, prompt, new_tokens, max_seq=16):
+    """Reference greedy decode for one client's personalized model."""
+    toks = jnp.asarray(np.asarray(prompt)[None].astype(np.int32))
+    logits, cache, _ = prefill(cfg, params, ad, acfg, toks, max_seq,
+                               cache_dtype=jnp.float32)
+    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    out = [int(tok[0, 0])]
+    for s in range(new_tokens - 1):
+        pos = jnp.full((1,), len(prompt) + s, jnp.int32)
+        logits, cache = decode_step(cfg, params, ad, acfg, tok, pos, cache)
+        tok = jnp.argmax(logits[:, 0], -1)[:, None].astype(jnp.int32)
+        out.append(int(tok[0, 0]))
+    return out
+
+
+@pytest.fixture(scope="module")
+def mixed_setup(setup):
+    """A mode-heterogeneous fleet: FedSA tenants (shared Ā) next to
+    FedIT tenants (personal A_i) in ONE fedit-packed registry."""
+    from repro.serving.demo import mixed_fleet
+    cfg, acfg, params, base, _ = setup
+    template = {"adapters": base}
+    trees, modes = mixed_fleet(template, 4, seed=21, scale=0.05)
+    assert set(modes) == {"fedsa", "fedit"}
+    # the fedsa tenants really do share the template's Ā while the
+    # fedit tenants own a personal A_i
+    for t, m in zip(trees, modes):
+        a_t = leaves_named(t["adapters"], "A")
+        a_0 = leaves_named(base, "A")
+        same = all(np.array_equal(x, y) for x, y in zip(a_t, a_0))
+        assert same == (m == "fedsa")
+    return cfg, acfg, params, template, trees, modes
+
+
+def run_mixed(mixed_setup, lora_backend, n_slots=3, new_tokens=5):
+    cfg, acfg, params, template, trees, modes = mixed_setup
+    reg = AdapterRegistry(template, n_slots=n_slots, mode="fedit")
+    for i, t in enumerate(trees):
+        reg.ingest(i, t)
+    eng = ServingEngine(cfg, params, acfg, reg, max_batch=3, max_seq=16,
+                        lora_backend=lora_backend)
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, cfg.vocab_size, 6) for _ in range(5)]
+    for i, p in enumerate(prompts):
+        eng.submit(i % len(trees), p, max_new_tokens=new_tokens)
+    rep = eng.run()
+    return eng, rep, prompts
+
+
+def test_mixed_fleet_token_parity_vs_per_client(mixed_setup):
+    """The tentpole invariant: a grouped batch mixing FedSA rows (shared
+    Ā) with FedIT rows (personal A_i) must produce EXACTLY the tokens
+    each tenant's personalized model produces alone, sequentially."""
+    cfg, acfg, params, _, trees, modes = mixed_setup
+    eng, rep, prompts = run_mixed(mixed_setup, "jnp")
+    assert rep["requests"] == 5
+    assert rep["registry_mode"] == "fedit"
+    assert 0.0 < rep["batch_occupancy"] <= 1.0
+    for rid, p in enumerate(prompts):
+        want = naive_tokens(cfg, acfg, params,
+                            trees[rid % len(trees)]["adapters"], p, 5)
+        assert eng.finished[rid]["tokens"].tolist() == want, \
+            (rid, modes[rid % len(trees)])
+
+
+def test_sgmv_backend_matches_jnp_engine(mixed_setup):
+    """lora_backend="sgmv" (fused per-row-A kernel on decode, bgmv fast
+    path where Ā is batch-global) must be token-identical to the grouped
+    jnp gather engine on the same mixed fleet."""
+    eng_jnp, _, _ = run_mixed(mixed_setup, "jnp")
+    eng_sgmv, rep, _ = run_mixed(mixed_setup, "sgmv")
+    assert rep["lora_backend"] == "sgmv"
+    for rid in eng_jnp.finished:
+        assert (eng_sgmv.finished[rid]["tokens"].tolist()
+                == eng_jnp.finished[rid]["tokens"].tolist()), rid
+
+
+def test_feddpa_engine_matches_per_client(setup):
+    """FedDPA tenants (dual adapters, personal pair per client) serve
+    through the same grouped loop: global pair shared, personal pair
+    gathered per row."""
+    cfg, _, params, _, _ = setup
+    acfg = AdapterConfig(mode="feddpa", rank=4)
+    base = init_adapters(KEY, cfg, acfg)
+    template = {"adapters": base}
+    from repro.serving.demo import synthetic_clients
+    trees = synthetic_clients(template, 3, mode="feddpa", seed=31,
+                              scale=0.05)
+    reg = AdapterRegistry(template, n_slots=2, mode="feddpa")
+    for i, t in enumerate(trees):
+        reg.ingest(i, t)
+    eng = ServingEngine(cfg, params, acfg, reg, max_batch=2, max_seq=16)
+    rng = np.random.default_rng(8)
+    prompts = [rng.integers(0, cfg.vocab_size, 5) for _ in range(3)]
+    for i, p in enumerate(prompts):
+        eng.submit(i, p, max_new_tokens=4)
+    eng.run()
+    for rid, p in enumerate(prompts):
+        want = naive_tokens(cfg, acfg, params, trees[rid]["adapters"], p, 4)
+        assert eng.finished[rid]["tokens"].tolist() == want, rid
