@@ -11,6 +11,9 @@ picks the gated metric:
   serving_sgmv        ``speedup_vs_perclient`` — grouped personal-A
                       serving vs the sequential per-client loop
                       (baseline ``BENCH_sgmv.json``)
+  serving_decode_fused ``speedup_vs_pertick`` — fused multi-tick decode
+                      at the gated tick count vs the per-tick engine
+                      (baseline ``BENCH_decode.json``)
 
 The gate fails (exit 1) when the fresh metric regresses:
 
@@ -69,6 +72,15 @@ _BENCHES = {
         # at 8 personal-A clients), relaxed for runner variance
         "floor": 1.2,
         "baseline": "BENCH_sgmv.json",
+    },
+    "serving_decode_fused": {
+        "metric": "speedup_vs_pertick",
+        "workload": _COMMON_KEYS + ("page_size", "ticks"),
+        # acceptance floor from ISSUE 5 (≥1.5× decode-only at T=8 over
+        # the per-tick engine), relaxed for runner variance — the fused
+        # loop's edge IS dispatch overhead, which shared runners vary
+        "floor": 1.2,
+        "baseline": "BENCH_decode.json",
     },
 }
 

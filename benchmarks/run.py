@@ -18,11 +18,11 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (fig2_similarity, nlg_generation, roofline,
-                            serving_refresh, serving_sgmv,
-                            serving_throughput, table1_accuracy,
-                            table2_comm, table3_heterogeneity,
-                            table4_clients, table5_rank,
-                            table10_compression)
+                            serving_decode_fused, serving_refresh,
+                            serving_sgmv, serving_throughput,
+                            table1_accuracy, table2_comm,
+                            table3_heterogeneity, table4_clients,
+                            table5_rank, table10_compression)
 
     q = args.quick
     suites = {
@@ -40,6 +40,9 @@ def main() -> None:
         "refresh": lambda: serving_refresh.main(
             requests=6 if q else 12, rounds=1 if q else 2),
         "sgmv": lambda: serving_sgmv.main(new_tokens=12 if q else 24),
+        "decode": lambda: serving_decode_fused.main(
+            new_tokens=12 if q else 24,
+            ticks=(1, 8) if q else (1, 4, 8, 16)),
     }
     only = set(args.only.split(",")) if args.only else set(suites)
     for name, fn in suites.items():

@@ -47,9 +47,12 @@ BENCH_PATH = pathlib.Path(__file__).resolve().parent.parent / \
 
 
 def run_engine(cfg, params, acfg, base, client_trees, prompts, new_tokens,
-               batch, max_seq, **engine_kw):
+               batch, max_seq, keep_engine=False, **engine_kw):
     """Warm-up pass (compiles), then the timed pass on the SAME engine —
-    jit caches live on the engine's wrapped functions."""
+    jit caches live on the engine's wrapped functions. With
+    ``keep_engine`` the report carries the engine under ``"_engine"``
+    (callers that need the finished-token map, e.g. the fused-decode
+    benchmark's parity check — pop it before serializing)."""
     reg = AdapterRegistry({"adapters": base}, n_slots=batch)
     for i, tr in enumerate(client_trees):
         reg.ingest(i, {"adapters": tr})
@@ -61,6 +64,8 @@ def run_engine(cfg, params, acfg, base, client_trees, prompts, new_tokens,
             engine.submit(i % len(client_trees), p,
                           max_new_tokens=new_tokens)
         rep = engine.run()
+    if keep_engine:
+        rep["_engine"] = engine
     return rep
 
 

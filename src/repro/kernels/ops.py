@@ -74,12 +74,13 @@ def ssd_scan_fused(dt, x, bm, c, A, *, bh=8, chunk=64, interpret=None):
 
 
 @functools.partial(jax.jit, static_argnames=("window", "interpret"))
-def paged_attention(q, k_pages, v_pages, block_tables, pos, *, window=None,
-                    interpret=None):
-    """Paged grouped decode attention (block-table gather in-kernel)."""
+def paged_attention(q, k_pages, v_pages, block_tables, pos, k_new=None,
+                    v_new=None, *, window=None, interpret=None):
+    """Paged grouped decode attention (block-table gather in-kernel;
+    optional in-kernel append of the current token's K/V row)."""
     interpret = _interpret_default() if interpret is None else interpret
-    return _paged(q, k_pages, v_pages, block_tables, pos, window=window,
-                  interpret=interpret)
+    return _paged(q, k_pages, v_pages, block_tables, pos, k_new, v_new,
+                  window=window, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bkv",

@@ -25,9 +25,19 @@ page ≥ 8 sublanes for f32 K/V. Pages wholly beyond the row's position
 (or wholly outside the sliding window) are skipped with ``pl.when`` —
 a row at depth t touches ceil((t+1)/page) pages, not P.
 
-The newest token's K/V is PRE-scattered into its page before the kernel
-call (``decode_step_paged`` commits rows post-scan); the kernel only
-ever reads pages, it never writes them.
+In-kernel new-token K/V append
+------------------------------
+With ``k_new``/``v_new`` given ((B, Hkv, hd), the current token's just-
+projected row), the kernel APPENDS the row before attending: the grid
+cell whose physical page holds position ``pos[b]`` overwrites offset
+``pos % page`` of its VMEM-resident K/V block with the new row prior to
+the score matmul. The HBM pools themselves stay read-only — the caller
+still commits all layers' rows with its one post-scan scatter per pool
+— but the stale/garbage slot in HBM is never attended and the pools no
+longer need a pre-call ``.at[phys, off].set`` copy per layer (the old
+pre-scatter path, retired). This is what lets ``decode_scan_paged`` run
+multiple decode ticks on-device: tick t's append is visible to tick t's
+attention in-kernel and to tick t+1's through the post-scan commit.
 
 Validation caveat
 -----------------
@@ -35,7 +45,7 @@ On this CPU container the kernel runs only in ``interpret=True`` mode
 (the Python body with the same block decomposition — what the
 kernel-vs-ref sweeps in ``tests/test_paged_attention.py`` exercise).
 Real-TPU block-shape limits, the scalar-prefetch index_map lowering,
-and in-kernel new-token K/V writes are unvalidated (ROADMAP "On-TPU
+and the in-kernel append select are unvalidated (ROADMAP "On-TPU
 kernel validation").
 """
 from __future__ import annotations
@@ -52,8 +62,12 @@ from repro.kernels.compat import CompilerParams
 NEG_INF = -1e30
 
 
-def _kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
-            acc_ref, *, page, npages, scale, window):
+def _kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, *rest, page, npages,
+            scale, window, append):
+    if append:
+        kn_ref, vn_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        o_ref, m_ref, l_ref, acc_ref = rest
     b = pl.program_id(0)
     p = pl.program_id(2)
 
@@ -74,6 +88,15 @@ def _kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
         q = q_ref[0, 0].astype(jnp.float32)          # (G, hd)
         k = k_ref[0, :, 0].astype(jnp.float32)       # (page, hd)
         v = v_ref[0, :, 0].astype(jnp.float32)
+        if append:
+            # in-kernel new-token append: the page holding pos gets the
+            # current row written over offset pos % page BEFORE the
+            # scores — the stale HBM slot is never attended (2-D iota:
+            # TPU has no 1-D iota)
+            sel = ((jax.lax.broadcasted_iota(jnp.int32, (page, 1), 0)
+                    == pos % page) & (p == pos // page))
+            k = jnp.where(sel, kn_ref[0, 0].astype(jnp.float32), k)
+            v = jnp.where(sel, vn_ref[0, 0].astype(jnp.float32), v)
         s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
         idx = base + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
         valid = idx <= pos
@@ -96,26 +119,39 @@ def _kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
                        / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
 
 
-def paged_attention(q, k_pages, v_pages, block_tables, pos, *, window=None,
-                    interpret=False):
+def paged_attention(q, k_pages, v_pages, block_tables, pos, k_new=None,
+                    v_new=None, *, window=None, interpret=False):
     """q: (B, H, hd); k_pages/v_pages: (n_pages, page, Hkv, hd);
     block_tables: (B, P) int32 physical page ids; pos: (B,) int32 index
-    of the newest (already written) token → (B, H, hd)."""
+    of the newest token → (B, H, hd).
+
+    Without ``k_new``/``v_new`` the row at ``pos`` must already live in
+    its page. With them ((B, Hkv, hd)) the kernel appends the row
+    in-kernel before attending (see module docstring) — the pools may
+    hold stale data at ``pos`` and are never copied.
+    """
     B, H, hd = q.shape
     page, Hkv = k_pages.shape[1], k_pages.shape[2]
     P = block_tables.shape[1]
     G = H // Hkv
+    append = k_new is not None
     qr = q.reshape(B, Hkv, G, hd)
     kv_spec = pl.BlockSpec((1, page, 1, hd),
                            lambda b, h, p, bt, ps: (bt[b, p], 0, h, 0))
+    in_specs = [
+        pl.BlockSpec((1, 1, G, hd), lambda b, h, p, bt, ps: (b, h, 0, 0)),
+        kv_spec,
+        kv_spec,
+    ]
+    operands = [qr, k_pages, v_pages]
+    if append:
+        new_spec = pl.BlockSpec((1, 1, hd), lambda b, h, p, bt, ps: (b, h, 0))
+        in_specs += [new_spec, new_spec]
+        operands += [k_new.astype(k_pages.dtype), v_new.astype(v_pages.dtype)]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, Hkv, P),
-        in_specs=[
-            pl.BlockSpec((1, 1, G, hd), lambda b, h, p, bt, ps: (b, h, 0, 0)),
-            kv_spec,
-            kv_spec,
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, G, hd),
                                lambda b, h, p, bt, ps: (b, h, 0, 0)),
         scratch_shapes=[pltpu.VMEM((G, 1), jnp.float32),
@@ -124,12 +160,11 @@ def paged_attention(q, k_pages, v_pages, block_tables, pos, *, window=None,
     )
     out = pl.pallas_call(
         functools.partial(_kernel, page=page, npages=P, scale=hd ** -0.5,
-                          window=window),
+                          window=window, append=append),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, Hkv, G, hd), q.dtype),
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(block_tables.astype(jnp.int32), pos.astype(jnp.int32),
-      qr, k_pages, v_pages)
+    )(block_tables.astype(jnp.int32), pos.astype(jnp.int32), *operands)
     return out.reshape(B, H, hd)

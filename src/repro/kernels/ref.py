@@ -44,13 +44,16 @@ def sgmv_ref(x, w, a_slots, b_slots, slot_ids, scaling):
     return (y + scaling * jnp.einsum("mr,mrn->mn", h, bsel)).astype(x.dtype)
 
 
-def paged_attention_ref(q, k_pages, v_pages, block_tables, pos, *,
-                        window=None):
+def paged_attention_ref(q, k_pages, v_pages, block_tables, pos, k_new=None,
+                        v_new=None, *, window=None):
     """Paged grouped decode attention: gather pages into a logical view,
     then masked softmax over positions <= pos (and inside the window).
 
     q: (B, H, hd); k_pages/v_pages: (n_pages, page, Hkv, hd);
     block_tables: (B, P) int32 physical page ids; pos: (B,) int32.
+    k_new/v_new ((B, Hkv, hd), optional): the current token's K/V row,
+    inserted into the logical view at ``pos`` before the softmax (the
+    in-kernel append path — pools may hold stale data at ``pos``).
     Returns (B, H, hd).
     """
     B, H, hd = q.shape
@@ -59,6 +62,10 @@ def paged_attention_ref(q, k_pages, v_pages, block_tables, pos, *,
     T = P * page
     k = k_pages[block_tables.reshape(-1)].reshape(B, T, Hkv, hd)
     v = v_pages[block_tables.reshape(-1)].reshape(B, T, Hkv, hd)
+    if k_new is not None:
+        bidx = jnp.arange(B)
+        k = k.at[bidx, pos].set(k_new.astype(k.dtype))
+        v = v.at[bidx, pos].set(v_new.astype(v.dtype))
     G = H // Hkv
     qg = q.reshape(B, Hkv, G, hd).astype(jnp.float32)
     s = jnp.einsum("bhgd,bshd->bhgs", qg,

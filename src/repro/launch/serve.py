@@ -6,6 +6,8 @@ or run a real batched decode on the host mesh.
   python -m repro.launch.serve --arch deepseek-7b --multi-tenant [--clients 8]
   python -m repro.launch.serve --arch deepseek-7b --multi-tenant \
       --fleet mixed --lora-backend sgmv
+  python -m repro.launch.serve --arch deepseek-7b --multi-tenant \
+      --decode-backend fused --decode-ticks 8
   python -m repro.launch.serve --arch deepseek-7b --live-refresh \
       [--train-rounds 4]
 """
@@ -65,7 +67,9 @@ def run_multi_tenant(args, acfg):
                            kv_layout=args.kv_layout,
                            page_size=args.page_size,
                            attn_backend=args.attn_backend,
-                           lora_backend=args.lora_backend)
+                           lora_backend=args.lora_backend,
+                           decode_backend=args.decode_backend,
+                           decode_ticks=args.decode_ticks)
     rng = np.random.default_rng(0)
     for r in range(args.requests):
         plen = int(rng.integers(4, 33))          # heterogeneous prompts
@@ -139,6 +143,13 @@ def main():
                     choices=["xla", "pallas"])
     ap.add_argument("--lora-backend", default="jnp",
                     choices=["jnp", "bgmv", "sgmv"])
+    ap.add_argument("--decode-backend", default="per-tick",
+                    choices=["per-tick", "fused"],
+                    help="fused runs up to --decode-ticks decode ticks "
+                         "inside one jitted scan (host syncs only at "
+                         "scan boundaries)")
+    ap.add_argument("--decode-ticks", type=int, default=8,
+                    help="max ticks per fused decode scan")
     ap.add_argument("--fleet", default="fedsa",
                     choices=["fedsa", "fedit", "feddpa", "mixed"],
                     help="tenant population for --multi-tenant: fedsa "

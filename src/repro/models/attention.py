@@ -168,8 +168,9 @@ def attn_decode_paged(cfg, p, ad, acfg, x, pos, k_pages, v_pages,
     Instead the xla backend inserts the new K/V row into the *gathered*
     logical view (numerically identical — pages are disjoint) and the
     caller commits all layers' rows with ONE post-scan scatter into the
-    (donated) pool. The pallas backend hands the kernel the same view
-    via pools updated locally for the read.
+    (donated) pool. The pallas backend passes the row to the kernel,
+    which appends it to the VMEM-resident page block before attending
+    (in-kernel append — no per-layer pool copy).
 
     Returns (y, k_row (B, Hkv, hd), v_row (B, Hkv, hd)).
     """
@@ -181,13 +182,8 @@ def attn_decode_paged(cfg, p, ad, acfg, x, pos, k_pages, v_pages,
     v_row = v[:, 0].astype(v_pages.dtype)
     if backend == "pallas":
         from repro.kernels import ops as kops
-        page = k_pages.shape[1]
-        phys = jnp.take_along_axis(block_tables, (pos // page)[:, None],
-                                   axis=1)[:, 0]
-        out = kops.paged_attention(q[:, 0],
-                                   k_pages.at[phys, pos % page].set(k_row),
-                                   v_pages.at[phys, pos % page].set(v_row),
-                                   block_tables, pos, window=window)
+        out = kops.paged_attention(q[:, 0], k_pages, v_pages, block_tables,
+                                   pos, k_row, v_row, window=window)
         out = out.reshape(B, 1, -1)
     else:
         bidx = jnp.arange(B)

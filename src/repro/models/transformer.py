@@ -11,6 +11,8 @@ Entry points
 ``loss_fn``        training loss (chunked CE + MoE aux + optional MTP)
 ``prefill``        full-sequence forward that also returns the decode cache
 ``decode_step``    one-token step against the cache
+``decode_scan``    fused multi-tick greedy decode (dense cache)
+``decode_scan_paged``  fused multi-tick greedy decode (paged cache)
 ``init_cache``     cache ShapeDtypeStruct-compatible zeros
 ``encode``         bidirectional encoder + classification head (RoBERTa path)
 """
@@ -425,29 +427,17 @@ def prefill_paged(cfg, params, adapters, acfg, tokens, lengths, cache,
     return logits, new_cache
 
 
-def decode_step_paged(cfg, params, adapters, acfg, token, pos, cache,
-                      block_tables, *, window=None, attn_backend="xla"):
-    """One decode step against the paged cache (``init_paged_cache``).
-
-    token: (B, 1) int32; pos: (B,); block_tables: (B, P') — P' may be a
-    prefix of the full table (the serving engine buckets it to the
-    longest active sequence so short batches never attend over max_seq).
-    Returns (logits (B, 1, V) f32, new cache).
-
-    The page pools ride the layer scan as READ-ONLY xs; each layer emits
-    its new K/V row and all rows are committed afterwards with one
-    scatter per pool — with the cache donated into the jitted step this
-    updates pages in place instead of rebuilding the pool every token.
-    """
+def _decode_rows_paged(cfg, params, adapters, acfg, token, pos, cache,
+                       block_tables, *, window=None, attn_backend="xla"):
+    """Shared per-tick core of the paged decode paths: embed → layer
+    scans (page pools ride as READ-ONLY xs) → logits, plus each
+    segment's new K/V rows (n, B, Hkv, hd), NOT yet committed to the
+    pools — callers commit with ``_commit_rows``."""
     vera_shared = maybe(adapters, "vera_shared") if adapters else None
     window = window if window is not None else cfg.sliding_window
     paged = {"block_tables": block_tables, "attn_backend": attn_backend}
     x = params["embed"][token]
-    page = cache[0]["k"].shape[2]
-    phys = jnp.take_along_axis(block_tables, (pos // page)[:, None],
-                               axis=1)[:, 0]
-    off = pos % page
-    new_caches = []
+    rows_out = []
     for i, seg in enumerate(segments(cfg)):
         sp = params["segments"][i]
         sad = _seg_adapters(adapters, i)
@@ -465,12 +455,137 @@ def decode_step_paged(cfg, params, adapters, acfg, token, pos, cache,
 
         xs = (sp, sad, cache[i]) if sad is not None else (sp, cache[i])
         x, rows = jax.lax.scan(body, x, xs)     # rows: (n, B, Hkv, hd)
-        new_caches.append(
-            {"k": cache[i]["k"].at[:, phys, off].set(rows["k"]),
-             "v": cache[i]["v"].at[:, phys, off].set(rows["v"])})
+        rows_out.append(rows)
     x = rms_norm(x, params["ln_f"], cfg.norm_eps)
     logits = x @ head_weight(cfg, params)
-    return logits.astype(jnp.float32), new_caches
+    return logits.astype(jnp.float32), rows_out
+
+
+def _commit_rows(cache, rows, block_tables, pos, write_mask=None):
+    """Commit every segment's new K/V rows into the pools: one scatter
+    per pool at (physical page of pos, pos % page). ``write_mask``
+    ((B,) bool, optional) redirects masked-off rows to the write-off
+    page 0 at offset 0 — finished/idle rows of a fused scan stop
+    writing real pages (the write-off absorbs them harmlessly)."""
+    page = cache[0]["k"].shape[2]
+    phys = jnp.take_along_axis(block_tables, (pos // page)[:, None],
+                               axis=1)[:, 0]
+    off = pos % page
+    if write_mask is not None:
+        phys = jnp.where(write_mask, phys, 0)
+        off = jnp.where(write_mask, off, 0)
+    return [{"k": e["k"].at[:, phys, off].set(r["k"]),
+             "v": e["v"].at[:, phys, off].set(r["v"])}
+            for e, r in zip(cache, rows)]
+
+
+def decode_step_paged(cfg, params, adapters, acfg, token, pos, cache,
+                      block_tables, *, window=None, attn_backend="xla"):
+    """One decode step against the paged cache (``init_paged_cache``).
+
+    token: (B, 1) int32; pos: (B,); block_tables: (B, P') — P' may be a
+    prefix of the full table (the serving engine buckets it to the
+    longest active sequence so short batches never attend over max_seq).
+    Returns (logits (B, 1, V) f32, new cache).
+
+    The page pools ride the layer scan as READ-ONLY xs; each layer emits
+    its new K/V row and all rows are committed afterwards with one
+    scatter per pool — with the cache donated into the jitted step this
+    updates pages in place instead of rebuilding the pool every token.
+    """
+    logits, rows = _decode_rows_paged(cfg, params, adapters, acfg, token,
+                                      pos, cache, block_tables,
+                                      window=window,
+                                      attn_backend=attn_backend)
+    return logits, _commit_rows(cache, rows, block_tables, pos)
+
+
+def _advance_tick(logits, token, pos, budget, active, eos_id, pad_id):
+    """Shared tick epilogue of the fused scan twins (paged and dense —
+    one definition, so the paired paths cannot drift): greedy-sample,
+    pad finished rows, decrement budgets (EOS zeroes a row's budget
+    AFTER its token counts), freeze finished rows' token/pos carry.
+    Returns (token, pos, budget, emitted)."""
+    nxt = jnp.argmax(logits[:, 0], -1).astype(jnp.int32)
+    emitted = jnp.where(active, nxt, jnp.int32(pad_id))
+    budget = jnp.maximum(budget - active.astype(budget.dtype), 0)
+    if eos_id is not None:
+        budget = jnp.where(active & (emitted == eos_id), 0, budget)
+    token = jnp.where(active[:, None], nxt[:, None], token)
+    pos = pos + active.astype(pos.dtype)
+    return token, pos, budget, emitted
+
+
+def decode_scan_paged(cfg, params, adapters, acfg, token, pos, budget,
+                      cache, block_tables, *, n_ticks, eos_id=None,
+                      pad_id=0, window=None, attn_backend="xla"):
+    """Up to ``n_ticks`` greedy decode ticks fused into ONE ``lax.scan``
+    — token sampling, position advance, and the page-pool commit all
+    stay on device, so the host pays one dispatch (and one sync) per
+    n_ticks tokens instead of per token.
+
+    token: (B, 1) int32 last sampled token per row; pos: (B,) next cache
+    write position; budget: (B,) int32 decode tokens each row may still
+    emit (0 = finished or idle row). Per tick, rows with budget > 0
+    decode one token; the commit moves INSIDE the loop so K/V written at
+    tick t is attended at tick t+1 (tick t itself sees the row through
+    the in-attention append). Finished rows emit ``pad_id``, freeze
+    their token/pos carry, and redirect their pool writes to the
+    write-off page; emitting ``eos_id`` zeroes the row's budget after
+    the token counts. ``block_tables`` must cover the deepest position
+    any row can reach within the window (the engine buckets them to
+    max over rows of pos + min(n_ticks, budget)).
+
+    Returns (tokens (n_ticks, B) int32, token, pos, budget, cache) —
+    the trailing carries re-enter the next fused scan unchanged.
+    """
+    def tick(carry, _):
+        token, pos, budget, cache = carry
+        active = budget > 0
+        logits, rows = _decode_rows_paged(cfg, params, adapters, acfg,
+                                          token, pos, cache, block_tables,
+                                          window=window,
+                                          attn_backend=attn_backend)
+        cache = _commit_rows(cache, rows, block_tables, pos,
+                             write_mask=active)
+        token, pos, budget, emitted = _advance_tick(
+            logits, token, pos, budget, active, eos_id, pad_id)
+        return (token, pos, budget, cache), emitted
+
+    (token, pos, budget, cache), toks = jax.lax.scan(
+        tick, (token, pos, budget, cache), None, length=n_ticks)
+    return toks, token, pos, budget, cache
+
+
+def _mask_cache_rows(new, old, keep):
+    """Per-row cache select: keep[b] picks new vs old along the batch
+    axis (axis 1 on every non-hybrid cache leaf)."""
+    def one(n, o):
+        shape = (1, keep.shape[0]) + (1,) * (n.ndim - 2)
+        return jnp.where(keep.reshape(shape), n, o)
+    return jax.tree_util.tree_map(one, new, old)
+
+
+def decode_scan(cfg, params, adapters, acfg, token, pos, budget, cache, *,
+                n_ticks, eos_id=None, pad_id=0, window=None):
+    """Dense-layout fused multi-tick decode (``decode_scan_paged``'s
+    fallback twin, same contract): up to ``n_ticks`` greedy ticks in one
+    ``lax.scan`` against the ``init_cache`` layout. Finished rows emit
+    ``pad_id`` and keep their cache rows untouched (a per-row select —
+    the dense cache has no write-off page to redirect into)."""
+    def tick(carry, _):
+        token, pos, budget, cache = carry
+        active = budget > 0
+        logits, stepped = decode_step(cfg, params, adapters, acfg, token,
+                                      pos, cache, window=window)
+        cache = _mask_cache_rows(stepped, cache, active)
+        token, pos, budget, emitted = _advance_tick(
+            logits, token, pos, budget, active, eos_id, pad_id)
+        return (token, pos, budget, cache), emitted
+
+    (token, pos, budget, cache), toks = jax.lax.scan(
+        tick, (token, pos, budget, cache), None, length=n_ticks)
+    return toks, token, pos, budget, cache
 
 
 def _fill_cache(cfg, empty, built, seq_len):

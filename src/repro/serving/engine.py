@@ -42,6 +42,16 @@ Backends (``attn_backend``-style config, jnp fallbacks always available):
                     matmul, BOTH matrices per row — personal-A
                     registries and mixed fleets; batches whose gathered
                     A is batch-global take the bgmv fast path)
+  ``decode_backend`` "per-tick" (one jitted decode step, one host sync
+                    per generated token) | "fused" (up to
+                    ``decode_ticks`` ticks inside ONE jitted
+                    ``lax.scan`` — sampling, position advance, per-row
+                    budget/EOS masking, and the page commit stay on
+                    device; host sync — retire, admit/prefill, feed
+                    drain, deferred flips — happens only at scan
+                    boundaries, so versioned-gather token parity is
+                    preserved: a row's (slot, buf) is loop-invariant
+                    between syncs)
 
 The registry decides WHAT is per-tenant (B only under FedSA; A and B
 under fedit/feddpa packing — see ``repro.serving.registry``); the
@@ -59,7 +69,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.common import grouped_lora_backend
-from repro.models.transformer import (decode_step, decode_step_paged,
+from repro.models.transformer import (decode_scan, decode_scan_paged,
+                                      decode_step, decode_step_paged,
                                       init_cache, init_paged_cache,
                                       paged_unsupported_reason, prefill,
                                       prefill_paged, segments)
@@ -82,7 +93,8 @@ class ServingEngine:
     def __init__(self, cfg, params, acfg, registry, *, max_batch=8,
                  max_seq=64, cache_dtype=jnp.float32, kv_layout="auto",
                  page_size=16, n_pages=None, attn_backend="xla",
-                 lora_backend="jnp", feed=None):
+                 lora_backend="jnp", decode_backend="per-tick",
+                 decode_ticks=8, eos_id=None, feed=None):
         if cfg.family == "hybrid":
             raise NotImplementedError(
                 "hybrid cache layout (inner axis before batch) not wired")
@@ -100,6 +112,8 @@ class ServingEngine:
         assert kv_layout in ("paged", "dense"), kv_layout
         assert attn_backend in ("xla", "pallas"), attn_backend
         assert lora_backend in ("jnp", "bgmv", "sgmv"), lora_backend
+        assert decode_backend in ("per-tick", "fused"), decode_backend
+        assert decode_ticks >= 1, decode_ticks
         self.versioned = getattr(registry, "versioned", False)
         if feed is not None and not self.versioned:
             raise ValueError("an adapter feed needs a double-buffered "
@@ -110,6 +124,9 @@ class ServingEngine:
         self.max_batch, self.max_seq = max_batch, max_seq
         self.kv_layout = kv_layout
         self.attn_backend, self.lora_backend = attn_backend, lora_backend
+        self.decode_backend = decode_backend
+        self.decode_ticks = decode_ticks
+        self.eos_id = eos_id
 
         if kv_layout == "paged":
             self.page_size = page_size
@@ -186,6 +203,29 @@ class ServingEngine:
                     attn_backend=engine.attn_backend)
             return jnp.argmax(logits[:, 0], -1).astype(jnp.int32), cache
 
+        # fused multi-tick scans: the adapter gather hoists OUT of the
+        # tick loop (slot/buf ids are loop-invariant between host syncs,
+        # so bgmv/sgmv see exactly the per-tick operands), n_ticks is a
+        # static arg (one compiled variant per pow2 tick count)
+        def _decode_scan_dense_fn(tables, slots, bufs, toks, pos, budget,
+                                  cache, n_ticks):
+            engine.decode_retraces += 1
+            ad = _gather(tables, slots, bufs)
+            with grouped_lora_backend(engine.lora_backend):
+                return decode_scan(cfg, params, ad, acfg, toks, pos,
+                                   budget, cache, n_ticks=n_ticks,
+                                   eos_id=engine.eos_id)
+
+        def _decode_scan_paged_fn(tables, slots, bufs, toks, pos, budget,
+                                  bts, cache, n_ticks):
+            engine.decode_retraces += 1
+            ad = _gather(tables, slots, bufs)
+            with grouped_lora_backend(engine.lora_backend):
+                return decode_scan_paged(
+                    cfg, params, ad, acfg, toks, pos, budget, cache, bts,
+                    n_ticks=n_ticks, eos_id=engine.eos_id,
+                    attn_backend=engine.attn_backend)
+
         # paged prefill retraces per (group, bucket) pair; decode per page
         # bucket — both O(log) families. The dense fallback retraces per
         # distinct prompt length and compiles decode once.
@@ -196,9 +236,15 @@ class ServingEngine:
         if kv_layout == "paged":
             self._prefill = jax.jit(_prefill_paged_fn, donate_argnums=(6,))
             self._decode = jax.jit(_decode_paged_fn, donate_argnums=(6,))
+            self._decode_scan = jax.jit(_decode_scan_paged_fn,
+                                        static_argnums=(8,),
+                                        donate_argnums=(7,))
         else:
             self._prefill = jax.jit(_prefill_dense_fn)
             self._decode = jax.jit(_decode_dense_fn, donate_argnums=(5,))
+            self._decode_scan = jax.jit(_decode_scan_dense_fn,
+                                        static_argnums=(7,),
+                                        donate_argnums=(6,))
             self._scatter = jax.jit(_scatter_row, donate_argnums=(0,))
 
     def reset_stats(self):
@@ -207,6 +253,10 @@ class ServingEngine:
         self.finished = {}
         self.decoded_tokens = self.prefill_tokens = self.decode_steps = 0
         self.prefilled_requests = self.prefill_batch_count = 0
+        self.host_syncs = 0             # steps that ran a decode phase
+        self.fused_scans = self.fused_ticks = 0
+        self.fused_tick_shrinks = 0
+        self._pages_window_reserved = self._pages_window_used = 0
         self._occ_sum = 0.0
         self._page_util_sum = 0.0
         self._pool_occ_sum = 0.0
@@ -232,9 +282,12 @@ class ServingEngine:
     # -- serving loop -------------------------------------------------------
     def step(self):
         """One scheduler tick: refresh adapters, admit/prefill new
-        requests, decode one token for every active row, refresh again
-        (flips unblock between the decode tick and retirement), retire
-        finished sequences."""
+        requests, decode — ONE token per active row under the per-tick
+        backend, up to ``decode_ticks`` tokens in one fused on-device
+        scan under the fused backend — refresh again (flips unblock
+        between the decode phase and retirement), retire finished
+        sequences. Either way this is exactly one host sync: all
+        scheduler/registry bookkeeping lives at step boundaries."""
         if self._t0 is None:
             self._t0 = time.perf_counter()
         # publishes that unblocked at the last tick's retirement commit
@@ -251,40 +304,136 @@ class ServingEngine:
             jax.block_until_ready(self.cache)
         self._retire_done()
         if self.scheduler.active:
+            self.host_syncs += 1
             t0 = time.perf_counter()
-            if self.kv_layout == "paged":
-                out = self._decode_paged_step()
+            if self.decode_backend == "fused":
+                self._decode_fused_phase()
             else:
-                out, self.cache = self._decode(
-                    self.registry.tables, jnp.asarray(self._slots),
-                    jnp.asarray(self._bufs), jnp.asarray(self._toks),
-                    jnp.asarray(self._pos), self.cache)
-                out = np.asarray(out)
+                self._decode_per_tick_phase()
             self._decode_wall += time.perf_counter() - t0
-            for row, seq in list(self.scheduler.active.items()):
-                tok = int(out[row])
-                seq.generated.append(tok)
-                seq.pos += 1
-                self._toks[row, 0] = tok
-                self._pos[row] = seq.pos
-                self.decoded_tokens += 1
-                stale = self.registry.version - seq.version
-                self._stale_sum += stale
-                self._stale_rows += 1
-                self._stale_max = max(self._stale_max, stale)
-                cid = seq.request.client_id
-                self._tenant_stale[cid] = max(
-                    self._tenant_stale.get(cid, 0), stale)
-            self.decode_steps += 1
-            self._occ_sum += self.scheduler.occupancy
-            if self.pool is not None:
-                used = self.pool.used_count
-                held = sum(s.pos + 1 for s in self.scheduler.active.values())
-                self._page_util_sum += (held / (used * self.page_size)
-                                        if used else 0.0)
-                self._pool_occ_sum += used / self.pool.capacity
             self._refresh()
             self._retire_done()
+
+    def _account_token(self, seq, tok):
+        """Book one decoded token on its sequence + staleness stats.
+        Returns True when the token ends the sequence early (eos)."""
+        seq.generated.append(tok)
+        seq.pos += 1
+        self.decoded_tokens += 1
+        stale = self.registry.version - seq.version
+        self._stale_sum += stale
+        self._stale_rows += 1
+        self._stale_max = max(self._stale_max, stale)
+        cid = seq.request.client_id
+        self._tenant_stale[cid] = max(self._tenant_stale.get(cid, 0), stale)
+        if self.eos_id is not None and tok == self.eos_id:
+            seq.finished = True
+            return True
+        return False
+
+    def _tick_pool_stats(self, ticks=1):
+        self._occ_sum += self.scheduler.occupancy * ticks
+        if self.pool is not None:
+            used = self.pool.used_count
+            held = sum(s.pos + 1 for s in self.scheduler.active.values())
+            self._page_util_sum += (held / (used * self.page_size)
+                                    if used else 0.0) * ticks
+            self._pool_occ_sum += used / self.pool.capacity * ticks
+
+    def _decode_per_tick_phase(self):
+        """One grouped decode step + host bookkeeping for every row."""
+        if self.kv_layout == "paged":
+            out = self._decode_paged_step()
+        else:
+            out, self.cache = self._decode(
+                self.registry.tables, jnp.asarray(self._slots),
+                jnp.asarray(self._bufs), jnp.asarray(self._toks),
+                jnp.asarray(self._pos), self.cache)
+            out = np.asarray(out)
+        for row, seq in list(self.scheduler.active.items()):
+            tok = int(out[row])
+            self._account_token(seq, tok)
+            self._toks[row, 0] = tok
+            self._pos[row] = seq.pos
+        self.decode_steps += 1
+        self._tick_pool_stats()
+
+    def _decode_fused_phase(self):
+        """Fused phase: one jitted ``decode_scan[_paged]`` runs T ticks
+        on device; the host walks the (T, B) token block afterwards,
+        mirroring the device's budget/EOS masking exactly (a finished
+        row's later pad emissions are never booked)."""
+        active = self.scheduler.active
+        budgets = np.zeros((self.max_batch,), np.int32)
+        for row, seq in active.items():
+            budgets[row] = seq.budget
+        T = self._plan_ticks(budgets)
+        self.fused_scans += 1
+        self.fused_ticks += T
+        if self.pool is not None:
+            self._pages_window_reserved += sum(
+                self.pool.pages_needed(s.pos + min(T, s.budget))
+                - self.pool.pages_needed(s.pos) for s in active.values())
+        pos_before = {row: s.pos for row, s in active.items()}
+        if self.kv_layout == "paged":
+            # bucket the table to the deepest position any row can
+            # REACH inside the window (per-tick buckets max_pos + 1)
+            max_need = max(s.pos + min(T, s.budget)
+                           for s in active.values())
+            npg = self._bucketed_npages(max_need)
+            bts = jnp.asarray(self.scheduler.block_tables[:, :npg])
+            out, _, _, _, self.cache = self._decode_scan(
+                self.registry.tables, jnp.asarray(self._slots),
+                jnp.asarray(self._bufs), jnp.asarray(self._toks),
+                jnp.asarray(self._pos), jnp.asarray(budgets), bts,
+                self.cache, T)
+        else:
+            out, _, _, _, self.cache = self._decode_scan(
+                self.registry.tables, jnp.asarray(self._slots),
+                jnp.asarray(self._bufs), jnp.asarray(self._toks),
+                jnp.asarray(self._pos), jnp.asarray(budgets),
+                self.cache, T)
+        out = np.asarray(out)                        # (T, B)
+        for row, seq in list(active.items()):
+            remaining = int(budgets[row])
+            for t in range(T):
+                if remaining <= 0:
+                    break
+                remaining -= 1
+                if self._account_token(seq, int(out[t, row])):
+                    remaining = 0                    # eos: budget zeroed
+            self._toks[row, 0] = seq.generated[-1]
+            self._pos[row] = seq.pos
+            if self.pool is not None:
+                self._pages_window_used += (
+                    self.pool.pages_needed(seq.pos)
+                    - self.pool.pages_needed(pos_before[row]))
+        self.decode_steps += T
+        self._tick_pool_stats(ticks=T)
+
+    def _plan_ticks(self, budgets):
+        """Ticks for this fused scan: the configured ``decode_ticks``,
+        clamped to the deepest remaining per-row budget (an all-finished
+        tail tick would be pure waste), floored to a power of two so the
+        scan compiles O(log decode_ticks) variants, then shrunk while
+        any row's page reservation cannot cover its tick window (spill —
+        cannot trigger under the pool's reserve-on-admit policy, which
+        pre-reserves the whole sequence; kept as the guard the fused
+        phase's write safety actually rests on)."""
+        T = min(self.decode_ticks, int(budgets.max()))
+        T = max(1, 1 << (T.bit_length() - 1))        # pow2 floor
+        if self.pool is not None:
+            while T > 1 and not self._window_covered(T):
+                T >>= 1
+                self.fused_tick_shrinks += 1
+        return T
+
+    def _window_covered(self, T):
+        """Every active row's page reservation covers the positions its
+        min(T, budget)-token window can write."""
+        return all(
+            self.pool.pages_needed(s.pos + min(T, s.budget)) <= len(s.pages)
+            for s in self.scheduler.active.values())
 
     def _refresh(self):
         """Refresh phase of the live train→serve bridge: drain the
@@ -339,6 +488,8 @@ class ServingEngine:
 
     def _account_prefill(self, seq, first_token):
         seq.generated.append(first_token)
+        if self.eos_id is not None and first_token == self.eos_id:
+            seq.finished = True          # eos straight out of prefill
         self.prefill_tokens += len(seq.request.prompt)
         self.prefilled_requests += 1
         self._toks[seq.row, 0] = first_token
@@ -360,15 +511,21 @@ class ServingEngine:
                 return 3 * b // 2
             b *= 2
 
+    def _bucketed_npages(self, n_tokens):
+        """Block-table width for a batch whose deepest row attends
+        ``n_tokens`` positions: the ladder bucket, capped at the pages
+        max_seq actually needs (the bucket of a non-pow2 max_seq would
+        overshoot the dense layout). One definition — the per-tick and
+        fused trace keys must bucket identically."""
+        return min(-(-self.max_seq // self.page_size),
+                   self._page_bucket(self.pool.pages_needed(n_tokens)))
+
     def _decode_paged_step(self):
         """Grouped decode through the block table, truncated to the page
         bucket covering the deepest active row (so short batches attend
         over a fraction of max_seq; bounded retraces)."""
         max_pos = max(s.pos for s in self.scheduler.active.values())
-        # ladder bucket, capped at the pages max_seq actually needs (the
-        # bucket of a non-pow2 max_seq would overshoot the dense layout)
-        npg = min(-(-self.max_seq // self.page_size),
-                  self._page_bucket(self.pool.pages_needed(max_pos + 1)))
+        npg = self._bucketed_npages(max_pos + 1)
         bts = jnp.asarray(self.scheduler.block_tables[:, :npg])
         out, self.cache = self._decode(
             self.registry.tables, jnp.asarray(self._slots),
@@ -420,6 +577,20 @@ class ServingEngine:
             "prefill_batches": self.prefill_batch_count,
             "prefill_retraces": self.prefill_retraces,
             "decode_retraces": self.decode_retraces,
+            # fused-loop observability: how often the host had to sync
+            # per generated token (1.0 under per-tick; ~1/T fused), how
+            # many ticks each fused scan actually ran, and how the
+            # T-tick page windows compared to what the scans wrote
+            "host_syncs": self.host_syncs,
+            "host_syncs_per_token": (self.host_syncs / self.decoded_tokens
+                                     if self.decoded_tokens else
+                                     float("nan")),
+            "fused_scans": self.fused_scans,
+            "fused_ticks_mean": (self.fused_ticks / self.fused_scans
+                                 if self.fused_scans else 0.0),
+            "fused_tick_shrinks": self.fused_tick_shrinks,
+            "pages_window_reserved": self._pages_window_reserved,
+            "pages_window_used": self._pages_window_used,
             "batch_occupancy": self._occ_sum / steps if steps else 0.0,
             "page_utilization": (self._page_util_sum / steps
                                  if steps and self.pool is not None else
@@ -431,6 +602,9 @@ class ServingEngine:
             "kv_layout": self.kv_layout,
             "lora_backend": self.lora_backend,
             "attn_backend": self.attn_backend,
+            "decode_backend": self.decode_backend,
+            "decode_ticks": (self.decode_ticks
+                             if self.decode_backend == "fused" else 1),
             "registry_mode": getattr(self.registry, "mode", "fedsa"),
             # live refresh (versioned registry; zeros on plain engines)
             "adapter_version": getattr(self.registry, "version", 0),

@@ -109,10 +109,17 @@ class Sequence:
     pages: list = dataclasses.field(default_factory=list)
     buf: int = 0                       # registry buffer at admission
     version: int = 0                   # adapter round at admission
+    finished: bool = False             # early stop (engine saw eos_id)
+
+    @property
+    def budget(self):
+        """Decode tokens this row may still emit."""
+        return (0 if self.finished
+                else self.request.max_new_tokens - len(self.generated))
 
     @property
     def done(self):
-        return len(self.generated) >= self.request.max_new_tokens
+        return self.budget <= 0
 
 
 class Scheduler:

@@ -1,0 +1,206 @@
+"""Fused on-device multi-tick decode (``decode_backend="fused"``): exact
+token parity with the per-tick engine across layouts and backends,
+per-row budget/EOS masking, and the fused-phase page-window planning."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import AdapterConfig, get_config, reduced
+from repro.core.adapters import init_adapters
+from repro.models.transformer import init_model
+from repro.serving import AdapterRegistry, ServingEngine
+from repro.serving.demo import mixed_fleet, synthetic_clients
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced(get_config("deepseek-7b"), n_layers=2, d_model=64)
+    acfg = AdapterConfig(mode="fedsa", rank=4)
+    params = init_model(KEY, cfg, jnp.float32)
+    base = init_adapters(KEY, cfg, acfg)
+    trees = [t["adapters"] for t in
+             synthetic_clients({"adapters": base}, 5, seed=50, scale=0.05)]
+    return cfg, acfg, params, base, trees
+
+
+def make_engine(setup, **kw):
+    cfg, acfg, params, base, trees = setup
+    reg = AdapterRegistry({"adapters": base}, n_slots=kw.pop("n_slots", 2))
+    for i, t in enumerate(trees):
+        reg.ingest(i, {"adapters": t})
+    return ServingEngine(cfg, params, acfg, reg, **kw)
+
+
+def serve(eng, prompts, *, n_clients=3, new_tokens=7):
+    for i, p in enumerate(prompts):
+        eng.submit(i % n_clients, p, max_new_tokens=new_tokens)
+    rep = eng.run()
+    return rep, {r: eng.finished[r]["tokens"].tolist() for r in eng.finished}
+
+
+HETERO = [6, 13, 4, 9, 17, 6, 11, 3]
+
+
+def hetero_prompts(cfg, lens=HETERO, seed=1):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, int(n)) for n in lens]
+
+
+# ---------------------------------------------------------------------------
+# token parity: fused scan vs per-tick, across layouts / tick counts
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("layout", ["paged", "dense"])
+@pytest.mark.parametrize("ticks", [1, 4, 8])
+def test_fused_vs_pertick_token_parity(setup, layout, ticks):
+    """The tentpole invariant: moving the decode loop on-device (budget
+    masking, in-loop page commit, scan-hoisted gather) must not change a
+    single token — heterogeneous prompts, eviction churn, row refill
+    mid-stream included."""
+    cfg = setup[0]
+    prompts = hetero_prompts(cfg)
+    _, want = serve(make_engine(setup, max_batch=2, max_seq=32,
+                                kv_layout=layout, page_size=8), prompts)
+    rep, got = serve(make_engine(setup, max_batch=2, max_seq=32,
+                                 kv_layout=layout, page_size=8,
+                                 decode_backend="fused",
+                                 decode_ticks=ticks), prompts)
+    assert got == want
+    assert rep["decode_backend"] == "fused"
+    assert rep["requests"] == len(prompts)
+
+
+def test_fused_pallas_attn_parity(setup):
+    """attn_backend="pallas" inside the fused scan: the kernel's
+    in-kernel K/V append replaces the per-layer pool pre-scatter —
+    tokens must not change."""
+    cfg = setup[0]
+    prompts = hetero_prompts(cfg, lens=[6, 13, 4, 9])
+    _, want = serve(make_engine(setup, max_batch=2, max_seq=32,
+                                kv_layout="paged", page_size=8), prompts)
+    _, got = serve(make_engine(setup, max_batch=2, max_seq=32,
+                               kv_layout="paged", page_size=8,
+                               attn_backend="pallas",
+                               decode_backend="fused", decode_ticks=4),
+                   prompts)
+    assert got == want
+
+
+def test_fused_bgmv_lora_parity(setup):
+    """The bgmv gather works inside the scan: slot/buf ids are
+    loop-invariant between syncs, the gather hoists out of the ticks."""
+    cfg = setup[0]
+    prompts = hetero_prompts(cfg, lens=[6, 13, 4, 9])
+    _, want = serve(make_engine(setup, max_batch=2, max_seq=32,
+                                kv_layout="paged", page_size=8), prompts)
+    for layout in ("paged", "dense"):
+        _, got = serve(make_engine(setup, max_batch=2, max_seq=32,
+                                   kv_layout=layout, page_size=8,
+                                   lora_backend="bgmv",
+                                   decode_backend="fused", decode_ticks=4),
+                       prompts)
+        assert got == want, layout
+
+
+def test_fused_sgmv_mixed_fleet_parity(setup):
+    """The sgmv gather (per-row A_i) works inside the scan: a mixed
+    FedSA+FedIT fleet decodes fused, token-identical to the per-tick
+    jnp engine."""
+    cfg, acfg, params, base, _ = setup
+    template = {"adapters": base}
+    trees, modes = mixed_fleet(template, 4, seed=21, scale=0.05)
+
+    def run(lora_backend, **kw):
+        reg = AdapterRegistry(template, n_slots=3, mode="fedit")
+        for i, t in enumerate(trees):
+            reg.ingest(i, t)
+        eng = ServingEngine(cfg, params, acfg, reg, max_batch=3,
+                            max_seq=16, lora_backend=lora_backend, **kw)
+        rng = np.random.default_rng(7)
+        prompts = [rng.integers(0, cfg.vocab_size, 6) for _ in range(5)]
+        for i, p in enumerate(prompts):
+            eng.submit(i % len(trees), p, max_new_tokens=5)
+        eng.run()
+        return {r: eng.finished[r]["tokens"].tolist() for r in eng.finished}
+
+    want = run("jnp")
+    got = run("sgmv", decode_backend="fused", decode_ticks=4)
+    assert got == want
+
+
+# ---------------------------------------------------------------------------
+# per-row EOS / budget masking
+# ---------------------------------------------------------------------------
+
+def test_eos_truncates_identically_on_both_backends(setup):
+    """A row emitting eos_id stops mid-window on device (budget zeroed
+    after the token counts) exactly as the per-tick engine stops at its
+    sync — and other rows in the batch are unaffected."""
+    cfg = setup[0]
+    prompts = hetero_prompts(cfg)
+    _, base_toks = serve(make_engine(setup, max_batch=2, max_seq=32,
+                                     kv_layout="paged", page_size=8),
+                         prompts)
+    eos = base_toks[1][2]                # a token request 1 emits mid-run
+    _, want = serve(make_engine(setup, max_batch=2, max_seq=32,
+                                kv_layout="paged", page_size=8,
+                                eos_id=eos), prompts)
+    assert want[1][-1] == eos and len(want[1]) < len(base_toks[1])
+    for layout in ("paged", "dense"):
+        rep, got = serve(make_engine(setup, max_batch=2, max_seq=32,
+                                     kv_layout=layout, page_size=8,
+                                     eos_id=eos, decode_backend="fused",
+                                     decode_ticks=8), prompts)
+        assert got == want, layout
+        # pad emissions of the finished row are never booked
+        assert rep["decode_tokens"] == sum(len(v) for v in got.values()) \
+            - len(got)
+
+
+def test_fused_budgets_never_overrun(setup):
+    """max_new_tokens is enforced per row inside the window: rows with
+    different budgets share one scan and none overruns between syncs."""
+    cfg = setup[0]
+    rng = np.random.default_rng(5)
+    eng = make_engine(setup, max_batch=4, max_seq=32, kv_layout="paged",
+                      page_size=8, decode_backend="fused", decode_ticks=8)
+    budgets = [2, 9, 5, 16]
+    for i, b in enumerate(budgets):
+        eng.submit(i % 3, rng.integers(0, cfg.vocab_size, 6),
+                   max_new_tokens=b)
+    eng.run()
+    for rid, b in enumerate(budgets):
+        assert len(eng.finished[rid]["tokens"]) == b, rid
+
+
+# ---------------------------------------------------------------------------
+# fused-phase planning
+# ---------------------------------------------------------------------------
+
+def test_plan_ticks_pow2_floor_and_budget_clamp(setup):
+    eng = make_engine(setup, max_batch=2, max_seq=32, kv_layout="paged",
+                      page_size=8, decode_backend="fused", decode_ticks=8)
+    for budgets, want in (([5, 1], 4), ([8, 8], 8), ([1, 1], 1),
+                          ([3, 0], 2), ([16, 2], 8)):
+        got = eng._plan_ticks(np.asarray(budgets, np.int32))
+        assert got == want, (budgets, got)
+
+
+def test_plan_ticks_shrinks_on_page_spill(setup):
+    """Spill → shrink T: if a row's reservation cannot cover its tick
+    window (forced here by shrinking the reservation under the
+    scheduler), the batch's T halves until every window fits."""
+    cfg = setup[0]
+    eng = make_engine(setup, max_batch=2, max_seq=32, kv_layout="paged",
+                      page_size=8, decode_backend="fused", decode_ticks=8)
+    eng.submit(0, np.zeros(6, np.int32), max_new_tokens=8)
+    eng.scheduler.admit(eng.registry)
+    seq = next(iter(eng.scheduler.active.values()))
+    assert eng._plan_ticks(np.asarray([seq.budget], np.int32)) == 8
+    seq.pages = seq.pages[:1]            # doctor: reservation of 1 page
+    assert eng._plan_ticks(np.asarray([seq.budget], np.int32)) < 8
+    assert eng.fused_tick_shrinks > 0

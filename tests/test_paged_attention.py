@@ -95,6 +95,54 @@ def test_paged_matches_dense_decode_attention():
                                np.asarray(want), rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.parametrize("shape", [
+    # (B, Hkv, G, hd, page, P)
+    (2, 2, 2, 16, 8, 4),
+    (4, 1, 4, 32, 16, 2),
+    (1, 2, 1, 8, 4, 8),
+])
+def test_paged_attention_inkernel_append_matches_ref(shape):
+    """k_new/v_new: the kernel writes the current row's slot into its
+    VMEM block before attending — the pool may hold garbage at pos."""
+    B, Hkv, G, hd, page, P = shape
+    q, kp, vp, bt = _operands(B, Hkv, G, hd, page, P, n_pages=B * P + 3,
+                              seed=7)
+    pos = jnp.asarray(
+        np.random.default_rng(8).integers(0, P * page, B), jnp.int32)
+    ks = jax.random.split(jax.random.PRNGKey(9), 2)
+    kn = jax.random.normal(ks[0], (B, Hkv, hd), jnp.float32)
+    vn = jax.random.normal(ks[1], (B, Hkv, hd), jnp.float32)
+    # poison the slots the append must overwrite: stale pool contents at
+    # pos must never be attended
+    phys = jnp.take_along_axis(bt, (pos // page)[:, None], axis=1)[:, 0]
+    kp_bad = kp.at[phys, pos % page].set(1e3)
+    vp_bad = vp.at[phys, pos % page].set(-1e3)
+    y = ops.paged_attention(q, kp_bad, vp_bad, bt, pos, kn, vn)
+    y0 = ref.paged_attention_ref(q, kp_bad, vp_bad, bt, pos, kn, vn)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y0),
+                               rtol=1e-5, atol=1e-5)
+    # ... and appending equals attending pre-scattered pools
+    y1 = ops.paged_attention(q, kp.at[phys, pos % page].set(kn),
+                             vp.at[phys, pos % page].set(vn), bt, pos)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y1),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_paged_attention_append_sliding_window():
+    q, kp, vp, bt = _operands(3, 2, 2, 16, 8, 4, n_pages=16, seed=11)
+    pos = jnp.array([5, 17, 31], jnp.int32)
+    ks = jax.random.split(jax.random.PRNGKey(12), 2)
+    kn = jax.random.normal(ks[0], (3, 2, 16), jnp.float32)
+    vn = jax.random.normal(ks[1], (3, 2, 16), jnp.float32)
+    for window in (4, 9, 64):
+        y = ops.paged_attention(q, kp, vp, bt, pos, kn, vn, window=window)
+        y0 = ref.paged_attention_ref(q, kp, vp, bt, pos, kn, vn,
+                                     window=window)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y0),
+                                   rtol=1e-5, atol=1e-5,
+                                   err_msg=str(window))
+
+
 def test_paged_attention_bf16():
     q, kp, vp, bt = _operands(2, 2, 2, 16, 8, 2, n_pages=8, seed=5,
                               dtype=jnp.bfloat16)

@@ -173,6 +173,50 @@ def test_bucketed_prefill_retrace_count(setup):
     assert rep["prefill_batches"] < len(lens)        # batching happened
 
 
+def test_page_bucket_ladder_edges():
+    """The half-pow2 {2^k, 3·2^k} ladder: exact powers of two map to
+    themselves, everything else lands on the next ladder rung (within
+    1.5x of the request), and the ladder is monotone."""
+    bucket = ServingEngine._page_bucket
+    # exact pow2 rungs
+    for k in range(7):
+        assert bucket(1 << k) == 1 << k
+    # 3·2^k rungs (n=3 is the first half-step; n=2 stays pow2)
+    assert [bucket(n) for n in (3, 6, 12, 24)] == [3, 6, 12, 24]
+    # boundaries: one past a rung climbs to the NEXT rung, never further
+    assert [bucket(n) for n in (5, 7, 9, 13, 17, 25)] == \
+        [6, 8, 12, 16, 24, 32]
+    # within 1.5x of the request, ladder monotone
+    prev = 0
+    for n in range(1, 200):
+        b = bucket(n)
+        assert n <= b <= max(2, -(-3 * n // 2))
+        assert b >= prev
+        prev = b
+    # the engine caps the bucket at the pages max_seq needs (a non-pow2
+    # max_seq would otherwise overshoot the dense layout) — the cap is
+    # applied at the call sites via min(); the raw ladder may exceed it
+    assert bucket(9) == 12
+
+
+def test_fused_decode_retraces_stay_olog(setup):
+    """Under the fused loop the decode trace key is (page bucket, T):
+    both families are O(log), so 14 distinct prompt lengths with mixed
+    budgets still land in a handful of compiled scan variants."""
+    cfg = setup[0]
+    lens = [3, 4, 5, 6, 7, 9, 11, 13, 17, 19, 23, 29, 31, 33]
+    prompts = hetero_prompts(cfg, lens=lens)
+    eng = make_engine(setup, max_batch=4, max_seq=64, kv_layout="paged",
+                      page_size=16, n_slots=3, decode_backend="fused",
+                      decode_ticks=8)
+    rep, _ = serve(eng, prompts, new_tokens=6)
+    # page buckets {1, 2, 3, 4} x tick counts {1, 2, 4} — and far fewer
+    # pairs actually occur; the bound that matters is
+    # O(log max_seq * log decode_ticks), never O(#lengths)
+    assert rep["decode_retraces"] <= 12 < len(set(lens))
+    assert rep["prefill_retraces"] <= 9
+
+
 def test_bucket_len_and_prefill_batches():
     assert [bucket_len(n, 16) for n in (1, 16, 17, 33, 64)] == \
         [16, 16, 32, 64, 64]

@@ -236,21 +236,27 @@ def test_publish_requires_versioned():
 # Engine-level: token parity + fresh-version pickup + staleness
 # ---------------------------------------------------------------------------
 
-def run_with_publish(setup, publish_at, kv_layout="paged"):
+def run_with_publish(setup, publish_at, kv_layout="paged", warm_steps=4,
+                     **engine_kw):
     """Submit one long request at round 0; optionally publish round 1
-    mid-generation; submit a second request after the publish."""
+    mid-generation; submit a second request after the publish.
+    ``warm_steps`` must leave the first request still decoding at the
+    publish (a fused engine generates up to decode_ticks tokens per
+    step, so its callers warm fewer steps)."""
     cfg, acfg, params, template0, trees0, trees1 = setup
     reg = make_registry(template0, trees0)
     feed = AdapterFeed()
     eng = ServingEngine(cfg, params, acfg, reg, max_batch=2, max_seq=32,
-                        kv_layout=kv_layout, page_size=8, feed=feed)
+                        kv_layout=kv_layout, page_size=8, feed=feed,
+                        **engine_kw)
     rng = np.random.default_rng(3)
     prompt_a = rng.integers(0, cfg.vocab_size, 6)
     prompt_b = rng.integers(0, cfg.vocab_size, 5)
     eng.submit(0, prompt_a, max_new_tokens=12)
     second = False
-    for _ in range(4):
+    for _ in range(warm_steps):
         eng.step()
+    assert not eng.scheduler.idle     # the publish must land mid-stream
     if publish_at:
         feed.publish(1, jax.tree_util.tree_map(
             lambda *xs: jnp.stack(xs), *trees1))
@@ -281,6 +287,28 @@ def test_mid_publish_token_parity_and_fresh_pickup(setup):
     assert rep["flips"] == 1 and rep["adapter_version"] == 1
     assert eng1.finished[0]["version"] == 0
     assert rep["batch_occupancy"] > 0.5
+
+
+def test_mid_publish_token_parity_fused_decode(setup):
+    """The fused loop defers feed drain + try_flip to scan boundaries,
+    so a publish landing while T ticks are in flight must not touch the
+    tokens of any admitted row — and the post-flip admission still picks
+    up the new round exactly as the per-tick engine does."""
+    cfg, acfg, params, template0, trees0, trees1 = setup
+    engp, _, repp, prompt_a, prompt_b = run_with_publish(
+        setup, publish_at=True)
+    for layout in ("paged", "dense"):
+        engf, reg, rep, _, _ = run_with_publish(
+            setup, publish_at=True, kv_layout=layout, warm_steps=1,
+            decode_backend="fused", decode_ticks=4)
+        for rid in engp.finished:
+            assert (engf.finished[rid]["tokens"].tolist()
+                    == engp.finished[rid]["tokens"].tolist()), (layout, rid)
+            assert (engf.finished[rid]["version"]
+                    == engp.finished[rid]["version"]), (layout, rid)
+        assert rep["flips"] == 1 and rep["adapter_version"] == 1
+        # the fused run really did span the publish with fewer syncs
+        assert rep["host_syncs"] < repp["host_syncs"]
 
 
 def test_mid_publish_token_parity_dense_layout(setup):

@@ -425,6 +425,47 @@ def test_sgmv_backend_matches_jnp_engine(mixed_setup):
                 == eng_jnp.finished[rid]["tokens"].tolist()), rid
 
 
+def test_fused_decode_parity_and_observability(setup):
+    """decode_backend="fused" is token-parity-exact with the per-tick
+    engine, and report() exposes the fused-loop health counters: host
+    syncs per generated token (~1/T instead of ~1/batch), mean ticks per
+    fused scan, and the T-tick page windows reserved vs. used."""
+    cfg, acfg, params, base, trees = setup
+    rng = np.random.default_rng(6)
+    prompts = [rng.integers(0, cfg.vocab_size, int(n))
+               for n in (6, 13, 4, 9, 11)]
+
+    def run(**kw):
+        reg = make_registry(base, trees, n_slots=2)
+        eng = ServingEngine(cfg, params, acfg, reg, max_batch=2,
+                            max_seq=32, **kw)
+        for i, p in enumerate(prompts):
+            eng.submit(i % 3, p, max_new_tokens=6)
+        rep = eng.run()
+        return rep, {r: eng.finished[r]["tokens"].tolist()
+                     for r in eng.finished}
+
+    rep0, want = run()
+    rep1, got = run(decode_backend="fused", decode_ticks=4)
+    assert got == want
+    # per-tick: one host sync per decode step; fused: one per scan
+    assert rep0["decode_backend"] == "per-tick"
+    assert rep0["host_syncs"] == rep0["decode_steps"]
+    assert rep1["decode_backend"] == "fused"
+    assert rep1["decode_ticks"] == 4
+    assert rep1["host_syncs"] < rep0["host_syncs"]
+    assert rep1["host_syncs_per_token"] < rep0["host_syncs_per_token"]
+    assert 1.0 < rep1["fused_ticks_mean"] <= 4.0
+    assert rep1["fused_scans"] == rep1["host_syncs"]
+    # both engines booked the same real tokens (pads never counted)
+    assert rep1["decode_tokens"] == rep0["decode_tokens"]
+    # the window accounting: reservations cover what was written (equal
+    # here — no eos cuts a window short), and nothing spilled
+    assert (rep1["pages_window_reserved"] >= rep1["pages_window_used"]
+            > 0)
+    assert rep1["fused_tick_shrinks"] == 0
+
+
 def test_feddpa_engine_matches_per_client(setup):
     """FedDPA tenants (dual adapters, personal pair per client) serve
     through the same grouped loop: global pair shared, personal pair
