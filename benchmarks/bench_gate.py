@@ -97,8 +97,16 @@ def evaluate(fresh, baseline, *, floor=None, tolerance=0.5):
             f"{baseline.get('bench')!r} — wrong --baseline file?"]
     metric = spec["metric"]
     floor = spec["floor"] if floor is None else floor
-    got = fresh[metric]
-    ref = baseline[metric]
+    got = fresh.get(metric)
+    ref = baseline.get(metric)
+    # records emit null (never NaN) for undefined metrics — a null gated
+    # metric is an explicit FAIL with a message, not a TypeError
+    if not isinstance(got, (int, float)):
+        return False, [f"{bench} {metric}: fresh value is {got!r} "
+                       f"(degenerate run?) — FAIL"]
+    if not isinstance(ref, (int, float)):
+        return False, [f"{bench} {metric}: baseline value is {ref!r} — "
+                       f"regenerate the committed baseline — FAIL"]
     lines = [
         f"{bench} {metric}: fresh {got:.3f}x, baseline {ref:.3f}x",
         f"hard floor {floor:.2f}x: {'ok' if got >= floor else 'FAIL'}",
@@ -134,7 +142,16 @@ def main(argv=None):
                     help="fail when the gate would pass (local check "
                          "that the gate trips on a regression)")
     args = ap.parse_args(argv)
-    fresh = json.loads(pathlib.Path(args.fresh).read_text())
+
+    def reject_constant(c):
+        raise ValueError(f"non-standard JSON constant {c} — benchmark "
+                         "records must emit null, never NaN/Infinity")
+
+    def load(path):
+        return json.loads(pathlib.Path(path).read_text(),
+                          parse_constant=reject_constant)
+
+    fresh = load(args.fresh)
     baseline_path = args.baseline
     if baseline_path is None:
         spec = _BENCHES.get(fresh.get("bench", "serving_throughput"))
@@ -142,7 +159,7 @@ def main(argv=None):
             print(f"unknown bench {fresh.get('bench')!r}")
             return 1
         baseline_path = str(REPO / spec["baseline"])
-    baseline = json.loads(pathlib.Path(baseline_path).read_text())
+    baseline = load(baseline_path)
     ok, lines = evaluate(fresh, baseline, floor=args.floor,
                          tolerance=args.tolerance)
     for line in lines:

@@ -8,6 +8,8 @@ returns a dict for EXPERIMENTS.md.
 """
 from __future__ import annotations
 
+import json
+import pathlib
 import time
 
 import jax
@@ -17,6 +19,7 @@ import numpy as np
 from repro.configs import AdapterConfig, FedConfig, get_config, reduced
 from repro.core import federation
 from repro.data.synthetic import make_classification_task
+from repro.obs import sanitize
 
 N_CLASSES = 4
 SEQ = 24
@@ -57,17 +60,39 @@ def run_fl(mode, variant="lora", *, n_clients=3, alpha=0.5, rounds=40,
     sys = federation.build(jax.random.PRNGKey(seed), cfg, acfg, fed,
                            task="classification", n_classes=N_CLASSES,
                            lr=lr)
-    t0 = time.time()
+    t0 = time.perf_counter()
     hist = federation.run_rounds(
         sys, clients, rounds=rounds, batch_size=batch_size, seed=seed + 1,
         eval_every=max(1, rounds // 8), test_batch=test_batch,
         target_acc=target_acc)
-    wall = time.time() - t0
-    acc = hist["acc"][-1] if hist["acc"] else float("nan")
+    wall = time.perf_counter() - t0
+    acc = hist["acc"][-1] if hist["acc"] else None
     return {"acc": acc, "best_acc": max(hist["acc"]) if hist["acc"]
-            else float("nan"), "hist": hist, "system": sys,
+            else None, "hist": hist, "system": sys,
             "s_per_round": wall / rounds}
 
 
 def emit(name, us_per_call, derived):
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+LATENCY_KEYS = tuple(f"{k}_{s}_s"
+                     for k in ("queue_wait", "ttft", "intertoken", "e2e")
+                     for s in ("p50", "p90", "p99", "mean"))
+
+
+def latency_row(rep):
+    """Latency-percentile slice of an engine report — the obs-histogram
+    keys ``report()`` carries (None when the window was empty)."""
+    return {k: rep.get(k) for k in LATENCY_KEYS}
+
+
+def write_record(path, record):
+    """Persist a BENCH record as STRICT json: every non-finite float
+    (NaN/Inf, numpy or python) becomes null before serialization, and
+    ``allow_nan=False`` makes any leak a hard error here rather than a
+    parse failure in the regression gate."""
+    path = pathlib.Path(path)
+    path.write_text(json.dumps(sanitize(record), indent=2,
+                               allow_nan=False) + "\n")
+    return path

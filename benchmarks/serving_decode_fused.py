@@ -25,7 +25,6 @@ The headline metric is decode-only tok/s at T=8 over per-tick
 from __future__ import annotations
 
 import argparse
-import json
 import pathlib
 
 import numpy as np
@@ -39,10 +38,10 @@ from repro.models.transformer import init_model
 from repro.serving.demo import synthetic_clients
 
 try:                       # python -m benchmarks.serving_decode_fused / run.py
-    from benchmarks.common import emit
+    from benchmarks.common import emit, latency_row, write_record
     from benchmarks.serving_throughput import run_engine
 except ImportError:        # python benchmarks/serving_decode_fused.py
-    from common import emit
+    from common import emit, latency_row, write_record
     from serving_throughput import run_engine
 
 BENCH_PATH = pathlib.Path(__file__).resolve().parent.parent / \
@@ -58,12 +57,9 @@ def _row(rep):
             "fused_ticks_mean", "fused_tick_shrinks",
             "pages_window_reserved", "pages_window_used",
             "batch_occupancy", "wall_s", "decode_backend", "decode_ticks")
-
-    def clean(v):
-        if isinstance(v, float) and not np.isfinite(v):
-            return None
-        return v
-    return {k: clean(rep[k]) for k in keys if k in rep}
+    row = {k: rep[k] for k in keys if k in rep}
+    row["latency"] = latency_row(rep)
+    return row
 
 
 def main(clients=8, batch=8, requests=16, new_tokens=24, page_size=16,
@@ -135,7 +131,7 @@ def main(clients=8, batch=8, requests=16, new_tokens=24, page_size=16,
         "decode_speedup_by_ticks": {str(T): s for T, s in by_ticks.items()},
         "speedup_vs_pertick": speedup,
     }
-    bench_path.write_text(json.dumps(record, indent=2) + "\n")
+    write_record(bench_path, record)
     sweep = " ".join(f"T={T}:{s:.2f}x" for T, s in by_ticks.items())
     print(f"fused decode {fused[gate_T]['decode_tok_per_s']:.1f} tok/s at "
           f"T={gate_T} vs per-tick {pertick_rep['decode_tok_per_s']:.1f} → "

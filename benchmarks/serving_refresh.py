@@ -20,7 +20,6 @@ stats (flips, staleness). Results go to ``BENCH_refresh.json``.
 from __future__ import annotations
 
 import argparse
-import json
 import pathlib
 import time
 
@@ -36,9 +35,9 @@ from repro.serving import AdapterFeed, AdapterRegistry, ServingEngine
 from repro.serving.demo import synthetic_clients
 
 try:                       # python -m benchmarks.serving_refresh / run.py
-    from benchmarks.common import emit
+    from benchmarks.common import emit, latency_row, write_record
 except ImportError:        # python benchmarks/serving_refresh.py
-    from common import emit
+    from common import emit, latency_row, write_record
 
 BENCH_PATH = pathlib.Path(__file__).resolve().parent.parent / \
     "BENCH_refresh.json"
@@ -179,14 +178,15 @@ def main(clients=6, batch=4, requests=12, rounds=2, new_tokens=8,
                  "deferred_flips": live["deferred_flips"],
                  "flip_latency_ticks": live["flip_latency_ticks"],
                  "staleness_mean": live["staleness_mean"],
-                 "staleness_max": live["staleness_max"]},
+                 "staleness_max": live["staleness_max"],
+                 "latency": latency_row(live)},
         "drain": {"tok_per_s": drain_tps,
                   "wall_s": drain["schedule_wall_s"],
                   "rebuild_wall_s": drain["rebuild_wall_s"]},
         "speedup_vs_drain": speedup,
     }
     bench_path = BENCH_PATH if out is None else pathlib.Path(out)
-    bench_path.write_text(json.dumps(record, indent=2) + "\n")
+    write_record(bench_path, record)
     print(f"live refresh {live_tps:.1f} gen tok/s vs drain+rebuild "
           f"{drain_tps:.1f} → {speedup:.2f}x across {rounds} adapter "
           f"rounds ({live['flips']} flips, rebuild cost "

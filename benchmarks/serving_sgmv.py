@@ -33,7 +33,6 @@ how ``serving_throughput.py`` treats bgmv. Results →
 from __future__ import annotations
 
 import argparse
-import json
 import pathlib
 import time
 
@@ -49,9 +48,9 @@ from repro.serving import AdapterRegistry, ServingEngine
 from repro.serving.demo import synthetic_clients
 
 try:                       # python -m benchmarks.serving_sgmv / run.py
-    from benchmarks.common import emit
+    from benchmarks.common import emit, latency_row, write_record
 except ImportError:        # python benchmarks/serving_sgmv.py
-    from common import emit
+    from common import emit, latency_row, write_record
 
 BENCH_PATH = pathlib.Path(__file__).resolve().parent.parent / \
     "BENCH_sgmv.json"
@@ -128,11 +127,9 @@ def _row(rep):
     keys = ("tok_per_s", "gen_tok_per_s", "decode_tok_per_s",
             "decode_steps", "batch_occupancy", "adapter_hit_rate",
             "wall_s", "kv_layout", "lora_backend", "registry_mode")
-    def clean(v):
-        if isinstance(v, float) and not np.isfinite(v):
-            return None
-        return v
-    return {k: clean(rep[k]) for k in keys if k in rep}
+    row = {k: rep[k] for k in keys if k in rep}
+    row["latency"] = latency_row(rep)
+    return row
 
 
 def main(clients=8, batch=8, requests=16, new_tokens=24, page_size=16,
@@ -193,7 +190,7 @@ def main(clients=8, batch=8, requests=16, new_tokens=24, page_size=16,
         "sgmv_vs_fedsa_grouped": vs_fedsa,
         "sgmv_kernel_max_err": kerr,
     }
-    bench_path.write_text(json.dumps(record, indent=2) + "\n")
+    write_record(bench_path, record)
     print(f"sgmv grouped {sgmv['gen_tok_per_s']:.1f} gen tok/s vs "
           f"per-client loop {pc_tps:.1f} → {speedup:.2f}x at {clients} "
           f"personal-A clients ({vs_fedsa:.2f}x of the bgmv-legal FedSA "

@@ -22,7 +22,6 @@ trajectory is machine-readable across PRs.
 from __future__ import annotations
 
 import argparse
-import json
 import pathlib
 import time
 
@@ -38,9 +37,9 @@ from repro.serving import AdapterRegistry, ServingEngine
 from repro.serving.demo import synthetic_clients
 
 try:                       # python -m benchmarks.serving_throughput / run.py
-    from benchmarks.common import emit
+    from benchmarks.common import emit, latency_row, write_record
 except ImportError:        # python benchmarks/serving_throughput.py
-    from common import emit
+    from common import emit, latency_row, write_record
 
 BENCH_PATH = pathlib.Path(__file__).resolve().parent.parent / \
     "BENCH_serving.json"
@@ -120,18 +119,16 @@ def bench_kernel(cfg, acfg, batch):
 
 
 def _engine_row(rep):
-    """The machine-readable slice of an engine report (non-finite values
-    become null so the JSON stays strict-parser-valid)."""
+    """The machine-readable slice of an engine report (``write_record``
+    nulls any non-finite float at serialization time)."""
     keys = ("tok_per_s", "gen_tok_per_s", "decode_tok_per_s",
             "prefill_tokens", "decode_tokens", "generated_tokens",
             "decode_steps", "prefill_batches", "prefill_retraces",
             "decode_retraces", "batch_occupancy", "page_utilization",
             "pool_occupancy", "adapter_hit_rate", "wall_s", "kv_layout")
-    def clean(v):
-        if isinstance(v, float) and not np.isfinite(v):
-            return None
-        return v
-    return {k: clean(rep[k]) for k in keys if k in rep}
+    row = {k: rep[k] for k in keys if k in rep}
+    row["latency"] = latency_row(rep)
+    return row
 
 
 def main(clients=8, batch=8, requests=16, new_tokens=24, page_size=16,
@@ -181,6 +178,11 @@ def main(clients=8, batch=8, requests=16, new_tokens=24, page_size=16,
     emit("serving.batch_occupancy", 0.0, f"{paged['batch_occupancy']:.2f}")
     emit("serving.adapter_hit_rate", 0.0,
          f"{paged['adapter_hit_rate']:.2f}")
+    if paged.get("ttft_p50_s") is not None:
+        emit("serving.paged_ttft_p50_us", paged["ttft_p50_s"] * 1e6,
+             f"p99 {paged['ttft_p99_s']*1e3:.2f}ms")
+        emit("serving.paged_e2e_p50_us", paged["e2e_p50_s"] * 1e6,
+             f"p99 {paged['e2e_p99_s']*1e3:.2f}ms")
     kerr = bench_kernel(cfg, acfg, batch)
 
     bench_path = BENCH_PATH if out is None else pathlib.Path(out)
@@ -201,7 +203,7 @@ def main(clients=8, batch=8, requests=16, new_tokens=24, page_size=16,
         "speedup_vs_naive": paged["gen_tok_per_s"] / nv_tps,
         "bgmv_kernel_max_err": kerr,
     }
-    bench_path.write_text(json.dumps(record, indent=2) + "\n")
+    write_record(bench_path, record)
     print(f"paged {paged['gen_tok_per_s']:.1f} gen tok/s vs dense "
           f"{dense['gen_tok_per_s']:.1f} vs naive {nv_tps:.1f} → "
           f"{speedup:.2f}x over dense ({decode_speedup:.2f}x decode-only) "

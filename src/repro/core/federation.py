@@ -12,6 +12,7 @@ The *in-mesh* (TPU pod) counterpart of the same round lives in
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import jax
 import jax.numpy as jnp
@@ -114,7 +115,7 @@ def build(key, cfg, acfg, fed, *, task="classification", n_classes=4,
 
 def run_rounds(system, clients, *, rounds, batch_size, seed=0,
                eval_every=0, test_batch=None, target_acc=None,
-               publish=None, publish_every=1):
+               publish=None, publish_every=1, metrics=None):
     """Drive the federated loop. Returns history dict.
 
     clients: list of per-client numpy data dicts.
@@ -124,12 +125,27 @@ def run_rounds(system, clients, *, rounds, batch_size, seed=0,
     (e.g. ``repro.serving.AdapterFeed.publish`` — the live train→serve
     bridge); invoked every ``publish_every`` rounds with the global
     round number (1-based) as the version.
+    metrics: optional ``repro.obs.MetricsRegistry``. Per-round wall time
+    lands in the ``repro_fed_round_seconds`` histogram, the latest mean
+    client loss in the ``repro_fed_round_loss`` gauge, and round/publish
+    totals in counters — sharing the registry with a live
+    ``ServingEngine`` puts train and serve metrics in one exposition.
     """
     fed = system.fed
     rng = np.random.default_rng(seed)
     tr, ost = system.trainables, system.opt_state
     history = {"loss": [], "acc": [], "rounds_to_target": None}
+    if metrics is not None:
+        h_round = metrics.histogram("repro_fed_round_seconds",
+                                    "wall per federation round")
+        g_loss = metrics.gauge("repro_fed_round_loss",
+                               "mean client loss, latest round")
+        c_rounds = metrics.counter("repro_fed_rounds_total",
+                                   "completed federation rounds")
+        c_pub = metrics.counter("repro_fed_publishes_total",
+                                "rounds published to a serving feed")
     for r in range(rounds):
+        t_round = time.perf_counter()
         steps = []
         for _ in range(fed.local_steps):
             steps.append(stack_client_batch(clients, batch_size, rng))
@@ -145,8 +161,14 @@ def run_rounds(system, clients, *, rounds, batch_size, seed=0,
             part = jnp.ones((fed.n_clients,), jnp.float32)
         tr, ost, losses = system.round_fn(tr, ost, batches, part)
         history["loss"].append(float(jnp.mean(losses)))
+        if metrics is not None:
+            h_round.observe(time.perf_counter() - t_round)
+            g_loss.set(history["loss"][-1])
+            c_rounds.inc()
         if publish is not None and (r + 1) % publish_every == 0:
             publish(r + 1, tr)
+            if metrics is not None:
+                c_pub.inc()
         if eval_every and test_batch is not None and (r + 1) % eval_every == 0:
             accs = system.eval_fn(tr, test_batch)
             acc = float(jnp.mean(accs))

@@ -25,7 +25,6 @@ import argparse
 import json
 import re
 import sys
-import time
 import traceback
 
 import jax  # noqa: F401  — locks the device count with XLA_FLAGS set above
@@ -33,6 +32,7 @@ import jax  # noqa: F401  — locks the device count with XLA_FLAGS set above
 from repro.configs import ASSIGNED, SHAPES, AdapterConfig, get_config, get_shape
 from repro.launch.entry import build_entry, lower_entry, skip_reason
 from repro.launch.mesh import make_production_mesh
+from repro.obs import Timer
 
 _COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
                 "collective-permute")
@@ -95,15 +95,15 @@ def run_one(arch, shape_name, multi_pod=False, acfg=None, outdir=None,
         return rec
 
     mesh = make_production_mesh(multi_pod=multi_pod)
-    t0 = time.time()
-    entry = build_entry(cfg, shape, mesh, acfg or AdapterConfig(),
-                        **(entry_kw or {}))
-    rec["note"] = entry.note
-    lowered = lower_entry(entry, mesh)
-    rec["lower_s"] = round(time.time() - t0, 1)
-    t1 = time.time()
-    compiled = lowered.compile()
-    rec["compile_s"] = round(time.time() - t1, 1)
+    with Timer() as t_lower:
+        entry = build_entry(cfg, shape, mesh, acfg or AdapterConfig(),
+                            **(entry_kw or {}))
+        rec["note"] = entry.note
+        lowered = lower_entry(entry, mesh)
+    rec["lower_s"] = round(t_lower.elapsed, 1)
+    with Timer() as t_compile:
+        compiled = lowered.compile()
+    rec["compile_s"] = round(t_compile.elapsed, 1)
 
     try:
         mem = compiled.memory_analysis()

@@ -10,6 +10,11 @@ or run a real batched decode on the host mesh.
       --decode-backend fused --decode-ticks 8
   python -m repro.launch.serve --arch deepseek-7b --live-refresh \
       [--train-rounds 4]
+
+Any serving run takes ``--metrics-out`` (Prometheus text exposition or
+JSON snapshot of the engine's repro.obs registry, by extension) and
+``--trace-out`` (JSONL structured event timeline) — see
+docs/observability.md.
 """
 import os
 
@@ -18,7 +23,25 @@ if __name__ == "__main__" and os.environ.get("XLA_FLAGS") is None:
 
 import argparse  # noqa: E402
 import dataclasses  # noqa: E402
-import time  # noqa: E402
+
+
+def _make_sinks(args):
+    """(metrics, trace) for a serving run: the registry always exists
+    (report() percentiles ride it); the trace only when requested."""
+    from repro.obs import MetricsRegistry, TraceLog
+    metrics = MetricsRegistry()
+    trace = TraceLog() if args.trace_out else None
+    return metrics, trace
+
+
+def _write_sinks(args, metrics, trace):
+    from repro.obs import write_metrics
+    if args.metrics_out:
+        write_metrics(args.metrics_out, metrics)
+        print(f"metrics → {args.metrics_out}")
+    if args.trace_out and trace is not None:
+        trace.save(args.trace_out)
+        print(f"trace ({len(trace.events)} events) → {args.trace_out}")
 
 
 def run_multi_tenant(args, acfg):
@@ -62,6 +85,7 @@ def run_multi_tenant(args, acfg):
     reg = AdapterRegistry(template, n_slots=args.slots, mode=reg_mode)
     for i, tree in enumerate(trees):
         reg.ingest(i, tree)
+    metrics, trace = _make_sinks(args)
     engine = ServingEngine(cfg, params, acfg, reg,
                            max_batch=min(8, args.clients), max_seq=64,
                            kv_layout=args.kv_layout,
@@ -69,7 +93,8 @@ def run_multi_tenant(args, acfg):
                            attn_backend=args.attn_backend,
                            lora_backend=args.lora_backend,
                            decode_backend=args.decode_backend,
-                           decode_ticks=args.decode_ticks)
+                           decode_ticks=args.decode_ticks,
+                           metrics=metrics, trace=trace)
     rng = np.random.default_rng(0)
     for r in range(args.requests):
         plen = int(rng.integers(4, 33))          # heterogeneous prompts
@@ -91,6 +116,13 @@ def run_multi_tenant(args, acfg):
           f"({rep['decode_tok_per_s']:.1f} decode-only), "
           f"occupancy {rep['batch_occupancy']:.2f}, "
           f"adapter hit rate {rep['adapter_hit_rate']:.2f}{extra}")
+    if rep["ttft_p50_s"] is not None:
+        print(f"latency: ttft p50 {rep['ttft_p50_s']*1e3:.1f}ms / "
+              f"p99 {rep['ttft_p99_s']*1e3:.1f}ms, e2e p50 "
+              f"{rep['e2e_p50_s']*1e3:.1f}ms / p99 "
+              f"{rep['e2e_p99_s']*1e3:.1f}ms, intertoken p50 "
+              f"{rep['intertoken_p50_s']*1e6:.0f}us")
+    _write_sinks(args, metrics, trace)
 
 
 def run_live_refresh(args, acfg):
@@ -101,12 +133,14 @@ def run_live_refresh(args, acfg):
 
     cfg = reduced(get_config(args.arch), n_layers=2, d_model=64)
     fed = FedConfig(n_clients=args.clients, local_steps=2)
+    metrics, trace = _make_sinks(args)
     report, history = train_and_serve(
         cfg, acfg, fed, rounds=args.train_rounds, n_slots=args.slots,
-        requests=args.requests, log=print)
+        requests=args.requests, log=print, metrics=metrics, trace=trace)
     print(f"final train loss {history['loss'][-1]:.4f}; engine at "
           f"adapter version {report['adapter_version']}, "
           f"{report['decode_tok_per_s']:.1f} decode tok/s")
+    _write_sinks(args, metrics, trace)
 
 
 def main():
@@ -150,6 +184,13 @@ def main():
                          "scan boundaries)")
     ap.add_argument("--decode-ticks", type=int, default=8,
                     help="max ticks per fused decode scan")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the run's metrics registry here: "
+                         ".prom/.txt → Prometheus text exposition, "
+                         "anything else → JSON snapshot")
+    ap.add_argument("--trace-out", default=None,
+                    help="write the structured event timeline (JSONL, "
+                         "one event per line) here")
     ap.add_argument("--fleet", default="fedsa",
                     choices=["fedsa", "fedit", "feddpa", "mixed"],
                     help="tenant population for --multi-tenant: fedsa "
@@ -194,12 +235,13 @@ def main():
     if skip_reason(cfg, shape):
         print(f"SKIP: {skip_reason(cfg, shape)}")
         return
+    from repro.obs import Timer
     mesh = make_production_mesh(multi_pod=args.multi_pod)
     entry = build_entry(cfg, shape, mesh, acfg)
-    t0 = time.time()
-    compiled = lower_entry(entry, mesh).compile()
+    with Timer() as t:
+        compiled = lower_entry(entry, mesh).compile()
     print(f"compiled {entry.name} ({entry.note or 'native'}) for "
-          f"{mesh.devices.shape} in {time.time()-t0:.1f}s")
+          f"{mesh.devices.shape} in {t.elapsed:.1f}s")
     mem = compiled.memory_analysis()
     print(f"per-device: args {mem.argument_size_in_bytes/2**30:.2f} GiB, "
           f"temp {mem.temp_size_in_bytes/2**30:.2f} GiB")

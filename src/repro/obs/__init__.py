@@ -1,0 +1,36 @@
+"""repro.obs: metrics, latency tracing, and a structured event timeline.
+
+The shared observability vocabulary for the serving + federation stack
+(paxml's ``base_metrics``/``summary_utils`` split is the exemplar):
+
+  ``metrics``   Counter / Gauge / Histogram (fixed log-spaced buckets
+                with p50/p90/p99 estimation) in a named
+                ``MetricsRegistry``, plus the ``Timer`` context manager
+  ``trace``     ``TraceLog``: append-only timeline of typed events
+                (admit, prefill_batch, decode_scan, flip, …) with
+                monotonic timestamps and engine tick ids, serialized as
+                JSONL
+  ``export``    Prometheus text exposition + JSON snapshot writers and
+                the ``sanitize`` helper (non-finite floats → ``null``
+                so serialized reports stay strict-parser-valid)
+  ``profiler``  ``jax.profiler`` ``TraceAnnotation`` / ``named_scope``
+                wrappers so device profiles line up with host events
+
+``ServingEngine`` owns a ``MetricsRegistry`` by default (TTFT /
+inter-token / e2e / queue-wait histograms behind ``report()``'s
+percentiles) and emits timeline events when constructed with a
+``TraceLog``; ``core.federation.run_rounds(metrics=...)`` reports
+per-round train metrics through the same registry. See
+``docs/observability.md`` for the metric catalog and event schema.
+"""
+from repro.obs.export import (sanitize, to_json, to_prometheus,
+                              validate_exposition, write_metrics)
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                               Timer)
+from repro.obs.profiler import annotate, named_scope
+from repro.obs.trace import EVENT_SCHEMA, TraceLog, validate_trace
+
+__all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry", "Timer",
+           "TraceLog", "EVENT_SCHEMA", "validate_trace", "sanitize",
+           "to_json", "to_prometheus", "validate_exposition",
+           "write_metrics", "annotate", "named_scope"]

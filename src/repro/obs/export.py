@@ -1,0 +1,209 @@
+"""Exporters: Prometheus text exposition, JSON snapshots, sanitize.
+
+``to_prometheus`` renders a ``MetricsRegistry`` in the Prometheus text
+exposition format (version 0.0.4): counters and gauges as single
+samples, histograms as cumulative ``_bucket{le=...}`` series plus
+``_sum``/``_count``. ``validate_exposition`` is the matching checker
+used by tests and the CI ``metrics-smoke`` step.
+
+``sanitize`` is the one NaN policy for every serialized report:
+non-finite floats become ``None`` (→ JSON ``null``) recursively, so
+``json.dumps(..., allow_nan=False)`` never emits the non-standard
+``NaN``/``Infinity`` tokens that strict parsers reject. BENCH records,
+``--out`` files, and metric snapshots all route through it.
+
+CLI (the CI validation entry point):
+
+  PYTHONPATH=src python -m repro.obs.export \\
+      --check-metrics metrics.prom --check-trace trace.jsonl
+"""
+from __future__ import annotations
+
+import json
+import math
+import pathlib
+import re
+
+from repro.obs.metrics import Counter, Gauge, Histogram
+
+_NAME_RE = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
+_SAMPLE_RE = re.compile(
+    r"^([a-zA-Z_:][a-zA-Z0-9_:]*)(\{[^}]*\})?\s+(\S+)$")
+
+
+def sanitize(obj):
+    """Recursively map non-finite floats to None (JSON ``null``)."""
+    if isinstance(obj, float):
+        return obj if math.isfinite(obj) else None
+    if isinstance(obj, dict):
+        return {k: sanitize(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [sanitize(v) for v in obj]
+    return obj
+
+
+def _fmt(v):
+    """Prometheus sample value: non-finite renders as +Inf/-Inf/NaN
+    (legal in the exposition format, unlike in JSON)."""
+    if isinstance(v, float) and not math.isfinite(v):
+        if math.isnan(v):
+            return "NaN"
+        return "+Inf" if v > 0 else "-Inf"
+    return repr(float(v))
+
+
+def to_prometheus(registry):
+    """Text exposition of every metric in the registry."""
+    lines = []
+    for m in registry:
+        assert _NAME_RE.match(m.name), f"bad metric name {m.name!r}"
+        if m.help:
+            lines.append(f"# HELP {m.name} {m.help}")
+        if isinstance(m, Counter):
+            lines.append(f"# TYPE {m.name} counter")
+            lines.append(f"{m.name} {m.value}")
+        elif isinstance(m, Gauge):
+            lines.append(f"# TYPE {m.name} gauge")
+            lines.append(f"{m.name} {_fmt(m.value)}")
+        elif isinstance(m, Histogram):
+            lines.append(f"# TYPE {m.name} histogram")
+            cum = 0
+            for bound, c in zip(m.bounds, m.counts):
+                cum += c
+                lines.append(f'{m.name}_bucket{{le="{_fmt(bound)}"}} {cum}')
+            lines.append(f'{m.name}_bucket{{le="+Inf"}} {m.count}')
+            lines.append(f"{m.name}_sum {_fmt(m.sum)}")
+            lines.append(f"{m.name}_count {m.count}")
+    return "\n".join(lines) + "\n"
+
+
+def to_json(registry):
+    """Sanitized JSON-able snapshot of the registry."""
+    return sanitize(registry.snapshot())
+
+
+def write_metrics(path, registry):
+    """Write the registry to ``path`` — Prometheus text for ``.prom`` /
+    ``.txt`` / ``.metrics``, JSON snapshot otherwise."""
+    path = pathlib.Path(path)
+    if path.suffix in (".prom", ".txt", ".metrics"):
+        path.write_text(to_prometheus(registry))
+    else:
+        path.write_text(json.dumps(to_json(registry), indent=2,
+                                   allow_nan=False) + "\n")
+    return path
+
+
+def validate_exposition(text):
+    """Validate Prometheus text exposition content.
+
+    Returns ``(n_samples, errors)``. Checks: every non-comment line is
+    ``name[{labels}] value``; every sample's base name was declared by
+    a ``# TYPE`` line; histogram ``_bucket`` series are cumulative and
+    end with ``le="+Inf"`` matching ``_count``.
+    """
+    errors = []
+    types = {}
+    samples = []
+    for i, line in enumerate(text.splitlines(), 1):
+        if not line.strip():
+            continue
+        if line.startswith("# TYPE "):
+            parts = line.split()
+            if len(parts) != 4 or parts[3] not in ("counter", "gauge",
+                                                   "histogram"):
+                errors.append(f"line {i}: malformed TYPE line")
+            else:
+                types[parts[2]] = parts[3]
+            continue
+        if line.startswith("#"):
+            continue
+        m = _SAMPLE_RE.match(line)
+        if not m:
+            errors.append(f"line {i}: unparseable sample {line!r}")
+            continue
+        name, labels, value = m.groups()
+        try:
+            v = float(value.replace("+Inf", "inf").replace("-Inf", "-inf"))
+        except ValueError:
+            errors.append(f"line {i}: bad sample value {value!r}")
+            continue
+        samples.append((name, labels, v))
+        base = re.sub(r"_(bucket|sum|count)$", "", name)
+        if name not in types and base not in types:
+            errors.append(f"line {i}: sample {name!r} has no TYPE line")
+
+    # histogram structure: cumulative buckets, +Inf bucket == _count
+    for base, kind in types.items():
+        if kind != "histogram":
+            continue
+        buckets = [(labels, v) for name, labels, v in samples
+                   if name == base + "_bucket"]
+        counts = [v for name, _, v in samples if name == base + "_count"]
+        if not buckets or not counts:
+            errors.append(f"histogram {base}: missing _bucket or _count")
+            continue
+        last = -1.0
+        for labels, v in buckets:
+            if v < last:
+                errors.append(f"histogram {base}: non-cumulative buckets")
+                break
+            last = v
+        if 'le="+Inf"' not in (buckets[-1][0] or ""):
+            errors.append(f"histogram {base}: last bucket is not +Inf")
+        elif buckets[-1][1] != counts[0]:
+            errors.append(f"histogram {base}: +Inf bucket != _count")
+    return len(samples), errors
+
+
+def main(argv=None):
+    import argparse
+
+    from repro.obs.trace import validate_trace
+
+    ap = argparse.ArgumentParser(
+        description="validate obs artifacts (CI metrics-smoke)")
+    ap.add_argument("--check-metrics", default=None,
+                    help="Prometheus text exposition file to validate")
+    ap.add_argument("--check-trace", default=None,
+                    help="JSONL event-trace file to validate")
+    ap.add_argument("--min-events", type=int, default=1,
+                    help="fail when the trace has fewer events")
+    ap.add_argument("--require-events", default="",
+                    help="comma-separated event types that must appear")
+    args = ap.parse_args(argv)
+    failed = False
+    if args.check_metrics:
+        text = pathlib.Path(args.check_metrics).read_text()
+        n, errors = validate_exposition(text)
+        for e in errors:
+            print(f"[metrics] {e}")
+        failed |= bool(errors) or n == 0
+        print(f"[metrics] {args.check_metrics}: {n} samples, "
+              f"{len(errors)} errors")
+    if args.check_trace:
+        text = pathlib.Path(args.check_trace).read_text()
+        n, errors = validate_trace(text)
+        for e in errors:
+            print(f"[trace] {e}")
+        failed |= bool(errors) or n < args.min_events
+        seen = set()
+        for line in text.splitlines():
+            if line.strip():
+                try:
+                    seen.add(json.loads(line).get("ev"))
+                except ValueError:
+                    pass
+        want = [e for e in args.require_events.split(",") if e]
+        missing = [e for e in want if e not in seen]
+        if missing:
+            print(f"[trace] missing required event types: {missing}")
+            failed = True
+        print(f"[trace] {args.check_trace}: {n} events "
+              f"({len(seen)} types), {len(errors)} errors")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

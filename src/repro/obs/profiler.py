@@ -1,0 +1,58 @@
+"""``jax.profiler`` integration: line device profiles up with host events.
+
+Two wrappers, both graceful no-ops when jax (or the profiler API) is
+unavailable, so obs consumers never gate on the accelerator toolchain:
+
+  ``annotate(name)``      host-side ``jax.profiler.TraceAnnotation`` —
+                          wraps the *dispatch* of a jitted step, so the
+                          engine's prefill/decode/fused-scan calls show
+                          up as named spans in a ``jax.profiler``
+                          capture, alignable with the ``TraceLog``
+                          timeline by wall order
+  ``named_scope(name)``   ``jax.named_scope`` — names the HLO ops
+                          *inside* a traced function, so the device
+                          timeline attributes kernels back to the
+                          serving phase that launched them
+
+``start_trace``/``stop_trace`` proxy ``jax.profiler`` captures (used
+ad hoc when profiling a serving run; nothing in the repo calls them on
+the hot path).
+"""
+from __future__ import annotations
+
+import contextlib
+
+try:
+    import jax
+    _TRACE_ANNOTATION = getattr(jax.profiler, "TraceAnnotation", None)
+    _NAMED_SCOPE = getattr(jax, "named_scope", None)
+except ImportError:            # pragma: no cover - jax is baked in here
+    jax = None
+    _TRACE_ANNOTATION = _NAMED_SCOPE = None
+
+
+def annotate(name):
+    """Host-side profiler span (no-op context without the profiler)."""
+    if _TRACE_ANNOTATION is None:
+        return contextlib.nullcontext()
+    return _TRACE_ANNOTATION(name)
+
+
+def named_scope(name):
+    """Name HLO ops emitted under this scope (no-op without jax)."""
+    if _NAMED_SCOPE is None:
+        return contextlib.nullcontext()
+    return _NAMED_SCOPE(name)
+
+
+def start_trace(logdir):
+    """Begin a ``jax.profiler`` capture; returns True when started."""
+    if jax is None or not hasattr(jax.profiler, "start_trace"):
+        return False
+    jax.profiler.start_trace(str(logdir))
+    return True
+
+
+def stop_trace():
+    if jax is not None and hasattr(jax.profiler, "stop_trace"):
+        jax.profiler.stop_trace()

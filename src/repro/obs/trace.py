@@ -1,0 +1,133 @@
+"""TraceLog: append-only structured event timeline, serialized as JSONL.
+
+Every event is one flat dict:
+
+  {"ev": <type>, "ts": <seconds since log start, monotonic>,
+   "tick": <engine tick id or null>, ...type-specific fields}
+
+``EVENT_SCHEMA`` names the required fields per type — the contract the
+CI ``metrics-smoke`` step and ``tests/test_obs.py`` validate against.
+Emitters attach extra fields freely (the schema is a floor, not a
+ceiling), so e.g. ``retire`` carries the adapter version alongside its
+required latency fields.
+
+The log is bounded (``maxlen``, default 2^17 events): once full, new
+events are dropped and counted in ``.dropped`` rather than growing the
+host heap under a long-lived engine — the timeline is a flight
+recorder, not a durable audit log. ``current_tick`` is stamped by the
+engine at the top of each ``step()`` so events emitted from the
+scheduler and registry (which don't know about ticks) still line up
+with the engine timeline.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+# event type → required fields (beyond ev/ts/tick). Keep in sync with
+# docs/observability.md.
+EVENT_SCHEMA = {
+    "submit": ("rid", "client"),
+    "admit": ("rid", "client", "row", "slot", "queue_wait_s"),
+    "prefill_batch": ("bucket", "rows", "wall_s"),
+    "decode_scan": ("ticks", "rows", "wall_s"),
+    "flip": ("version",),
+    "deferred_flip": ("version", "blocking_rows"),
+    "eviction": ("client", "slot"),
+    "pool_exhausted": ("client", "needed", "free"),
+    "tick_shrink": ("from_ticks", "to_ticks"),
+    "retire": ("rid", "client", "tokens", "queue_wait_s", "ttft_s",
+               "e2e_s"),
+}
+
+
+class TraceLog:
+    """Bounded append-only event timeline with monotonic timestamps."""
+
+    def __init__(self, maxlen=1 << 17, *, validate=False):
+        self.events = []
+        self.maxlen = maxlen
+        self.dropped = 0
+        self.validate = validate
+        self.current_tick = None
+        self._t0 = time.perf_counter()
+
+    def emit(self, ev, *, tick=None, **fields):
+        """Append one typed event; unknown types raise (the schema is
+        the vocabulary downstream tooling understands)."""
+        required = EVENT_SCHEMA.get(ev)
+        if required is None:
+            raise KeyError(f"unknown trace event type {ev!r}")
+        if self.validate:
+            missing = [f for f in required if f not in fields]
+            if missing:
+                raise ValueError(f"{ev} event missing {missing}")
+        if len(self.events) >= self.maxlen:
+            self.dropped += 1
+            return
+        rec = {"ev": ev, "ts": time.perf_counter() - self._t0,
+               "tick": self.current_tick if tick is None else tick}
+        rec.update(fields)
+        self.events.append(rec)
+
+    def __len__(self):
+        return len(self.events)
+
+    def __iter__(self):
+        return iter(self.events)
+
+    def by_type(self, ev):
+        return [e for e in self.events if e["ev"] == ev]
+
+    def to_jsonl(self):
+        return "".join(json.dumps(e, allow_nan=False) + "\n"
+                       for e in self.events)
+
+    def save(self, path):
+        """Write the timeline as JSONL (one event per line)."""
+        with open(path, "w") as f:
+            f.write(self.to_jsonl())
+        return path
+
+
+def validate_trace(lines):
+    """Validate JSONL trace content (an iterable of lines or one str).
+
+    Returns ``(n_events, errors)`` — every line must parse as strict
+    JSON (no NaN/Infinity), carry a known ``ev`` with its required
+    fields plus ``ts``/``tick``, and timestamps must be nondecreasing.
+    """
+    if isinstance(lines, str):
+        lines = lines.splitlines()
+
+    def reject_constant(c):
+        raise ValueError(f"non-standard JSON constant {c}")
+
+    errors = []
+    last_ts = -1.0
+    n = 0
+    for i, line in enumerate(lines, 1):
+        line = line.strip()
+        if not line:
+            continue
+        n += 1
+        try:
+            e = json.loads(line, parse_constant=reject_constant)
+        except ValueError as err:
+            errors.append(f"line {i}: {err}")
+            continue
+        ev = e.get("ev")
+        required = EVENT_SCHEMA.get(ev)
+        if required is None:
+            errors.append(f"line {i}: unknown event type {ev!r}")
+            continue
+        missing = [f for f in ("ts", "tick") + required if f not in e]
+        if missing:
+            errors.append(f"line {i}: {ev} missing {missing}")
+        ts = e.get("ts")
+        if isinstance(ts, (int, float)):
+            if ts < last_ts:
+                errors.append(f"line {i}: ts went backwards "
+                              f"({ts} < {last_ts})")
+            last_ts = ts
+    return n, errors

@@ -74,6 +74,7 @@ from repro.models.transformer import (decode_scan, decode_scan_paged,
                                       init_cache, init_paged_cache,
                                       paged_unsupported_reason, prefill,
                                       prefill_paged, segments)
+from repro.obs import MetricsRegistry, annotate, named_scope
 from repro.serving.registry import (gather_adapters,
                                     gather_adapters_versioned)
 from repro.serving.scheduler import (PagePool, Scheduler, bucket_len,
@@ -94,7 +95,8 @@ class ServingEngine:
                  max_seq=64, cache_dtype=jnp.float32, kv_layout="auto",
                  page_size=16, n_pages=None, attn_backend="xla",
                  lora_backend="jnp", decode_backend="per-tick",
-                 decode_ticks=8, eos_id=None, feed=None):
+                 decode_ticks=8, eos_id=None, feed=None, metrics=None,
+                 trace=None):
         if cfg.family == "hybrid":
             raise NotImplementedError(
                 "hybrid cache layout (inner axis before batch) not wired")
@@ -128,6 +130,48 @@ class ServingEngine:
         self.decode_ticks = decode_ticks
         self.eos_id = eos_id
 
+        # observability (repro.obs): a MetricsRegistry by default
+        # (report()'s latency percentiles ride its histograms);
+        # metrics=False opts out entirely (the uninstrumented arm of
+        # the overhead guard in tests/test_obs.py). trace is opt-in —
+        # pass a TraceLog to get the structured event timeline.
+        if metrics is None:
+            metrics = MetricsRegistry()
+        self.metrics = metrics or None
+        self.trace = trace
+        if self.metrics is not None:
+            m = self.metrics
+            self._h_queue = m.histogram(
+                "repro_serve_queue_wait_seconds", "submit→admit wait")
+            self._h_ttft = m.histogram(
+                "repro_serve_ttft_seconds", "submit→first-token latency")
+            self._h_itl = m.histogram(
+                "repro_serve_intertoken_seconds", "inter-token gap")
+            self._h_e2e = m.histogram(
+                "repro_serve_e2e_seconds", "submit→retire latency")
+            self._h_prefill = m.histogram(
+                "repro_serve_prefill_batch_seconds",
+                "wall per prefill batch")
+            self._h_decode = m.histogram(
+                "repro_serve_decode_phase_seconds",
+                "wall per decode phase (one jitted dispatch)")
+            self._c_requests = m.counter(
+                "repro_serve_requests_total", "retired requests")
+            self._c_decoded = m.counter(
+                "repro_serve_tokens_decoded_total", "decode tokens")
+            self._c_prefilled = m.counter(
+                "repro_serve_tokens_prefilled_total", "prompt tokens")
+            self._g_occ = m.gauge(
+                "repro_serve_batch_occupancy", "active rows / max_batch")
+            self._g_pool = m.gauge(
+                "repro_serve_pool_occupancy", "used pages / capacity")
+        # registry-side events/latency report through the same sinks
+        if registry.trace is None:
+            registry.trace = trace
+        if registry.metrics is None:
+            registry.metrics = self.metrics
+        self.tick = 0                   # step() count (trace tick ids)
+
         if kv_layout == "paged":
             self.page_size = page_size
             # table width covers the largest prefill bucket (pow2 >= max_seq)
@@ -136,12 +180,13 @@ class ServingEngine:
                 n_pages = max_batch * (-(-max_seq // page_size)) + 1
             self.pool = PagePool(n_pages, page_size)
             self.scheduler = Scheduler(max_batch, pool=self.pool,
-                                       table_pages=self.table_pages)
+                                       table_pages=self.table_pages,
+                                       trace=trace)
             self.cache = init_paged_cache(cfg, n_pages, page_size,
                                           cache_dtype)
         else:
             self.pool = None
-            self.scheduler = Scheduler(max_batch)
+            self.scheduler = Scheduler(max_batch, trace=trace)
             self.cache = init_cache(cfg, max_batch, max_seq, cache_dtype)
         self._toks = np.zeros((max_batch, 1), np.int32)
         self._pos = np.zeros((max_batch,), np.int32)
@@ -170,38 +215,49 @@ class ServingEngine:
             def _gather(tables, slots, bufs):
                 return _adapters(gather_adapters(tables, local, slots))
 
+        # jax.named_scope names the HLO under each serving phase so a
+        # jax.profiler device capture attributes kernels back to the
+        # phase (and lines up with the host-side TraceLog timeline)
         def _prefill_dense_fn(tables, slot, buf, tokens):
             engine.prefill_retraces += 1
-            ad = _gather(tables, slot[None], buf[None])
-            logits, cache1, _ = prefill(cfg, params, ad, acfg, tokens,
-                                        max_seq, cache_dtype=cache_dtype)
-            return jnp.argmax(logits[:, -1], -1).astype(jnp.int32), cache1
+            with named_scope("serve.prefill_dense"):
+                ad = _gather(tables, slot[None], buf[None])
+                logits, cache1, _ = prefill(cfg, params, ad, acfg, tokens,
+                                            max_seq, cache_dtype=cache_dtype)
+                return (jnp.argmax(logits[:, -1], -1).astype(jnp.int32),
+                        cache1)
 
         def _prefill_paged_fn(tables, slots, bufs, tokens, lengths, bts,
                               cache):
             engine.prefill_retraces += 1
-            ad = _gather(tables, slots, bufs)
-            with grouped_lora_backend(engine.lora_backend):
-                logits, cache = prefill_paged(cfg, params, ad, acfg, tokens,
-                                              lengths, cache, bts)
-            return jnp.argmax(logits, -1).astype(jnp.int32), cache
+            with named_scope("serve.prefill_paged"):
+                ad = _gather(tables, slots, bufs)
+                with grouped_lora_backend(engine.lora_backend):
+                    logits, cache = prefill_paged(cfg, params, ad, acfg,
+                                                  tokens, lengths, cache,
+                                                  bts)
+                return jnp.argmax(logits, -1).astype(jnp.int32), cache
 
         def _decode_dense_fn(tables, slots, bufs, toks, pos, cache):
             engine.decode_retraces += 1
-            ad = _gather(tables, slots, bufs)
-            with grouped_lora_backend(engine.lora_backend):
-                logits, cache = decode_step(cfg, params, ad, acfg, toks,
-                                            pos, cache)
-            return jnp.argmax(logits[:, 0], -1).astype(jnp.int32), cache
+            with named_scope("serve.decode_dense"):
+                ad = _gather(tables, slots, bufs)
+                with grouped_lora_backend(engine.lora_backend):
+                    logits, cache = decode_step(cfg, params, ad, acfg, toks,
+                                                pos, cache)
+                return (jnp.argmax(logits[:, 0], -1).astype(jnp.int32),
+                        cache)
 
         def _decode_paged_fn(tables, slots, bufs, toks, pos, bts, cache):
             engine.decode_retraces += 1
-            ad = _gather(tables, slots, bufs)
-            with grouped_lora_backend(engine.lora_backend):
-                logits, cache = decode_step_paged(
-                    cfg, params, ad, acfg, toks, pos, cache, bts,
-                    attn_backend=engine.attn_backend)
-            return jnp.argmax(logits[:, 0], -1).astype(jnp.int32), cache
+            with named_scope("serve.decode_paged"):
+                ad = _gather(tables, slots, bufs)
+                with grouped_lora_backend(engine.lora_backend):
+                    logits, cache = decode_step_paged(
+                        cfg, params, ad, acfg, toks, pos, cache, bts,
+                        attn_backend=engine.attn_backend)
+                return (jnp.argmax(logits[:, 0], -1).astype(jnp.int32),
+                        cache)
 
         # fused multi-tick scans: the adapter gather hoists OUT of the
         # tick loop (slot/buf ids are loop-invariant between host syncs,
@@ -210,21 +266,23 @@ class ServingEngine:
         def _decode_scan_dense_fn(tables, slots, bufs, toks, pos, budget,
                                   cache, n_ticks):
             engine.decode_retraces += 1
-            ad = _gather(tables, slots, bufs)
-            with grouped_lora_backend(engine.lora_backend):
-                return decode_scan(cfg, params, ad, acfg, toks, pos,
-                                   budget, cache, n_ticks=n_ticks,
-                                   eos_id=engine.eos_id)
+            with named_scope("serve.decode_scan_dense"):
+                ad = _gather(tables, slots, bufs)
+                with grouped_lora_backend(engine.lora_backend):
+                    return decode_scan(cfg, params, ad, acfg, toks, pos,
+                                       budget, cache, n_ticks=n_ticks,
+                                       eos_id=engine.eos_id)
 
         def _decode_scan_paged_fn(tables, slots, bufs, toks, pos, budget,
                                   bts, cache, n_ticks):
             engine.decode_retraces += 1
-            ad = _gather(tables, slots, bufs)
-            with grouped_lora_backend(engine.lora_backend):
-                return decode_scan_paged(
-                    cfg, params, ad, acfg, toks, pos, budget, cache, bts,
-                    n_ticks=n_ticks, eos_id=engine.eos_id,
-                    attn_backend=engine.attn_backend)
+            with named_scope("serve.decode_scan_paged"):
+                ad = _gather(tables, slots, bufs)
+                with grouped_lora_backend(engine.lora_backend):
+                    return decode_scan_paged(
+                        cfg, params, ad, acfg, toks, pos, budget, cache,
+                        bts, n_ticks=n_ticks, eos_id=engine.eos_id,
+                        attn_backend=engine.attn_backend)
 
         # paged prefill retraces per (group, bucket) pair; decode per page
         # bucket — both O(log) families. The dense fallback retraces per
@@ -249,7 +307,11 @@ class ServingEngine:
 
     def reset_stats(self):
         """Zero throughput counters (e.g. after a warm-up pass); keeps the
-        compiled functions, cache buffers, and registry residency."""
+        compiled functions, cache buffers, and registry residency.
+        Obs histograms/gauges reset with the window; obs counters stay
+        lifetime-monotonic (Prometheus semantics)."""
+        if self.metrics is not None:
+            self.metrics.reset_window()
         self.finished = {}
         self.decoded_tokens = self.prefill_tokens = self.decode_steps = 0
         self.prefilled_requests = self.prefill_batch_count = 0
@@ -290,6 +352,9 @@ class ServingEngine:
         scheduler/registry bookkeeping lives at step boundaries."""
         if self._t0 is None:
             self._t0 = time.perf_counter()
+        self.tick += 1
+        if self.trace is not None:
+            self.trace.current_tick = self.tick
         # publishes that unblocked at the last tick's retirement commit
         # here, so this tick's admissions already read the new round
         self._refresh()
@@ -305,12 +370,20 @@ class ServingEngine:
         self._retire_done()
         if self.scheduler.active:
             self.host_syncs += 1
+            rows = len(self.scheduler.active)
             t0 = time.perf_counter()
             if self.decode_backend == "fused":
-                self._decode_fused_phase()
+                ticks = self._decode_fused_phase()
             else:
                 self._decode_per_tick_phase()
-            self._decode_wall += time.perf_counter() - t0
+                ticks = 1
+            wall = time.perf_counter() - t0
+            self._decode_wall += wall
+            if self.metrics is not None:
+                self._h_decode.observe(wall)
+            if self.trace is not None:
+                self.trace.emit("decode_scan", ticks=ticks, rows=rows,
+                                wall_s=wall)
             self._refresh()
             self._retire_done()
 
@@ -333,28 +406,40 @@ class ServingEngine:
 
     def _tick_pool_stats(self, ticks=1):
         self._occ_sum += self.scheduler.occupancy * ticks
+        if self.metrics is not None:
+            self._g_occ.set(self.scheduler.occupancy)
         if self.pool is not None:
             used = self.pool.used_count
             held = sum(s.pos + 1 for s in self.scheduler.active.values())
             self._page_util_sum += (held / (used * self.page_size)
                                     if used else 0.0) * ticks
             self._pool_occ_sum += used / self.pool.capacity * ticks
+            if self.metrics is not None:
+                self._g_pool.set(used / self.pool.capacity)
 
     def _decode_per_tick_phase(self):
         """One grouped decode step + host bookkeeping for every row."""
         if self.kv_layout == "paged":
-            out = self._decode_paged_step()
+            with annotate("serve.decode"):
+                out = self._decode_paged_step()
         else:
-            out, self.cache = self._decode(
-                self.registry.tables, jnp.asarray(self._slots),
-                jnp.asarray(self._bufs), jnp.asarray(self._toks),
-                jnp.asarray(self._pos), self.cache)
-            out = np.asarray(out)
+            with annotate("serve.decode"):
+                out, self.cache = self._decode(
+                    self.registry.tables, jnp.asarray(self._slots),
+                    jnp.asarray(self._bufs), jnp.asarray(self._toks),
+                    jnp.asarray(self._pos), self.cache)
+                out = np.asarray(out)
+        now = time.perf_counter()
         for row, seq in list(self.scheduler.active.items()):
             tok = int(out[row])
             self._account_token(seq, tok)
+            if self.metrics is not None:
+                self._h_itl.observe(now - seq.t_last)
+            seq.t_last = now
             self._toks[row, 0] = tok
             self._pos[row] = seq.pos
+        if self.metrics is not None:
+            self._c_decoded.inc(len(self.scheduler.active))
         self.decode_steps += 1
         self._tick_pool_stats()
 
@@ -375,41 +460,55 @@ class ServingEngine:
                 self.pool.pages_needed(s.pos + min(T, s.budget))
                 - self.pool.pages_needed(s.pos) for s in active.values())
         pos_before = {row: s.pos for row, s in active.items()}
-        if self.kv_layout == "paged":
-            # bucket the table to the deepest position any row can
-            # REACH inside the window (per-tick buckets max_pos + 1)
-            max_need = max(s.pos + min(T, s.budget)
-                           for s in active.values())
-            npg = self._bucketed_npages(max_need)
-            bts = jnp.asarray(self.scheduler.block_tables[:, :npg])
-            out, _, _, _, self.cache = self._decode_scan(
-                self.registry.tables, jnp.asarray(self._slots),
-                jnp.asarray(self._bufs), jnp.asarray(self._toks),
-                jnp.asarray(self._pos), jnp.asarray(budgets), bts,
-                self.cache, T)
-        else:
-            out, _, _, _, self.cache = self._decode_scan(
-                self.registry.tables, jnp.asarray(self._slots),
-                jnp.asarray(self._bufs), jnp.asarray(self._toks),
-                jnp.asarray(self._pos), jnp.asarray(budgets),
-                self.cache, T)
-        out = np.asarray(out)                        # (T, B)
+        with annotate("serve.decode_scan"):
+            if self.kv_layout == "paged":
+                # bucket the table to the deepest position any row can
+                # REACH inside the window (per-tick buckets max_pos + 1)
+                max_need = max(s.pos + min(T, s.budget)
+                               for s in active.values())
+                npg = self._bucketed_npages(max_need)
+                bts = jnp.asarray(self.scheduler.block_tables[:, :npg])
+                out, _, _, _, self.cache = self._decode_scan(
+                    self.registry.tables, jnp.asarray(self._slots),
+                    jnp.asarray(self._bufs), jnp.asarray(self._toks),
+                    jnp.asarray(self._pos), jnp.asarray(budgets), bts,
+                    self.cache, T)
+            else:
+                out, _, _, _, self.cache = self._decode_scan(
+                    self.registry.tables, jnp.asarray(self._slots),
+                    jnp.asarray(self._bufs), jnp.asarray(self._toks),
+                    jnp.asarray(self._pos), jnp.asarray(budgets),
+                    self.cache, T)
+            out = np.asarray(out)                    # (T, B)
+        now = time.perf_counter()
+        booked_total = 0
         for row, seq in list(active.items()):
             remaining = int(budgets[row])
+            booked = 0
             for t in range(T):
                 if remaining <= 0:
                     break
                 remaining -= 1
+                booked += 1
                 if self._account_token(seq, int(out[t, row])):
                     remaining = 0                    # eos: budget zeroed
+            if booked and self.metrics is not None:
+                # a T-token block arrives at one host sync: book the
+                # mean gap once per token of the block
+                self._h_itl.observe((now - seq.t_last) / booked, n=booked)
+            seq.t_last = now
+            booked_total += booked
             self._toks[row, 0] = seq.generated[-1]
             self._pos[row] = seq.pos
             if self.pool is not None:
                 self._pages_window_used += (
                     self.pool.pages_needed(seq.pos)
                     - self.pool.pages_needed(pos_before[row]))
+        if self.metrics is not None:
+            self._c_decoded.inc(booked_total)
         self.decode_steps += T
         self._tick_pool_stats(ticks=T)
+        return T
 
     def _plan_ticks(self, budgets):
         """Ticks for this fused scan: the configured ``decode_ticks``,
@@ -424,6 +523,9 @@ class ServingEngine:
         T = max(1, 1 << (T.bit_length() - 1))        # pow2 floor
         if self.pool is not None:
             while T > 1 and not self._window_covered(T):
+                if self.trace is not None:
+                    self.trace.emit("tick_shrink", from_ticks=T,
+                                    to_ticks=T >> 1)
                 T >>= 1
                 self.fused_tick_shrinks += 1
         return T
@@ -453,12 +555,20 @@ class ServingEngine:
         """PR-1 fallback: batch-1 prefill per request, row scatter."""
         for seq in admitted:
             row, req = seq.row, seq.request
-            tok0, cache1 = self._prefill(
-                self.registry.tables, jnp.int32(seq.slot),
-                jnp.int32(seq.buf), jnp.asarray(req.prompt[None]))
-            self.cache = self._scatter(self.cache, cache1, row)
+            t0 = time.perf_counter()
+            with annotate("serve.prefill"):
+                tok0, cache1 = self._prefill(
+                    self.registry.tables, jnp.int32(seq.slot),
+                    jnp.int32(seq.buf), jnp.asarray(req.prompt[None]))
+                self.cache = self._scatter(self.cache, cache1, row)
+            wall = time.perf_counter() - t0
             self._account_prefill(seq, int(tok0[0]))
             self.prefill_batch_count += 1
+            if self.metrics is not None:
+                self._h_prefill.observe(wall)
+            if self.trace is not None:
+                self.trace.emit("prefill_batch", bucket=len(req.prompt),
+                                rows=1, wall_s=wall)
 
     def _prefill_paged_groups(self, admitted):
         """Chunked batched prefill: one forward per length bucket, K/V
@@ -477,21 +587,32 @@ class ServingEngine:
                 slots[g] = seq.slot
                 bufs[g] = seq.buf
                 bts[g] = self.scheduler.block_tables[seq.row]
-            tok0, self.cache = self._prefill(
-                self.registry.tables, jnp.asarray(slots), jnp.asarray(bufs),
-                jnp.asarray(toks), jnp.asarray(lens), jnp.asarray(bts),
-                self.cache)
-            tok0 = np.asarray(tok0)
+            t0 = time.perf_counter()
+            with annotate("serve.prefill"):
+                tok0, self.cache = self._prefill(
+                    self.registry.tables, jnp.asarray(slots),
+                    jnp.asarray(bufs), jnp.asarray(toks), jnp.asarray(lens),
+                    jnp.asarray(bts), self.cache)
+                tok0 = np.asarray(tok0)
+            wall = time.perf_counter() - t0
             self.prefill_batch_count += 1
+            if self.metrics is not None:
+                self._h_prefill.observe(wall)
+            if self.trace is not None:
+                self.trace.emit("prefill_batch", bucket=L, rows=len(group),
+                                wall_s=wall)
             for g, seq in enumerate(group):
                 self._account_prefill(seq, int(tok0[g]))
 
     def _account_prefill(self, seq, first_token):
         seq.generated.append(first_token)
+        seq.t_first = seq.t_last = time.perf_counter()
         if self.eos_id is not None and first_token == self.eos_id:
             seq.finished = True          # eos straight out of prefill
         self.prefill_tokens += len(seq.request.prompt)
         self.prefilled_requests += 1
+        if self.metrics is not None:
+            self._c_prefilled.inc(len(seq.request.prompt))
         self._toks[seq.row, 0] = first_token
         self._pos[seq.row] = seq.pos
         self._slots[seq.row] = seq.slot
@@ -542,6 +663,21 @@ class ServingEngine:
                     self._pos[row] = 0
                     self._toks[row, 0] = 0
                 req = seq.request
+                now = time.perf_counter()
+                queue_wait = seq.t_admit - req.t_submit
+                ttft = seq.t_first - req.t_submit
+                e2e = now - req.t_submit
+                if self.metrics is not None:
+                    self._h_queue.observe(queue_wait)
+                    self._h_ttft.observe(ttft)
+                    self._h_e2e.observe(e2e)
+                    self._c_requests.inc()
+                if self.trace is not None:
+                    self.trace.emit("retire", rid=req.rid,
+                                    client=req.client_id,
+                                    tokens=len(seq.generated),
+                                    queue_wait_s=queue_wait, ttft_s=ttft,
+                                    e2e_s=e2e, version=seq.version)
                 self.finished[req.rid] = {
                     "client_id": req.client_id,
                     "tokens": np.asarray(seq.generated, np.int32),
@@ -555,8 +691,23 @@ class ServingEngine:
             steps += 1
         return self.report()
 
+    def _latency_stats(self):
+        """Latency percentile keys for ``report()``, read off the obs
+        histograms (windowed: ``reset_stats()`` clears them, so a timed
+        pass is not polluted by warm-up). All None when metrics are off
+        or the window is empty — report consumers must handle null."""
+        out = {}
+        pairs = (("queue_wait", "_h_queue"), ("ttft", "_h_ttft"),
+                 ("intertoken", "_h_itl"), ("e2e", "_h_e2e"))
+        for key, attr in pairs:
+            h = getattr(self, attr) if self.metrics is not None else None
+            snap = h.snapshot() if h is not None and h.count else None
+            for stat in ("p50", "p90", "p99", "mean"):
+                out[f"{key}_{stat}_s"] = snap[stat] if snap else None
+        return out
+
     def report(self):
-        dt = (time.perf_counter() - self._t0) if self._t0 else float("nan")
+        dt = (time.perf_counter() - self._t0) if self._t0 else None
         total = self.decoded_tokens + self.prefill_tokens
         generated = self.decoded_tokens + self.prefilled_requests
         steps = self.decode_steps
@@ -568,11 +719,12 @@ class ServingEngine:
             "decode_tokens": self.decoded_tokens,
             "generated_tokens": generated,
             "tokens": total,
-            "tok_per_s": total / dt if dt and dt > 0 else float("nan"),
-            "gen_tok_per_s": generated / dt if dt and dt > 0 else
-            float("nan"),
+            # rates and ratios are None (JSON null) when undefined — never
+            # NaN, which is invalid JSON and poisons comparisons downstream
+            "tok_per_s": total / dt if dt and dt > 0 else None,
+            "gen_tok_per_s": generated / dt if dt and dt > 0 else None,
             "decode_tok_per_s": (self.decoded_tokens / self._decode_wall
-                                 if self._decode_wall else float("nan")),
+                                 if self._decode_wall else None),
             "decode_steps": steps,
             "prefill_batches": self.prefill_batch_count,
             "prefill_retraces": self.prefill_retraces,
@@ -583,8 +735,7 @@ class ServingEngine:
             # T-tick page windows compared to what the scans wrote
             "host_syncs": self.host_syncs,
             "host_syncs_per_token": (self.host_syncs / self.decoded_tokens
-                                     if self.decoded_tokens else
-                                     float("nan")),
+                                     if self.decoded_tokens else None),
             "fused_scans": self.fused_scans,
             "fused_ticks_mean": (self.fused_ticks / self.fused_scans
                                  if self.fused_scans else 0.0),
@@ -593,11 +744,11 @@ class ServingEngine:
             "pages_window_used": self._pages_window_used,
             "batch_occupancy": self._occ_sum / steps if steps else 0.0,
             "page_utilization": (self._page_util_sum / steps
-                                 if steps and self.pool is not None else
-                                 float("nan")),
+                                 if steps and self.pool is not None
+                                 else None),
             "pool_occupancy": (self._pool_occ_sum / steps
-                               if steps and self.pool is not None else
-                               float("nan")),
+                               if steps and self.pool is not None
+                               else None),
             "adapter_hit_rate": self.registry.stats["hit_rate"],
             "kv_layout": self.kv_layout,
             "lora_backend": self.lora_backend,
@@ -618,4 +769,6 @@ class ServingEngine:
             "staleness_max": self._stale_max,
             "tenant_staleness": dict(self._tenant_stale),
             "wall_s": dt,
+            # per-request latency percentiles (repro.obs histograms)
+            **self._latency_stats(),
         }

@@ -32,7 +32,6 @@ so an in-flight row can never read round-t A against round-t+1 B.
 from __future__ import annotations
 
 import threading
-import time
 
 import jax
 import numpy as np
@@ -60,6 +59,7 @@ class AdapterFeed:
 
     def __init__(self):
         self._lock = threading.Lock()
+        self._event = threading.Event()  # set while a publish is waiting
         self._slot = None               # (version, {cid: host tree})
         self.published = 0
         self.coalesced = 0
@@ -76,12 +76,21 @@ class AdapterFeed:
                 trees = old
             self._slot = (version, trees)
             self.published += 1
+            self._event.set()
 
     def poll(self):
         """Consumer side: latest unconsumed ``(version, trees)`` or None."""
         with self._lock:
             slot, self._slot = self._slot, None
+            self._event.clear()
         return slot
+
+    def wait(self, timeout=None):
+        """Block until a publish is pending (or ``timeout`` seconds
+        elapse); returns True when one is waiting. The serving loop
+        parks here when it has nothing to decode, instead of polling
+        on a fixed sleep."""
+        return self._event.wait(timeout)
 
     @property
     def pending(self):
@@ -92,7 +101,7 @@ class AdapterFeed:
 def train_and_serve(cfg, acfg, fed, *, rounds=6, n_slots=4, requests=16,
                     max_new_tokens=8, batch_size=8, publish_every=1,
                     submit_every=2, seed=0, engine_kw=None, log=None,
-                    max_steps=200_000):
+                    max_steps=200_000, metrics=None, trace=None):
     """Run federated training in a background thread while the foreground
     serving engine absorbs each round's adapters live.
 
@@ -102,6 +111,11 @@ def train_and_serve(cfg, acfg, fed, *, rounds=6, n_slots=4, requests=16,
     prompts while ``rounds`` rounds train and publish. Returns
     ``(report, history)`` — the engine report carries version/staleness
     stats, the history is ``run_rounds``'s.
+
+    ``metrics``/``trace`` (repro.obs) are shared across the WHOLE loop:
+    the engine's serve-side histograms and ``run_rounds``'s per-round
+    train metrics land in ONE ``MetricsRegistry``, and the trace
+    timeline interleaves admits/retires with flips.
     """
     from repro.core import federation
     from repro.data.synthetic import make_lm_task
@@ -120,14 +134,15 @@ def train_and_serve(cfg, acfg, fed, *, rounds=6, n_slots=4, requests=16,
     kw = {"max_batch": 4, "max_seq": 32}
     kw.update(engine_kw or {})
     engine = ServingEngine(cfg, system.params, acfg, registry, feed=feed,
-                           **kw)
+                           metrics=metrics, trace=trace, **kw)
 
     history = {}
 
     def trainer():
         history.update(federation.run_rounds(
             system, clients_data, rounds=rounds, batch_size=batch_size,
-            seed=seed, publish=feed.publish, publish_every=publish_every))
+            seed=seed, publish=feed.publish, publish_every=publish_every,
+            metrics=engine.metrics))
 
     thread = threading.Thread(target=trainer, daemon=True)
     rng = np.random.default_rng(seed)
@@ -151,9 +166,10 @@ def train_and_serve(cfg, acfg, fed, *, rounds=6, n_slots=4, requests=16,
         engine.step()
         steps += 1
         if engine.scheduler.idle and submitted >= budget:
-            # nothing to decode and nothing unlocked: yield to the
-            # trainer thread until the next publish arrives
-            time.sleep(0.005)
+            # nothing to decode and nothing unlocked: park on the feed's
+            # event until the next publish arrives (bounded so the loop
+            # still notices trainer exit), instead of a fixed-sleep poll
+            feed.wait(timeout=0.05)
         if steps >= max_steps:
             raise RuntimeError("train_and_serve failed to drain")
     thread.join()

@@ -40,6 +40,7 @@ of already-admitted sequences never change mid-generation.
 """
 from __future__ import annotations
 
+import time
 from collections import OrderedDict
 
 import jax
@@ -143,6 +144,10 @@ class AdapterRegistry:
         self._pending = None                # staged publish awaiting flip
         self.hits = self.misses = self.evictions = 0
         self.flips = self.deferred_flips = self.publishes = 0
+        # observability hooks (repro.obs) — the engine wires these to
+        # its own TraceLog / MetricsRegistry; both optional
+        self.trace = None
+        self.metrics = None
 
     # -- cold store ---------------------------------------------------------
     def ingest(self, client_id, client_tree):
@@ -216,6 +221,12 @@ class AdapterRegistry:
                         f"{client_id} until one retires")
                 slot = self._lru.pop(victim)
                 self.evictions += 1
+                if self.trace is not None:
+                    self.trace.emit("eviction", client=victim, slot=slot)
+                if self.metrics is not None:
+                    self.metrics.counter(
+                        "repro_adapter_evictions_total",
+                        "LRU slot evictions").inc()
             self.misses += 1
             self._write_slot(slot, client_id, self.active_buf)
             self._lru[client_id] = slot
@@ -293,13 +304,21 @@ class AdapterRegistry:
             src = next(iter(client_trees.values()))
         staged = {cid: self._local_leaves(t)
                   for cid, t in client_trees.items()}
+        # publish→flip latency is measured from the OLDEST unflipped
+        # stage: a coalesced publish inherits the pending stamp
+        staged_t = time.perf_counter()
         if self._pending is not None:       # coalesce: newer round wins
             merged = self._pending["clients"]
             merged.update(staged)
             staged = merged
+            staged_t = self._pending["staged_t"]
         self._pending = {"version": version, "clients": staged,
-                         "shared": self._shared_leaves(src)}
+                         "shared": self._shared_leaves(src),
+                         "staged_t": staged_t}
         self.publishes += 1
+        if self.metrics is not None:
+            self.metrics.counter("repro_adapter_publishes_total",
+                                 "federation rounds staged").inc()
         return self.try_flip()
 
     def try_flip(self):
@@ -312,6 +331,10 @@ class AdapterRegistry:
         target = 1 - self.active_buf
         if self._buf_rows[target] > 0:
             self.deferred_flips += 1
+            if self.trace is not None:
+                self.trace.emit("deferred_flip",
+                                version=self._pending["version"],
+                                blocking_rows=self._buf_rows[target])
             return False
         pend = self._pending
         shared = iter(pend["shared"])
@@ -334,6 +357,15 @@ class AdapterRegistry:
         self.version = pend["version"]
         self.flips += 1
         self._pending = None
+        if self.trace is not None:
+            self.trace.emit("flip", version=self.version)
+        if self.metrics is not None:
+            self.metrics.counter("repro_adapter_flips_total",
+                                 "committed buffer flips").inc()
+            self.metrics.histogram(
+                "repro_adapter_publish_to_flip_seconds",
+                "stage→commit latency of a published round").observe(
+                time.perf_counter() - pend["staged_t"])
         return True
 
     # -- views --------------------------------------------------------------

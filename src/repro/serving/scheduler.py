@@ -22,6 +22,7 @@ writes land there harmlessly and reads are masked by position.
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 
 import numpy as np
@@ -96,6 +97,7 @@ class Request:
     prompt: np.ndarray                 # (L,) int32 prompt token ids
     max_new_tokens: int = 16
     rid: int = -1                      # assigned on submit
+    t_submit: float = 0.0              # perf_counter at submit
 
 
 @dataclasses.dataclass
@@ -110,6 +112,10 @@ class Sequence:
     buf: int = 0                       # registry buffer at admission
     version: int = 0                   # adapter round at admission
     finished: bool = False             # early stop (engine saw eos_id)
+    # latency trace stamps (perf_counter; see repro.obs):
+    t_admit: float = 0.0               # left the queue for a batch row
+    t_first: float = 0.0               # first token visible on the host
+    t_last: float = 0.0                # newest token visible on the host
 
     @property
     def budget(self):
@@ -123,9 +129,10 @@ class Sequence:
 
 
 class Scheduler:
-    def __init__(self, max_batch, *, pool=None, table_pages=0):
+    def __init__(self, max_batch, *, pool=None, table_pages=0, trace=None):
         self.max_batch = max_batch
         self.pool = pool
+        self.trace = trace             # optional repro.obs.TraceLog
         self.queue = deque()
         self.active = {}               # row → Sequence
         self._free_rows = list(range(max_batch))[::-1]
@@ -135,9 +142,12 @@ class Scheduler:
 
     def submit(self, client_id, prompt, max_new_tokens=16):
         req = Request(client_id, np.asarray(prompt, np.int32),
-                      max_new_tokens, rid=self._next_rid)
+                      max_new_tokens, rid=self._next_rid,
+                      t_submit=time.perf_counter())
         self._next_rid += 1
         self.queue.append(req)
+        if self.trace is not None:
+            self.trace.emit("submit", rid=req.rid, client=client_id)
         return req.rid
 
     def admit(self, registry):
@@ -158,12 +168,22 @@ class Scheduler:
                 pages = self.pool.alloc(needed)
                 if pages is None:      # pool exhausted: stay queued
                     registry.release(req.client_id)
+                    if self.trace is not None:
+                        self.trace.emit("pool_exhausted",
+                                        client=req.client_id,
+                                        needed=needed,
+                                        free=self.pool.free_count)
                     break
             self.queue.popleft()
             row = self._free_rows.pop()
+            now = time.perf_counter()
             seq = Sequence(req, row, slot, pos=len(req.prompt), pages=pages,
                            buf=registry.retain_buffer(),
-                           version=registry.version)
+                           version=registry.version, t_admit=now)
+            if self.trace is not None:
+                self.trace.emit("admit", rid=req.rid, client=req.client_id,
+                                row=row, slot=slot,
+                                queue_wait_s=now - req.t_submit)
             if self.pool is not None:
                 self.block_tables[row] = 0
                 self.block_tables[row, :len(pages)] = pages

@@ -1,0 +1,319 @@
+"""repro.obs: metrics math vs numpy, trace schema round-trips, the
+Prometheus exporter, per-request latency keys in engine reports, and the
+instrumentation overhead guard (≤5% on the serving hot path)."""
+import json
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import AdapterConfig, get_config, reduced
+from repro.core.adapters import init_adapters
+from repro.models.transformer import init_model
+from repro.obs import (EVENT_SCHEMA, Histogram, MetricsRegistry, Timer,
+                       TraceLog, sanitize, to_json, to_prometheus,
+                       validate_exposition, validate_trace, write_metrics)
+from repro.serving import AdapterRegistry, ServingEngine
+from repro.serving.demo import synthetic_clients
+
+KEY = jax.random.PRNGKey(0)
+
+LATENCY_REPORT_KEYS = [f"{k}_{s}_s"
+                       for k in ("queue_wait", "ttft", "intertoken", "e2e")
+                       for s in ("p50", "p90", "p99", "mean")]
+
+
+def tiny_cfg():
+    return reduced(get_config("deepseek-7b"), n_layers=2, d_model=64)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = tiny_cfg()
+    acfg = AdapterConfig(mode="fedsa", rank=4)
+    params = init_model(KEY, cfg, jnp.float32)
+    base = init_adapters(KEY, cfg, acfg)
+    trees = [t["adapters"] for t in
+             synthetic_clients({"adapters": base}, 4, seed=50, scale=0.05)]
+    return cfg, acfg, params, base, trees
+
+
+def make_engine(setup, *, metrics=None, trace=None, **kw):
+    cfg, acfg, params, base, trees = setup
+    reg = AdapterRegistry({"adapters": base}, n_slots=4)
+    for i, t in enumerate(trees):
+        reg.ingest(i, {"adapters": t})
+    return ServingEngine(cfg, params, acfg, reg, max_batch=4, max_seq=32,
+                         metrics=metrics, trace=trace, **kw)
+
+
+def drive(engine, requests=6, new_tokens=6, seed=0):
+    rng = np.random.default_rng(seed)
+    for r in range(requests):
+        engine.submit(r % 4, rng.integers(0, 512, int(rng.integers(4, 12))),
+                      max_new_tokens=new_tokens)
+    return engine.run()
+
+
+# ---------------------------------------------------------------------------
+# Histogram math
+# ---------------------------------------------------------------------------
+
+def test_histogram_percentiles_match_numpy():
+    rng = np.random.default_rng(7)
+    data = np.exp(rng.normal(-5.0, 1.2, size=20_000))   # ~latency-shaped
+    h = Histogram("h")
+    for v in data:
+        h.observe(v)
+    assert h.count == len(data)
+    assert h.sum == pytest.approx(float(data.sum()), rel=1e-9)
+    assert h.min == pytest.approx(float(data.min()))
+    assert h.max == pytest.approx(float(data.max()))
+    # worst-case relative error is one bucket ratio (10^(1/6) ≈ 1.47x);
+    # with geometric interpolation the estimate lands far closer
+    ratio = 10.0 ** (1.0 / 6.0)
+    for q in (50, 90, 99):
+        exact = float(np.percentile(data, q))
+        est = h.percentile(q)
+        assert exact / ratio <= est <= exact * ratio, (q, est, exact)
+        assert est == pytest.approx(exact, rel=0.10)
+
+
+def test_histogram_block_observe_and_bounds():
+    h = Histogram("h")
+    h.observe(0.01, n=7)                     # fused-decode block booking
+    assert h.count == 7
+    assert h.sum == pytest.approx(0.07)
+    assert h.percentile(50) == pytest.approx(0.01, rel=1e-6)
+    # out-of-range values land in the edge buckets; estimates stay
+    # inside the matched bucket, clamped to the observed extremes
+    h2 = Histogram("h2", lo=1e-3, hi=1.0)
+    h2.observe(1e-9)
+    h2.observe(50.0)
+    assert 1e-9 <= h2.percentile(1) <= 1e-3   # underflow bucket
+    assert h2.percentile(99) == pytest.approx(50.0)
+    assert Histogram("e").percentile(50) is None
+
+
+def test_counter_gauge_and_registry_semantics():
+    m = MetricsRegistry()
+    c = m.counter("c")
+    g = m.gauge("g")
+    h = m.histogram("h")
+    assert m.counter("c") is c               # get-or-create shares
+    with pytest.raises(TypeError):
+        m.gauge("c")                         # a name may not change kind
+    c.inc(3)
+    g.set(0.5)
+    h.observe(1.0)
+    with pytest.raises(AssertionError):
+        c.inc(-1)                            # counters are monotonic
+    m.reset_window()                         # histograms/gauges reset...
+    assert h.count == 0 and g.value == 0.0
+    assert c.value == 3                      # ...counters never
+
+
+def test_timer_records_into_histogram():
+    m = MetricsRegistry()
+    with m.timer("span_seconds") as t:
+        pass
+    assert t.elapsed >= 0.0
+    assert m.histogram("span_seconds").count == 1
+    plain = Timer()
+    with plain:
+        pass
+    assert plain.elapsed >= 0.0
+
+
+# ---------------------------------------------------------------------------
+# Trace timeline
+# ---------------------------------------------------------------------------
+
+def test_trace_schema_round_trip():
+    log = TraceLog(validate=True)
+    log.current_tick = 3
+    fill = {"rid": 1, "client": 0, "row": 0, "slot": 0, "queue_wait_s": 0.1,
+            "bucket": 16, "rows": 2, "wall_s": 0.01, "ticks": 4,
+            "version": 1, "blocking_rows": 1, "needed": 2, "free": 0,
+            "from_ticks": 8, "to_ticks": 4, "tokens": 6, "ttft_s": 0.2,
+            "e2e_s": 0.3}
+    for ev, required in EVENT_SCHEMA.items():
+        log.emit(ev, **{k: fill[k] for k in required})
+    n, errors = validate_trace(log.to_jsonl())
+    assert n == len(EVENT_SCHEMA)
+    assert errors == []
+    for rec in log:
+        assert rec["tick"] == 3 and rec["ts"] >= 0.0
+
+
+def test_trace_rejects_unknown_and_bounds():
+    log = TraceLog(maxlen=2, validate=True)
+    with pytest.raises(KeyError):
+        log.emit("made_up_event", x=1)
+    with pytest.raises(ValueError):
+        log.emit("flip")                     # missing required version
+    log.emit("flip", version=1)
+    log.emit("flip", version=2)
+    log.emit("flip", version=3)              # over maxlen: dropped
+    assert len(log) == 2 and log.dropped == 1
+
+
+def test_validate_trace_catches_bad_lines():
+    n, errors = validate_trace('{"ev": "flip", "ts": NaN, "tick": 1}')
+    assert errors                            # NaN is not strict JSON
+    n, errors = validate_trace(
+        '{"ev": "flip", "version": 1, "ts": 2.0, "tick": 1}\n'
+        '{"ev": "flip", "version": 2, "ts": 1.0, "tick": 2}')
+    assert any("backwards" in e for e in errors)
+    n, errors = validate_trace('{"ev": "nope", "ts": 0.0, "tick": 0}')
+    assert any("unknown" in e for e in errors)
+
+
+# ---------------------------------------------------------------------------
+# Exporters
+# ---------------------------------------------------------------------------
+
+def test_prometheus_exposition_valid_and_cumulative():
+    m = MetricsRegistry()
+    m.counter("repro_c_total", "a counter").inc(5)
+    m.gauge("repro_g", "a gauge").set(0.25)
+    h = m.histogram("repro_h_seconds", "a histogram")
+    for v in (1e-4, 1e-3, 1e-3, 0.5, 200.0):   # incl. +Inf overflow
+        h.observe(v)
+    text = to_prometheus(m)
+    n, errors = validate_exposition(text)
+    assert errors == [] and n > 0
+    assert "# TYPE repro_c_total counter" in text
+    assert "repro_c_total 5" in text
+    assert 'repro_h_seconds_bucket{le="+Inf"} 5' in text
+    assert "repro_h_seconds_count 5" in text
+    # validator actually catches breakage
+    broken = text.replace('le="+Inf"} 5', 'le="+Inf"} 4')
+    _, errors = validate_exposition(broken)
+    assert errors
+
+
+def test_sanitize_and_json_snapshot_strict():
+    nested = {"a": float("nan"), "b": [1.0, float("inf")],
+              "c": {"d": -float("inf"), "e": 2}}
+    clean = sanitize(nested)
+    assert clean == {"a": None, "b": [1.0, None], "c": {"d": None, "e": 2}}
+    m = MetricsRegistry()
+    m.histogram("h")                         # empty: min/max/percentiles None
+    m.counter("c").inc()
+    json.dumps(to_json(m), allow_nan=False)  # must not raise
+
+
+def test_write_metrics_formats(tmp_path):
+    m = MetricsRegistry()
+    m.counter("repro_c_total").inc(2)
+    prom = write_metrics(tmp_path / "out.prom", m)
+    _, errors = validate_exposition(prom.read_text())
+    assert errors == []
+    js = write_metrics(tmp_path / "out.json", m)
+    assert json.loads(js.read_text())["counters"]["repro_c_total"] == 2
+
+
+# ---------------------------------------------------------------------------
+# Engine integration: report schema, counters, trace timeline
+# ---------------------------------------------------------------------------
+
+def test_engine_report_latency_schema_and_counters(setup):
+    trace = TraceLog()
+    engine = make_engine(setup, trace=trace)
+    rep = drive(engine)
+    for k in LATENCY_REPORT_KEYS:
+        assert k in rep, f"report missing {k}"
+        assert isinstance(rep[k], float) and rep[k] > 0.0, (k, rep[k])
+    # ordering sanity: a request's e2e covers its ttft covers its queue wait
+    assert rep["queue_wait_p50_s"] <= rep["ttft_p50_s"] <= rep["e2e_p50_s"]
+    # report must serialize as STRICT json (no NaN/Infinity anywhere)
+    json.dumps(sanitize(rep), allow_nan=False)
+    snap = engine.metrics.snapshot()
+    assert snap["counters"]["repro_serve_requests_total"] == rep["requests"]
+    assert (snap["counters"]["repro_serve_tokens_decoded_total"]
+            == rep["decode_tokens"])
+    assert (snap["counters"]["repro_serve_tokens_prefilled_total"]
+            == rep["prefill_tokens"])
+    h = snap["histograms"]["repro_serve_e2e_seconds"]
+    assert h["count"] == rep["requests"]
+
+    # counters survive reset_stats() (lifetime-monotonic); histograms
+    # re-window so the second pass's percentiles cover only that pass
+    first_requests = rep["requests"]
+    engine.reset_stats()
+    assert engine.metrics.snapshot()["histograms"][
+        "repro_serve_e2e_seconds"]["count"] == 0
+    rep2 = drive(engine, seed=1)
+    snap2 = engine.metrics.snapshot()
+    assert (snap2["counters"]["repro_serve_requests_total"]
+            == first_requests + rep2["requests"])
+    assert snap2["histograms"]["repro_serve_e2e_seconds"][
+        "count"] == rep2["requests"]
+
+    # the trace carries the full request lifecycle, in valid JSONL
+    n, errors = validate_trace(engine.trace.to_jsonl())
+    assert errors == []
+    evs = {e["ev"] for e in trace.events}
+    assert {"submit", "admit", "prefill_batch", "decode_scan",
+            "retire"} <= evs
+    retires = trace.by_type("retire")
+    assert len(retires) == first_requests + rep2["requests"]
+    for r in retires:
+        assert r["e2e_s"] >= r["ttft_s"] >= r["queue_wait_s"] >= 0.0
+    # exposition of a real engine registry validates end to end
+    _, errors = validate_exposition(to_prometheus(engine.metrics))
+    assert errors == []
+
+
+def test_engine_metrics_off_still_reports(setup):
+    engine = make_engine(setup, metrics=False)
+    assert engine.metrics is None
+    rep = drive(engine)
+    for k in LATENCY_REPORT_KEYS:
+        assert rep[k] is None                # None, never NaN
+    json.dumps(sanitize(rep), allow_nan=False)
+    assert rep["requests"] == 6
+
+
+def test_fused_decode_books_intertoken_blocks(setup):
+    engine = make_engine(setup, decode_backend="fused", decode_ticks=4)
+    rep = drive(engine, new_tokens=8)
+    snap = engine.metrics.snapshot()
+    itl = snap["histograms"]["repro_serve_intertoken_seconds"]
+    # every decoded token books one inter-token gap, even though the
+    # fused path only syncs once per T-token block
+    assert itl["count"] == rep["decode_tokens"]
+    assert rep["intertoken_p50_s"] > 0.0
+
+
+# ---------------------------------------------------------------------------
+# Overhead guard
+# ---------------------------------------------------------------------------
+
+def test_instrumentation_overhead_under_budget(setup):
+    """Fully-instrumented engine (metrics + trace) must keep ≥95% of the
+    uninstrumented engine's generation throughput on the same workload.
+    Best-of-N with the arms interleaved: best-of sheds slow outliers,
+    interleaving keeps shared-runner load drift from biasing one arm."""
+    bare = make_engine(setup, metrics=False)
+    instrumented = make_engine(setup, metrics=MetricsRegistry(),
+                               trace=TraceLog())
+    for engine in (bare, instrumented):      # warm-up: compiles
+        drive(engine, requests=8, new_tokens=16)
+
+    def one_pass(engine, seed):
+        engine.reset_stats()
+        rep = drive(engine, requests=8, new_tokens=16, seed=seed)
+        return rep["generated_tokens"] / rep["wall_s"]
+
+    best = {id(bare): 0.0, id(instrumented): 0.0}
+    for i in range(5):
+        for engine in (bare, instrumented):
+            best[id(engine)] = max(best[id(engine)], one_pass(engine, i))
+    b, ins = best[id(bare)], best[id(instrumented)]
+    assert ins >= 0.95 * b, (
+        f"instrumentation overhead over budget: {ins:.1f} vs "
+        f"{b:.1f} tok/s ({ins / b:.3f}x)")
