@@ -82,6 +82,16 @@ _BENCHES = {
         "floor": 1.2,
         "baseline": "BENCH_decode.json",
     },
+    "serving_chaos": {
+        # faulted decode tok/s ÷ clean decode tok/s under the default
+        # seeded fault profile — availability under chaos, not raw speed
+        "metric": "faulted_decode_ratio",
+        "workload": _COMMON_KEYS + ("page_size", "fault_seed"),
+        # ISSUE 7 acceptance: ≥0.8× clean-run decode throughput while
+        # every admitted request completes or is explicitly shed
+        "floor": 0.8,
+        "baseline": "BENCH_chaos.json",
+    },
 }
 
 
@@ -147,19 +157,42 @@ def main(argv=None):
         raise ValueError(f"non-standard JSON constant {c} — benchmark "
                          "records must emit null, never NaN/Infinity")
 
-    def load(path):
-        return json.loads(pathlib.Path(path).read_text(),
-                          parse_constant=reject_constant)
+    def load(path, role, bench=None):
+        """Parse a record, failing with the file AND the bench spec it
+        was supposed to satisfy instead of a raw traceback."""
+        spec_note = (f" (expected record for bench {bench!r}, "
+                     f"metric {_BENCHES[bench]['metric']!r})"
+                     if bench in _BENCHES else "")
+        try:
+            text = pathlib.Path(path).read_text()
+        except OSError as err:
+            print(f"bench gate: FAIL — cannot read {role} record "
+                  f"{path}{spec_note}: {err}")
+            if role == "baseline":
+                print("regenerate it with the matching benchmark's "
+                      "--out and commit the JSON at the repo root")
+            return None
+        try:
+            return json.loads(text, parse_constant=reject_constant)
+        except ValueError as err:
+            print(f"bench gate: FAIL — {role} record {path} is not "
+                  f"valid JSON{spec_note}: {err}")
+            return None
 
-    fresh = load(args.fresh)
+    fresh = load(args.fresh, "fresh")
+    if fresh is None:
+        return 1
+    bench = fresh.get("bench", "serving_throughput")
     baseline_path = args.baseline
     if baseline_path is None:
-        spec = _BENCHES.get(fresh.get("bench", "serving_throughput"))
+        spec = _BENCHES.get(bench)
         if spec is None:
-            print(f"unknown bench {fresh.get('bench')!r}")
+            print(f"unknown bench {bench!r}")
             return 1
         baseline_path = str(REPO / spec["baseline"])
-    baseline = load(baseline_path)
+    baseline = load(baseline_path, "baseline", bench=bench)
+    if baseline is None:
+        return 1
     ok, lines = evaluate(fresh, baseline, floor=args.floor,
                          tolerance=args.tolerance)
     for line in lines:

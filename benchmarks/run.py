@@ -18,8 +18,9 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (fig2_similarity, nlg_generation, roofline,
-                            serving_decode_fused, serving_refresh,
-                            serving_sgmv, serving_throughput,
+                            serving_chaos, serving_decode_fused,
+                            serving_refresh, serving_sgmv,
+                            serving_throughput,
                             table1_accuracy, table2_comm,
                             table3_heterogeneity, table4_clients,
                             table5_rank, table10_compression)
@@ -43,6 +44,8 @@ def main() -> None:
         "decode": lambda: serving_decode_fused.main(
             new_tokens=12 if q else 24,
             ticks=(1, 8) if q else (1, 4, 8, 16)),
+        "chaos": lambda: serving_chaos.main(
+            requests=12 if q else 18, new_tokens=6 if q else 8),
     }
     only = set(args.only.split(",")) if args.only else set(suites)
     for name, fn in suites.items():

@@ -1,0 +1,309 @@
+"""Chaos benchmark: serving availability under the default fault profile.
+
+Two arms on the SAME model, request schedule and publish rounds:
+
+  clean    live train→serve loop, no injector — the control
+  faulted  ``repro.failures.default_plan(fault_seed)`` drives client
+           dropout and NaN-corrupted B updates into each published
+           round, drops/stalls publishes on the way to the feed, and a
+           ``PagePressure`` window holds half the KV pool hostage
+           mid-run; the request stream additionally carries one
+           never-ingested tenant (degraded base-model serving) and a
+           burst past the admission bound (deterministic shedding)
+
+Both arms must satisfy the robustness contract — ZERO hard request
+failures: every submitted request either retires with tokens or is
+*explicitly* shed (``request_shed``), never lost, hung, or crashed.
+``run_arm`` raises if the accounting identity breaks.
+
+The gated metric is availability, not raw speed:
+
+  faulted_decode_ratio = faulted decode tok/s / clean decode tok/s
+
+floored at 0.8 by ``bench_gate.py`` (ISSUE 7 acceptance: the engine
+under chaos keeps >=0.8x the clean run's decode throughput). Writes
+``BENCH_chaos.json``; ``--trace-out`` saves the faulted arm's event
+timeline for the CI chaos-smoke validation
+(``python -m repro.obs.export --check-trace --require-events ...``).
+
+  PYTHONPATH=src python benchmarks/serving_chaos.py \
+      [--requests 18] [--fault-seed 6] [--out BENCH.json] \
+      [--trace-out chaos_trace.jsonl]
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import AdapterConfig, get_config, reduced
+from repro.core.adapters import init_adapters
+from repro.core.strategies import LOCAL, leaf_role
+from repro.failures import FaultInjector, PagePressure, default_plan
+from repro.models.transformer import init_model
+from repro.obs import TraceLog
+from repro.serving import AdapterFeed, AdapterRegistry, ServingEngine
+from repro.serving.demo import synthetic_clients
+
+try:
+    from benchmarks.common import emit, write_record
+except ImportError:  # pragma: no cover - direct script invocation
+    from common import emit, write_record
+
+BENCH_PATH = pathlib.Path(__file__).resolve().parent.parent / \
+    "BENCH_chaos.json"
+
+# the faulted arm's PagePressure window, in engine steps after the
+# midpoint submit — step-indexed (not wall-clock) so the fault timeline
+# is reproducible across hosts
+PRESSURE_STEPS = 12
+
+
+def make_rounds(template, clients, rounds, seed=5):
+    """Per-round client populations (round r: fresh B_i per client)."""
+    return [synthetic_clients(template, clients, seed=seed + r)
+            for r in range(rounds + 1)]
+
+
+def _corrupt_locals(stacked, mask, mode):
+    """NaN the LOCAL (B_i) leaves of masked clients in a client-axis
+    tree — the divergent-update failure mode arriving at the bridge."""
+    m = np.asarray(mask)
+
+    def f(path, leaf):
+        if leaf_role(path, mode) != LOCAL:
+            return leaf
+        bad = jnp.asarray(m.reshape((-1,) + (1,) * (leaf.ndim - 1)))
+        return jnp.where(bad, jnp.nan, leaf)
+
+    return jax.tree_util.tree_map_with_path(f, stacked)
+
+
+def run_arm(cfg, params, acfg, rounds_trees, prompts, *, batch, max_seq,
+            page_size, new_tokens, max_queue, burst, injector=None,
+            trace=None):
+    """One serving run over ``prompts`` with publishes between segments.
+
+    Returns ``(report, chaos)`` where ``chaos`` collects the robustness
+    counters. Raises on any hard failure: a request neither retired nor
+    explicitly shed, or a retired request with no tokens."""
+    clients = len(rounds_trees[0])
+    rounds = len(rounds_trees) - 1
+    reg = AdapterRegistry(rounds_trees[0][0], n_slots=batch,
+                          versioned=True, validate_publish=True,
+                          flip_patience=64)
+    for i, t in enumerate(rounds_trees[0]):
+        reg.ingest(i, t)
+    feed = AdapterFeed()
+    engine = ServingEngine(cfg, params, acfg, reg, max_batch=batch,
+                           max_seq=max_seq, page_size=page_size,
+                           feed=feed, trace=trace, max_queue=max_queue,
+                           degrade_after_s=2.0)
+    # warm-up compiles prefill/decode variants (untimed, both arms)
+    engine.submit(0, prompts[0], max_new_tokens=new_tokens)
+    engine.run()
+    engine.reset_stats()
+    rid0 = engine.scheduler._next_rid
+    shed0 = engine.scheduler.shed
+
+    stalled = []
+
+    def publish_round(version):
+        trees = rounds_trees[version]
+        stacked = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *trees)
+        kept = list(range(clients))
+        if injector is not None:
+            # dropped clients never deliver this round's B_i (they keep
+            # serving their previous adapters); corrupted clients DO
+            # deliver — registry publish validation must reject them
+            kept = [c for c in kept
+                    if not injector.client_fate(version, c)[0]]
+            bad = injector.corrupt_mask(version, clients)
+            if bad.any():
+                stacked = _corrupt_locals(stacked, bad, acfg.mode)
+            while stalled:             # a stalled round rides the next
+                v0, s0, k0 = stalled.pop(0)
+                feed.publish(v0, s0, clients=k0)
+            if injector.drops_publish(version):
+                return
+            if injector.stalls_publish(version):
+                stalled.append((version, stacked, kept))
+                return
+        feed.publish(version, stacked, clients=kept)
+
+    total = len(prompts)
+    pressure = (PagePressure(engine.pool, injector.plan.page_pressure)
+                if injector is not None else None)
+    press_release = None
+    published = set()
+    submitted = steps = 0
+    burst_done = False
+    t0 = time.perf_counter()
+    while (submitted < total or not burst_done
+           or not engine.scheduler.idle or feed.pending
+           or reg.stats["pending_version"] is not None):
+        for v in range(1, rounds + 1):
+            if v not in published and submitted >= v * total // (rounds + 1):
+                publish_round(v)
+                published.add(v)
+        if pressure is not None and press_release is None \
+                and submitted >= total // 2:
+            pressure.apply(injector)   # chaos window opens mid-stream
+            press_release = steps + PRESSURE_STEPS
+        if press_release is not None and steps >= press_release \
+                and pressure.held:
+            pressure.release()         # window closes; engine recovers
+        if submitted < total:
+            # one submit per step: the clean arm's queue never builds
+            engine.submit(submitted % clients, prompts[submitted],
+                          max_new_tokens=new_tokens)
+            submitted += 1
+        elif not burst_done:
+            # load spike past the admission bound in ONE tick — at
+            # least burst - max_queue requests shed deterministically —
+            # plus one never-ingested tenant exercising degraded serve
+            for j in range(burst):
+                engine.submit(clients + 3 if j == 0 else j % clients,
+                              prompts[j % total],
+                              max_new_tokens=new_tokens)
+            burst_done = True
+        engine.step()
+        steps += 1
+        if steps > 50_000:
+            raise RuntimeError("chaos arm failed to drain")
+    wall = time.perf_counter() - t0
+    if pressure is not None:
+        pressure.release()
+
+    rep = engine.report()
+    rep["schedule_wall_s"] = wall
+    sub = engine.scheduler._next_rid - rid0
+    shed = engine.scheduler.shed - shed0
+    done = len(engine.finished)
+    if sub != done + shed:             # the zero-hard-failures contract
+        raise RuntimeError(
+            f"request accounting broken: {sub} submitted != "
+            f"{done} finished + {shed} shed")
+    empty = [r for r, rec in engine.finished.items()
+             if len(rec["tokens"]) == 0]
+    if empty:
+        raise RuntimeError(f"requests retired without tokens: {empty}")
+    chaos = {
+        "submitted": sub, "finished": done, "shed": shed,
+        "degraded_served": rep["degraded_served"],
+        "deadline_retired": rep["deadline_retired"],
+        "flips": rep["flips"],
+        "publish_rejects": reg.stats["publish_rejects"],
+        "flip_timeouts": reg.stats["flip_timeouts"],
+    }
+    if injector is not None:
+        chaos["faults"] = {k: injector.count(k) for k in
+                           ("dropout", "corrupt", "feed_drop",
+                            "feed_stall", "pressure")}
+    return rep, chaos
+
+
+def main(clients=6, batch=4, requests=18, rounds=3, new_tokens=8,
+         max_seq=64, page_size=16, max_queue=6, fault_seed=6, out=None,
+         trace_out=None):
+    cfg = reduced(get_config("deepseek-7b"), n_layers=2, d_model=128)
+    acfg = AdapterConfig(mode="fedsa", rank=8)
+    key = jax.random.PRNGKey(0)
+    params = init_model(key, cfg, jnp.float32)
+    template = {"adapters": init_adapters(key, cfg, acfg)}
+    rounds_trees = make_rounds(template, clients, rounds)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, int(rng.integers(6, 25)))
+               for _ in range(requests)]
+    burst = max_queue + 2
+
+    kw = dict(batch=batch, max_seq=max_seq, page_size=page_size,
+              new_tokens=new_tokens, max_queue=max_queue, burst=burst)
+    clean_rep, clean = run_arm(cfg, params, acfg, rounds_trees, prompts,
+                               **kw)
+    trace = TraceLog()
+    injector = FaultInjector(default_plan(fault_seed), trace=trace)
+    fault_rep, faulted = run_arm(cfg, params, acfg, rounds_trees, prompts,
+                                 injector=injector, trace=trace, **kw)
+
+    ratio = (fault_rep["decode_tok_per_s"] / clean_rep["decode_tok_per_s"]
+             if clean_rep["decode_tok_per_s"] else None)
+    emit("serving.chaos_clean_decode_tok_per_s",
+         1e6 / max(clean_rep["decode_tok_per_s"], 1e-9),
+         f"{clean_rep['decode_tok_per_s']:.1f}")
+    emit("serving.chaos_faulted_decode_tok_per_s",
+         1e6 / max(fault_rep["decode_tok_per_s"], 1e-9),
+         f"{fault_rep['decode_tok_per_s']:.1f}")
+    emit("serving.chaos_faulted_decode_ratio", 0.0,
+         f"{ratio:.2f}x" if ratio else "n/a")
+    emit("serving.chaos_faulted_shed", 0.0, str(faulted["shed"]))
+    emit("serving.chaos_faulted_degraded", 0.0,
+         str(faulted["degraded_served"]))
+    emit("serving.chaos_publish_rejects", 0.0,
+         str(faulted["publish_rejects"]))
+
+    record = {
+        "bench": "serving_chaos",
+        "config": {"arch": cfg.name, "n_layers": cfg.n_layers,
+                   "d_model": cfg.d_model, "rank": acfg.rank,
+                   "clients": clients, "batch": batch,
+                   "requests": requests, "rounds": rounds,
+                   "new_tokens": new_tokens, "max_seq": max_seq,
+                   "page_size": page_size, "max_queue": max_queue,
+                   "burst": burst, "fault_seed": fault_seed,
+                   "backend": jax.default_backend()},
+        "clean": {"decode_tok_per_s": clean_rep["decode_tok_per_s"],
+                  "wall_s": clean_rep["schedule_wall_s"], **clean},
+        "faulted": {"decode_tok_per_s": fault_rep["decode_tok_per_s"],
+                    "wall_s": fault_rep["schedule_wall_s"], **faulted},
+        "faulted_decode_ratio": ratio,
+    }
+    bench_path = BENCH_PATH if out is None else pathlib.Path(out)
+    write_record(bench_path, record)
+    if trace_out is not None:
+        trace.save(trace_out)
+        print(f"chaos trace ({len(trace.events)} events) → {trace_out}")
+    f = faulted
+    print(f"chaos: faulted {fault_rep['decode_tok_per_s']:.1f} decode "
+          f"tok/s vs clean {clean_rep['decode_tok_per_s']:.1f} → "
+          f"{ratio:.2f}x with {f['faults']['dropout']} dropouts, "
+          f"{f['faults']['corrupt']} corrupted updates "
+          f"({f['publish_rejects']} publishes rejected), "
+          f"{f['faults']['feed_drop']} feed drops, "
+          f"{f['faults']['feed_stall']} stalls, {f['shed']} shed, "
+          f"{f['degraded_served']} degraded — 0 hard failures "
+          f"[{bench_path.name}]")
+    return record
+
+
+def _cli():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--clients", type=int, default=6)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=18)
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--max-seq", type=int, default=64)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--max-queue", type=int, default=6)
+    ap.add_argument("--fault-seed", type=int, default=6)
+    ap.add_argument("--out", default=None,
+                    help="write the JSON record here instead of "
+                         "BENCH_chaos.json")
+    ap.add_argument("--trace-out", default=None,
+                    help="save the faulted arm's JSONL event timeline")
+    args = ap.parse_args()
+    main(clients=args.clients, batch=args.batch, requests=args.requests,
+         rounds=args.rounds, new_tokens=args.new_tokens,
+         max_seq=args.max_seq, page_size=args.page_size,
+         max_queue=args.max_queue, fault_seed=args.fault_seed,
+         out=args.out, trace_out=args.trace_out)
+
+
+if __name__ == "__main__":
+    _cli()

@@ -4,10 +4,16 @@ Federated layout (matching the paper's deployment reality): the server
 checkpoint holds base params + the aggregated *shared* leaves; each client
 checkpoint holds only that client's *local* leaves. ``save_federated`` /
 ``load_federated`` split/merge along ``core.strategies`` roles.
+
+All writes are atomic: bytes land in a same-directory temp file that is
+``os.replace``d over the target only after a flush+fsync, so a crash
+mid-save can never leave a torn checkpoint — the old file either
+survives intact or the new one is complete.
 """
 from __future__ import annotations
 
 import os
+import tempfile
 
 import jax
 import jax.numpy as jnp
@@ -16,6 +22,34 @@ import numpy as np
 from repro.core.strategies import LOCAL, leaf_role
 
 _SEP = "||"
+
+
+def _atomic_savez(path, arrays):
+    """Write ``np.savez(path, **arrays)`` atomically.
+
+    The temp file lives in the target's directory (os.replace must not
+    cross filesystems) and is passed to ``np.savez`` as an open handle —
+    numpy appends ``.npz`` to *names* but never to file objects, so the
+    rename source is exactly what was written. On any failure the temp
+    file is removed and the previous checkpoint (if any) is untouched.
+    """
+    path = os.path.abspath(path)
+    if not path.endswith(".npz"):      # match np.savez(str_path) naming
+        path += ".npz"
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path),
+                               prefix=os.path.basename(path) + ".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, **arrays)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
 
 
 def _flatten(tree):
@@ -30,7 +64,7 @@ def _flatten(tree):
 
 def save_pytree(path, tree):
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
-    np.savez(path, **_flatten(tree))
+    _atomic_savez(path, _flatten(tree))
 
 
 def load_pytree(path, like):
@@ -66,10 +100,10 @@ def save_federated(dirpath, client_adapters, mode, server_extra=None):
     if server_extra:
         for k, v in _flatten(server_extra).items():
             server["extra" + _SEP + k] = v
-    np.savez(os.path.join(dirpath, "server.npz"), **server)
+    _atomic_savez(os.path.join(dirpath, "server.npz"), server)
     for c in range(n_clients):
-        np.savez(os.path.join(dirpath, f"client_{c}.npz"),
-                 **{k: v[c] for k, v in locals_.items()})
+        _atomic_savez(os.path.join(dirpath, f"client_{c}.npz"),
+                      {k: v[c] for k, v in locals_.items()})
 
 
 def load_federated(dirpath, like, mode):

@@ -11,6 +11,19 @@ bytes in the dry-run HLO.
 Supports weighted aggregation (client dataset sizes) and partial
 participation (a 0/1 mask over clients: non-participants keep their leaf
 and are excluded from the mean).
+
+Robustness extensions (used by the fault-tolerant round path in
+``core.federation`` — see ``docs/robustness.md``):
+
+  * ``receive`` decouples who GETS the aggregate from who CONTRIBUTES
+    to it: a client whose update was rejected by the validation gate is
+    excluded from the mean but still receives the healthy aggregate
+    (the heal path for NaN-corrupted shared leaves);
+  * ``trim`` switches the shared-leaf mean to a coordinate-wise trimmed
+    mean (drop the ``trim`` fraction of extreme values per coordinate),
+    the classic Byzantine-tolerant aggregator;
+  * ``shared_client_stats`` / ``scale_shared`` back the validation gate:
+    per-client finiteness + update norms, and norm-outlier clipping.
 """
 from __future__ import annotations
 
@@ -20,31 +33,141 @@ import jax.numpy as jnp
 from repro.core.strategies import SHARED, leaf_role
 
 
-def aggregate(client_adapters, mode, weights=None, participation=None):
+def _trimmed_mean(leaf, valid, trim):
+    """Coordinate-wise trimmed mean over the clients marked ``valid``.
+
+    Sorts each coordinate across the client axis (invalid clients pushed
+    to +Inf, i.e. past every valid rank), then averages ranks
+    ``[k, m - k)`` where ``m`` is the valid count and
+    ``k = floor(trim * m)`` — so the ``trim`` fraction of extreme values
+    is dropped from EACH end per coordinate. Weights are intentionally
+    ignored: rank-based trimming has no principled weighted analogue.
+    """
+    C = leaf.shape[0]
+    x = leaf.astype(jnp.float32)
+    keep_shape = (C,) + (1,) * (leaf.ndim - 1)
+    v = valid.astype(bool).reshape(keep_shape)
+    xs = jnp.sort(jnp.where(v, x, jnp.inf), axis=0)
+    m = jnp.sum(valid.astype(jnp.int32))
+    k = jnp.floor(trim * m).astype(jnp.int32)
+    # never trim everything: fall back to the plain mean of the valid set
+    k = jnp.where(2 * k >= m, 0, k)
+    rank = jnp.arange(C, dtype=jnp.int32).reshape(keep_shape)
+    w = (rank >= k) & (rank < m - k)
+    total = jnp.sum(jnp.where(w, xs, 0.0), axis=0)
+    return total / jnp.maximum(m - 2 * k, 1).astype(jnp.float32)
+
+
+def aggregate(client_adapters, mode, weights=None, participation=None,
+              receive=None, trim=0.0):
     """One server round.
 
     client_adapters: pytree with leading client axis C on every leaf.
     weights: optional (C,) aggregation weights (e.g. dataset sizes).
-    participation: optional (C,) 0/1 mask of sampled clients.
+    participation: optional (C,) 0/1 mask of clients CONTRIBUTING to the
+    mean.
+    receive: optional (C,) 0/1 mask of clients that get the aggregate
+    broadcast back (defaults to ``participation``). A client in
+    ``receive`` but not ``participation`` is healed: it adopts the
+    aggregate without polluting it — the robust round path puts
+    validation-rejected clients here.
+    trim: coordinate-wise trimmed-mean fraction in [0, 0.5); 0 keeps the
+    paper's weighted mean.
     """
     def agg_leaf(path, leaf):
         if leaf_role(path, mode) != SHARED:
             return leaf
         C = leaf.shape[0]
-        w = jnp.ones((C,), jnp.float32) if weights is None \
-            else weights.astype(jnp.float32)
-        if participation is not None:
-            w = w * participation.astype(jnp.float32)
-        w = w / jnp.maximum(jnp.sum(w), 1e-9)
-        mean = jnp.tensordot(w, leaf.astype(jnp.float32), axes=(0, 0))
-        mean = mean.astype(leaf.dtype)
+        if trim > 0.0:
+            valid = (jnp.ones((C,), jnp.float32) if participation is None
+                     else participation.astype(jnp.float32))
+            mean = _trimmed_mean(leaf, valid, trim).astype(leaf.dtype)
+        else:
+            w = jnp.ones((C,), jnp.float32) if weights is None \
+                else weights.astype(jnp.float32)
+            x = leaf.astype(jnp.float32)
+            if participation is not None:
+                w = w * participation.astype(jnp.float32)
+                # zero excluded leaves outright: 0-weight × NaN is NaN,
+                # so masking via weights alone would let a rejected
+                # client's non-finite update poison the mean
+                keep_c = participation.astype(bool).reshape(
+                    (C,) + (1,) * (leaf.ndim - 1))
+                x = jnp.where(keep_c, x, 0.0)
+            w = w / jnp.maximum(jnp.sum(w), 1e-9)
+            mean = jnp.tensordot(w, x, axes=(0, 0)).astype(leaf.dtype)
         new = jnp.broadcast_to(mean[None], leaf.shape)
-        if participation is not None:
-            keep = participation.reshape((C,) + (1,) * (leaf.ndim - 1))
+        recv = receive if receive is not None else participation
+        if recv is not None:
+            keep = recv.reshape((C,) + (1,) * (leaf.ndim - 1))
             new = jnp.where(keep.astype(bool), new, leaf)
         return new
 
     return jax.tree_util.tree_map_with_path(agg_leaf, client_adapters)
+
+
+def shared_client_stats(client_adapters, mode):
+    """Per-client validation inputs over the SHARED leaves.
+
+    Returns ``(norms, finite)`` — (C,) float32 global L2 norm of each
+    client's shared-leaf update and (C,) bool all-finite flag. The
+    robust round path rejects non-finite updates outright and clips
+    norm outliers before aggregation (``docs/robustness.md``).
+    """
+    flat = jax.tree_util.tree_flatten_with_path(client_adapters)[0]
+    sq = fin = None
+    for path, leaf in flat:
+        if leaf_role(path, mode) != SHARED:
+            continue
+        x = jnp.reshape(leaf.astype(jnp.float32), (leaf.shape[0], -1))
+        ok = jnp.all(jnp.isfinite(x), axis=1)
+        s = jnp.sum(jnp.where(jnp.isfinite(x), x, 0.0) ** 2, axis=1)
+        sq = s if sq is None else sq + s
+        fin = ok if fin is None else fin & ok
+    if sq is None:                       # no shared leaves under this mode
+        return None, None
+    return jnp.sqrt(sq), fin
+
+
+def scale_shared(client_adapters, mode, scale):
+    """Multiply each client's SHARED leaves by its (C,) ``scale`` —
+    the norm-outlier clipping step (scale 1.0 = untouched)."""
+    scale = jnp.asarray(scale, jnp.float32)
+
+    def f(path, leaf):
+        if leaf_role(path, mode) != SHARED:
+            return leaf
+        s = scale.reshape((leaf.shape[0],) + (1,) * (leaf.ndim - 1))
+        return (leaf.astype(jnp.float32) * s).astype(leaf.dtype)
+
+    return jax.tree_util.tree_map_with_path(f, client_adapters)
+
+
+def take_shared(dst, src, mode):
+    """Replace ``dst``'s SHARED leaves with ``src``'s — the last-good-Ā
+    rollback: local progress is kept, the aggregate reverts."""
+    def f(path, d, s):
+        return s if leaf_role(path, mode) == SHARED else d
+    return jax.tree_util.tree_map_with_path(f, dst, src)
+
+
+def corrupt_shared(client_adapters, mode, mask, *, kind="nan", scale=1e6):
+    """Fault-injection helper: corrupt the SHARED leaves of clients in
+    ``mask`` (C,) — NaN fill or a ``scale``× blow-up (the divergent-A
+    mode). Used by ``FaultInjector`` consumers; local leaves untouched."""
+    mask = jnp.asarray(mask)
+
+    def f(path, leaf):
+        if leaf_role(path, mode) != SHARED:
+            return leaf
+        m = mask.reshape((leaf.shape[0],) + (1,) * (leaf.ndim - 1))
+        if kind == "nan":
+            bad = jnp.full_like(leaf, jnp.nan)
+        else:
+            bad = leaf * jnp.asarray(scale, leaf.dtype)
+        return jnp.where(m, bad, leaf)
+
+    return jax.tree_util.tree_map_with_path(f, client_adapters)
 
 
 def broadcast_clients(adapters, n_clients):

@@ -12,6 +12,7 @@ The *in-mesh* (TPU pod) counterpart of the same round lives in
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 
 import jax
@@ -19,7 +20,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.adapters import init_adapters
-from repro.core.aggregation import aggregate, broadcast_clients
+from repro.core.aggregation import (aggregate, broadcast_clients,
+                                    corrupt_shared, scale_shared,
+                                    shared_client_stats, take_shared)
 from repro.core.strategies import count_params, trainable_mask
 from repro.data.synthetic import stack_client_batch
 from repro.models.transformer import (classifier_loss, encode_logits,
@@ -40,6 +43,27 @@ class FedSystem:
     eval_fn: object
     comm_per_round: int         # parameters uploaded per client per round
     n_trainable: int
+    update_fn: object = None    # jitted client updates WITHOUT aggregation
+    agg_fn: object = None       # jitted (tr, contribute, receive, trim)
+
+
+@dataclasses.dataclass(frozen=True)
+class RobustConfig:
+    """Knobs of the fault-tolerant round path (``run_rounds(robust=)``).
+
+    The defaults are deliberately permissive — the gate only ever
+    *rejects* provably-poisonous updates (non-finite) and *clips* norm
+    outliers, so a fault-free run under ``RobustConfig()`` aggregates
+    exactly like the plain path.
+    """
+    round_deadline_s: float = None   # straggler cutoff (simulated delay
+    #                                  budget per round; None = no cutoff)
+    max_retries: int = 1             # bounded retries for a failed update
+    backoff_s: float = 0.05          # simulated backoff per retry attempt
+    reject_nonfinite: bool = True    # NaN/Inf shared updates are rejected
+    outlier_mult: float = 6.0        # clip ‖update‖ to mult × median;
+    #                                  None disables clipping
+    trim: float = 0.0                # trimmed-mean fraction (0 = mean)
 
 
 def _make_loss(cfg, acfg, task):
@@ -90,6 +114,19 @@ def build(key, cfg, acfg, fed, *, task="classification", n_classes=4,
         tr = aggregate(tr, acfg.mode, participation=participation)
         return tr, ost, losses
 
+    # split pieces for the fault-tolerant round path (run_rounds with
+    # faults=/robust=): client updates and aggregation as separate jits,
+    # with host-side validation/clipping in between. Lazy — tracing only
+    # happens if the robust path is actually driven.
+    update_fn = jax.jit(jax.vmap(client_update))
+
+    # trim is static: `trim > 0` picks the aggregator at trace time (one
+    # compiled variant per distinct trim value, of which a run has one)
+    @functools.partial(jax.jit, static_argnums=(3,))
+    def agg_fn(trainables, contribute, receive, trim):
+        return aggregate(trainables, acfg.mode, participation=contribute,
+                         receive=receive, trim=trim)
+
     if task == "classification":
         @jax.jit
         def eval_fn(trainables, batch):
@@ -110,12 +147,132 @@ def build(key, cfg, acfg, fed, *, task="classification", n_classes=4,
     return FedSystem(cfg=cfg, acfg=acfg, fed=fed, params=params,
                      trainables=trainables, opt_state=opt_state, mask=mask,
                      round_fn=round_fn, eval_fn=eval_fn,
-                     comm_per_round=comm, n_trainable=n_tr)
+                     comm_per_round=comm, n_trainable=n_tr,
+                     update_fn=update_fn, agg_fn=agg_fn)
+
+
+def _select_clients(new, old, ok):
+    """Per-client select over a client-axis tree: client c takes ``new``
+    where ``ok[c]``, else keeps ``old`` (a failed update never lands)."""
+    ok = jnp.asarray(ok, bool)
+
+    def f(n, o):
+        m = ok.reshape((ok.shape[0],) + (1,) * (n.ndim - 1))
+        return jnp.where(m, n, o)
+
+    return jax.tree_util.tree_map(f, new, old)
+
+
+def _robust_round(system, tr, ost, batches, part, rnd, *, last_good,
+                  faults, robust, trace):
+    """One fault-tolerant round: participation faults → client updates →
+    corruption injection → validation gate → (trimmed) aggregation →
+    aggregate guard with last-good-Ā rollback.
+
+    Returns ``(tr, ost, losses, info)`` where ``info`` carries the
+    per-round fault accounting for history/metrics.
+    """
+    mode = system.acfg.mode
+    C = system.fed.n_clients
+    part = np.asarray(part, np.float32).copy()
+    info = {"dropped": [], "cutoff": [], "rejected": [], "clipped": [],
+            "rolled_back": False, "retries": 0}
+    delay = np.zeros((C,), np.float32)
+
+    def emit(ev, **fields):
+        if trace is not None:
+            trace.emit(ev, **fields)
+
+    if faults is not None:
+        for c in range(C):
+            if not part[c]:
+                continue
+            lost, attempts = faults.client_fate(
+                rnd, c, max_retries=robust.max_retries)
+            info["retries"] += attempts
+            delay[c] += attempts * robust.backoff_s
+            if lost:
+                part[c] = 0.0
+                info["dropped"].append(c)
+                emit("client_dropped", round=rnd, client=c,
+                     reason="dropout", retries=attempts)
+                continue
+            delay[c] += faults.straggler_delay(rnd, c)
+    if robust.round_deadline_s is not None:
+        for c in range(C):
+            if part[c] and delay[c] > robust.round_deadline_s:
+                part[c] = 0.0
+                info["cutoff"].append(c)
+                emit("client_dropped", round=rnd, client=c,
+                     reason="straggler", delay_s=float(delay[c]))
+
+    tr_new, ost_new, losses = system.update_fn(tr, ost, batches)
+    failed = info["dropped"] + info["cutoff"]
+    if failed:
+        ok = np.ones((C,), bool)
+        ok[failed] = False
+        # a failed/late update never lands: those clients' trainables AND
+        # optimizer state stay at the pre-round values
+        tr_new = _select_clients(tr_new, tr, ok)
+        ost_new = _select_clients(ost_new, ost, ok)
+
+    if faults is not None:
+        cmask = faults.corrupt_mask(rnd, C) & (part > 0)
+        if cmask.any():
+            tr_new = corrupt_shared(tr_new, mode, cmask,
+                                    kind=faults.plan.corrupt_kind,
+                                    scale=faults.plan.corrupt_scale)
+
+    # validation gate over the SHARED updates (the Ā the whole fleet is
+    # about to inherit): reject non-finite, clip norm outliers
+    contribute = part.copy()
+    norms, finite = shared_client_stats(tr_new, mode)
+    if norms is not None:
+        norms, finite = np.asarray(norms), np.asarray(finite)
+        if robust.reject_nonfinite:
+            for c in range(C):
+                if contribute[c] and not finite[c]:
+                    contribute[c] = 0.0
+                    info["rejected"].append(c)
+                    emit("update_rejected", round=rnd, client=c,
+                         reason="nonfinite")
+        if robust.outlier_mult is not None:
+            valid = (contribute > 0) & finite
+            if valid.any():
+                med = float(np.median(norms[valid]))
+                thresh = robust.outlier_mult * max(med, 1e-12)
+                scale = np.ones((C,), np.float32)
+                for c in range(C):
+                    if valid[c] and norms[c] > thresh:
+                        scale[c] = thresh / float(norms[c])
+                        info["clipped"].append(c)
+                if info["clipped"]:
+                    tr_new = scale_shared(tr_new, mode, scale)
+
+    # contribute: survived every gate; receive: everyone who made the
+    # deadline — a rejected client is healed by the aggregate it did
+    # not pollute
+    tr_agg = system.agg_fn(tr_new, jnp.asarray(contribute),
+                           jnp.asarray(part), float(robust.trim))
+
+    _, agg_fin = shared_client_stats(tr_agg, mode)
+    if agg_fin is not None and not bool(np.asarray(agg_fin).all()):
+        # the round's aggregate is poisoned despite the gate: fall back
+        # to the last-good Ā (local progress is kept)
+        tr_agg = take_shared(tr_agg, last_good, mode)
+        info["rolled_back"] = True
+        emit("rollback", round=rnd, reason="nonfinite_aggregate")
+
+    delivered = part > 0
+    lmean = float(np.asarray(losses)[delivered].mean()) if delivered.any() \
+        else float(np.asarray(losses).mean())
+    return tr_agg, ost_new, lmean, info
 
 
 def run_rounds(system, clients, *, rounds, batch_size, seed=0,
                eval_every=0, test_batch=None, target_acc=None,
-               publish=None, publish_every=1, metrics=None):
+               publish=None, publish_every=1, metrics=None,
+               faults=None, robust=None, trace=None):
     """Drive the federated loop. Returns history dict.
 
     clients: list of per-client numpy data dicts.
@@ -130,12 +287,42 @@ def run_rounds(system, clients, *, rounds, batch_size, seed=0,
     client loss in the ``repro_fed_round_loss`` gauge, and round/publish
     totals in counters — sharing the registry with a live
     ``ServingEngine`` puts train and serve metrics in one exposition.
+    faults: optional ``repro.failures.FaultInjector`` — injects client
+    dropout/straggling/corruption per round (deterministic in the plan
+    seed) and switches the loop onto the fault-tolerant round path.
+    robust: optional ``RobustConfig`` — enables the fault-tolerant path
+    (straggler cutoff, bounded retry accounting, the shared-update
+    validation gate, trimmed-mean aggregation, last-good-Ā rollback)
+    even without an injector; defaults to ``RobustConfig()`` whenever
+    ``faults`` is given. The plain path is byte-identical to before.
+    trace: optional ``repro.obs.TraceLog`` for ``client_dropped`` /
+    ``update_rejected`` / ``rollback`` events.
     """
     fed = system.fed
     rng = np.random.default_rng(seed)
     tr, ost = system.trainables, system.opt_state
     history = {"loss": [], "acc": [], "rounds_to_target": None}
+    if faults is not None and robust is None:
+        robust = RobustConfig()
+    if robust is not None:
+        if system.update_fn is None or system.agg_fn is None:
+            raise ValueError("robust rounds need a FedSystem from build() "
+                             "(update_fn/agg_fn missing)")
+        history.update({"dropped": [], "rejected": [], "clipped": [],
+                        "rollbacks": 0})
+        last_good = tr
     if metrics is not None:
+        if robust is not None:
+            c_drop = metrics.counter("repro_fed_clients_dropped_total",
+                                     "client updates lost to dropout or "
+                                     "straggler cutoff")
+            c_rej = metrics.counter("repro_fed_updates_rejected_total",
+                                    "client updates rejected by the "
+                                    "validation gate")
+            c_clip = metrics.counter("repro_fed_updates_clipped_total",
+                                     "client updates norm-clipped")
+            c_roll = metrics.counter("repro_fed_rollbacks_total",
+                                     "rounds rolled back to last-good Ā")
         h_round = metrics.histogram("repro_fed_round_seconds",
                                     "wall per federation round")
         g_loss = metrics.gauge("repro_fed_round_loss",
@@ -159,8 +346,26 @@ def run_rounds(system, clients, *, rounds, batch_size, seed=0,
             part = jnp.asarray(part)
         else:
             part = jnp.ones((fed.n_clients,), jnp.float32)
-        tr, ost, losses = system.round_fn(tr, ost, batches, part)
-        history["loss"].append(float(jnp.mean(losses)))
+        if robust is not None:
+            tr, ost, lmean, info = _robust_round(
+                system, tr, ost, batches, part, r, last_good=last_good,
+                faults=faults, robust=robust, trace=trace)
+            history["loss"].append(lmean)
+            history["dropped"].append(info["dropped"] + info["cutoff"])
+            history["rejected"].append(info["rejected"])
+            history["clipped"].append(info["clipped"])
+            if info["rolled_back"]:
+                history["rollbacks"] += 1
+            else:
+                last_good = tr
+            if metrics is not None:
+                c_drop.inc(len(info["dropped"]) + len(info["cutoff"]))
+                c_rej.inc(len(info["rejected"]))
+                c_clip.inc(len(info["clipped"]))
+                c_roll.inc(int(info["rolled_back"]))
+        else:
+            tr, ost, losses = system.round_fn(tr, ost, batches, part)
+            history["loss"].append(float(jnp.mean(losses)))
         if metrics is not None:
             h_round.observe(time.perf_counter() - t_round)
             g_loss.set(history["loss"][-1])

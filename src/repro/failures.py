@@ -1,0 +1,223 @@
+"""Deterministic fault injection for the federation + serving stack.
+
+Production federated fleets fail constantly — clients drop out, straggle
+past the round deadline, or ship NaN/divergent A updates (the
+instability mode the stabilized-FL line of work analyzes); the train→
+serve bridge can stall or deliver a corrupted publish; the serving page
+pool runs hot. This module makes every one of those a *first-class,
+reproducible* code path:
+
+  ``FaultPlan``      frozen, seeded description of a fault profile —
+                     rates and windows, no state.
+  ``FaultInjector``  draws every decision from a counter-free hash of
+                     ``(seed, kind, *key)``, so the SAME plan replayed
+                     against the SAME workload yields the SAME fault
+                     timeline regardless of call order, thread timing,
+                     or how many unrelated decisions happened in
+                     between. Decisions are recorded on ``.decisions``
+                     and emitted as ``fault_injected`` trace events
+                     (``repro.obs``), which is what the chaos-smoke CI
+                     job validates.
+
+Fault kinds (the vocabulary, keyed deterministically):
+
+  ``dropout``    client skips a round (federation participation);
+                 bounded retry/backoff may still recover it
+  ``straggler``  client delivers late by ``straggler_delay_s``
+                 (simulated — compared against the round deadline)
+  ``corrupt``    client's SHARED update leaves become NaN or blow up by
+                 ``corrupt_scale`` (the divergent-A failure mode)
+  ``feed_drop``  a train→serve publish is lost before the feed
+  ``feed_stall`` a publish is held back one round (delivered late,
+                 coalesced by the feed/registry as usual)
+  ``pressure``   a slice of the serving ``PagePool`` is held hostage
+                 for a window (admission sheds / queues instead)
+
+Consumers: ``core.federation.run_rounds(faults=...)``,
+``repro.serving.refresh.train_and_serve(faults=...)``, and
+``benchmarks/serving_chaos.py``. See ``docs/robustness.md``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Seeded description of a fault profile. All rates in [0, 1]."""
+    seed: int = 0
+    # federation-side
+    dropout_rate: float = 0.0        # P(client update fails this round)
+    retry_success_rate: float = 0.5  # P(one bounded retry recovers it)
+    straggler_rate: float = 0.0      # P(client is late this round)
+    straggler_delay_s: float = 1.0   # simulated lateness of a straggler
+    corrupt_rate: float = 0.0        # P(client ships a corrupted update)
+    corrupt_kind: str = "nan"        # "nan" | "scale"
+    corrupt_scale: float = 1e6       # blow-up factor under kind="scale"
+    # train→serve bridge
+    feed_drop_rate: float = 0.0      # P(a publish is lost)
+    feed_stall_rounds: tuple = ()    # versions delivered one round late
+    # serving-side
+    page_pressure: float = 0.0       # fraction of pool pages held
+    pressure_window: tuple = ()      # (start_tick, end_tick) inclusive
+
+    def __post_init__(self):
+        for f in ("dropout_rate", "retry_success_rate", "straggler_rate",
+                  "corrupt_rate", "feed_drop_rate", "page_pressure"):
+            v = getattr(self, f)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"{f}={v} outside [0, 1]")
+        if self.corrupt_kind not in ("nan", "scale"):
+            raise ValueError(f"corrupt_kind={self.corrupt_kind!r}")
+
+
+def default_plan(seed=0):
+    """The acceptance profile: 10% dropout, 5% corrupted updates, one
+    feed stall (round 2) — what ``serving_chaos.py`` runs by default."""
+    return FaultPlan(seed=seed, dropout_rate=0.10, corrupt_rate=0.05,
+                     straggler_rate=0.10, feed_stall_rounds=(2,),
+                     page_pressure=0.5)
+
+
+def _key_ints(parts):
+    out = []
+    for p in parts:
+        if isinstance(p, str):
+            out.append(zlib.crc32(p.encode()))
+        else:
+            out.append(int(p) & 0xFFFFFFFF)
+    return out
+
+
+class FaultInjector:
+    """Stateless-decision fault oracle + decision recorder.
+
+    Every query hashes ``(plan.seed, kind, *key)`` into an independent
+    RNG stream, so decisions are a pure function of the plan and the
+    decision's identity — the property the deterministic-replay test
+    (and any postmortem) rests on. ``trace``/``metrics`` are optional
+    ``repro.obs`` sinks; injections emit ``fault_injected`` events and
+    bump ``repro_faults_injected_total``.
+    """
+
+    def __init__(self, plan, *, trace=None, metrics=None):
+        self.plan = plan
+        self.trace = trace
+        self.metrics = metrics
+        self.decisions = []          # (kind, key, verdict) in query order
+
+    def _uniform(self, kind, *key):
+        seq = np.random.SeedSequence(
+            [int(self.plan.seed) & 0xFFFFFFFF] + _key_ints((kind,) + key))
+        return float(np.random.default_rng(seq).random())
+
+    def _record(self, kind, key, verdict, **fields):
+        self.decisions.append((kind, tuple(key), verdict))
+        if verdict and self.trace is not None:
+            self.trace.emit("fault_injected", kind=kind, **fields)
+        if verdict and self.metrics is not None:
+            self.metrics.counter("repro_faults_injected_total",
+                                 "injected faults (all kinds)").inc()
+
+    # -- federation-side decisions ------------------------------------------
+    def client_fate(self, rnd, client, *, max_retries=1):
+        """(dropped, attempts) for one client-round: the update fails
+        with ``dropout_rate``; each of up to ``max_retries`` bounded
+        retries recovers it with ``retry_success_rate``. ``attempts``
+        counts retries actually spent (each costs one backoff step)."""
+        dropped = self._uniform("dropout", rnd, client) \
+            < self.plan.dropout_rate
+        attempts = 0
+        if dropped:
+            for a in range(1, max_retries + 1):
+                attempts = a
+                if (self._uniform("retry", rnd, client, a)
+                        < self.plan.retry_success_rate):
+                    dropped = False
+                    break
+        self._record("dropout", (rnd, client), dropped,
+                     round=rnd, client=client, retries=attempts)
+        return dropped, attempts
+
+    def straggler_delay(self, rnd, client):
+        """Simulated delivery delay (seconds) of this client-round."""
+        late = self._uniform("straggler", rnd, client) \
+            < self.plan.straggler_rate
+        self._record("straggler", (rnd, client), late,
+                     round=rnd, client=client,
+                     delay_s=self.plan.straggler_delay_s if late else 0.0)
+        return self.plan.straggler_delay_s if late else 0.0
+
+    def corrupts(self, rnd, client):
+        """Does this client ship a corrupted (NaN/divergent) update?"""
+        bad = self._uniform("corrupt", rnd, client) \
+            < self.plan.corrupt_rate
+        self._record("corrupt", (rnd, client), bad,
+                     round=rnd, client=client,
+                     corrupt_kind=self.plan.corrupt_kind)
+        return bad
+
+    def corrupt_mask(self, rnd, n_clients):
+        """(C,) bool mask of corrupted clients this round."""
+        return np.array([self.corrupts(rnd, c) for c in range(n_clients)])
+
+    # -- bridge-side decisions ----------------------------------------------
+    def drops_publish(self, version):
+        lost = self._uniform("feed_drop", version) \
+            < self.plan.feed_drop_rate
+        self._record("feed_drop", (version,), lost, version=version)
+        return lost
+
+    def stalls_publish(self, version):
+        stalled = version in self.plan.feed_stall_rounds
+        self._record("feed_stall", (version,), stalled, version=version)
+        return stalled
+
+    # -- serving-side pressure ----------------------------------------------
+    def pressure_active(self, tick):
+        if not self.pressure_window_set or self.plan.page_pressure <= 0:
+            return False
+        lo, hi = self.plan.pressure_window
+        return lo <= tick <= hi
+
+    @property
+    def pressure_window_set(self):
+        return len(self.plan.pressure_window) == 2
+
+    def count(self, kind):
+        """Injected (verdict-true) decisions of one kind so far."""
+        return sum(1 for k, _, v in self.decisions if k == kind and v)
+
+
+class PagePressure:
+    """Hold a fraction of a ``PagePool``'s free pages hostage.
+
+    Models neighbors/leaks eating KV capacity: while applied, admission
+    sees a smaller pool and must shed or queue (the ``pool_exhausted``
+    path); ``release`` ends the fault window and the scheduler recovers
+    on its own. Idempotent in both directions.
+    """
+
+    def __init__(self, pool, fraction):
+        assert 0.0 <= fraction <= 1.0
+        self.pool = pool
+        self.fraction = fraction
+        self.held = []
+
+    def apply(self, injector=None):
+        if self.held or self.fraction <= 0:
+            return 0
+        n = int(self.pool.free_count * self.fraction)
+        pages = self.pool.alloc(n) if n else None
+        self.held = pages or []
+        if self.held and injector is not None:
+            injector._record("pressure", (n,), True, pages=len(self.held))
+        return len(self.held)
+
+    def release(self):
+        if self.held:
+            self.pool.release(self.held)
+            self.held = []

@@ -94,7 +94,10 @@ def run_multi_tenant(args, acfg):
                            lora_backend=args.lora_backend,
                            decode_backend=args.decode_backend,
                            decode_ticks=args.decode_ticks,
-                           metrics=metrics, trace=trace)
+                           metrics=metrics, trace=trace,
+                           max_queue=args.max_queue,
+                           request_deadline_s=args.request_deadline,
+                           degrade_after_s=args.degrade_after)
     rng = np.random.default_rng(0)
     for r in range(args.requests):
         plen = int(rng.integers(4, 33))          # heterogeneous prompts
@@ -116,6 +119,11 @@ def run_multi_tenant(args, acfg):
           f"({rep['decode_tok_per_s']:.1f} decode-only), "
           f"occupancy {rep['batch_occupancy']:.2f}, "
           f"adapter hit rate {rep['adapter_hit_rate']:.2f}{extra}")
+    if rep["shed_requests"] or rep["degraded_served"] \
+            or rep["deadline_retired"]:
+        print(f"degradation: {rep['shed_requests']} shed, "
+              f"{rep['degraded_served']} degraded, "
+              f"{rep['deadline_retired']} deadline-retired")
     if rep["ttft_p50_s"] is not None:
         print(f"latency: ttft p50 {rep['ttft_p50_s']*1e3:.1f}ms / "
               f"p99 {rep['ttft_p99_s']*1e3:.1f}ms, e2e p50 "
@@ -134,9 +142,31 @@ def run_live_refresh(args, acfg):
     cfg = reduced(get_config(args.arch), n_layers=2, d_model=64)
     fed = FedConfig(n_clients=args.clients, local_steps=2)
     metrics, trace = _make_sinks(args)
+    faults = robust = None
+    if args.chaos_seed is not None:
+        from repro.core.federation import RobustConfig
+        from repro.failures import FaultInjector, default_plan
+        faults = FaultInjector(default_plan(args.chaos_seed),
+                               trace=trace, metrics=metrics)
+        robust = RobustConfig()
+    engine_kw = {"max_queue": args.max_queue,
+                 "request_deadline_s": args.request_deadline,
+                 "degrade_after_s": args.degrade_after}
     report, history = train_and_serve(
         cfg, acfg, fed, rounds=args.train_rounds, n_slots=args.slots,
-        requests=args.requests, log=print, metrics=metrics, trace=trace)
+        requests=args.requests, log=print, metrics=metrics, trace=trace,
+        engine_kw=engine_kw, faults=faults, robust=robust)
+    if faults is not None:
+        print(f"chaos (seed {args.chaos_seed}): "
+              f"{faults.count('dropout')} dropouts, "
+              f"{faults.count('corrupt')} corrupted updates, "
+              f"{faults.count('feed_drop')} publish drops, "
+              f"{faults.count('feed_stall')} stalls; "
+              f"{sum(len(r) for r in history.get('rejected', []))} "
+              f"rejected, "
+              f"{history.get('rollbacks', 0)} rollbacks, "
+              f"{report['shed_requests']} shed, "
+              f"{report['degraded_served']} degraded")
     print(f"final train loss {history['loss'][-1]:.4f}; engine at "
           f"adapter version {report['adapter_version']}, "
           f"{report['decode_tok_per_s']:.1f} decode tok/s")
@@ -191,6 +221,23 @@ def main():
     ap.add_argument("--trace-out", default=None,
                     help="write the structured event timeline (JSONL, "
                          "one event per line) here")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="bound the admission queue: a submit past it "
+                         "is shed (request_shed) instead of growing "
+                         "host memory (default: unbounded)")
+    ap.add_argument("--request-deadline", type=float, default=None,
+                    help="per-request submit→retire budget in seconds; "
+                         "overdue rows retire cleanly with "
+                         "deadline_exceeded (default: none)")
+    ap.add_argument("--degrade-after", type=float, default=None,
+                    help="serve the base model (degraded) when a "
+                         "request can't acquire an adapter slot within "
+                         "this many seconds (default: disabled)")
+    ap.add_argument("--chaos-seed", type=int, default=None,
+                    help="--live-refresh only: drive the run through "
+                         "repro.failures.default_plan(seed) — client "
+                         "dropout, corrupted updates, feed stalls — "
+                         "with the robust federation path on")
     ap.add_argument("--fleet", default="fedsa",
                     choices=["fedsa", "fedit", "feddpa", "mixed"],
                     help="tenant population for --multi-tenant: fedsa "

@@ -22,6 +22,7 @@ with the engine timeline.
 from __future__ import annotations
 
 import json
+import threading
 import time
 
 # event type → required fields (beyond ev/ts/tick). Keep in sync with
@@ -38,6 +39,14 @@ EVENT_SCHEMA = {
     "tick_shrink": ("from_ticks", "to_ticks"),
     "retire": ("rid", "client", "tokens", "queue_wait_s", "ttft_s",
                "e2e_s"),
+    # robustness vocabulary (PR 7 — see docs/robustness.md)
+    "fault_injected": ("kind",),
+    "client_dropped": ("round", "client", "reason"),
+    "update_rejected": ("round", "client", "reason"),
+    "request_shed": ("client", "reason"),
+    "deadline_exceeded": ("rid", "client"),
+    "degraded_serve": ("rid", "client", "reason"),
+    "rollback": ("reason",),
 }
 
 
@@ -51,6 +60,10 @@ class TraceLog:
         self.validate = validate
         self.current_tick = None
         self._t0 = time.perf_counter()
+        # emitters may live on several threads (train_and_serve runs the
+        # federation loop beside the engine): stamp-and-append under a
+        # lock so timestamps stay nondecreasing in event order
+        self._lock = threading.Lock()
 
     def emit(self, ev, *, tick=None, **fields):
         """Append one typed event; unknown types raise (the schema is
@@ -62,13 +75,14 @@ class TraceLog:
             missing = [f for f in required if f not in fields]
             if missing:
                 raise ValueError(f"{ev} event missing {missing}")
-        if len(self.events) >= self.maxlen:
-            self.dropped += 1
-            return
-        rec = {"ev": ev, "ts": time.perf_counter() - self._t0,
-               "tick": self.current_tick if tick is None else tick}
-        rec.update(fields)
-        self.events.append(rec)
+        with self._lock:
+            if len(self.events) >= self.maxlen:
+                self.dropped += 1
+                return
+            rec = {"ev": ev, "ts": time.perf_counter() - self._t0,
+                   "tick": self.current_tick if tick is None else tick}
+            rec.update(fields)
+            self.events.append(rec)
 
     def __len__(self):
         return len(self.events)

@@ -96,7 +96,8 @@ class ServingEngine:
                  page_size=16, n_pages=None, attn_backend="xla",
                  lora_backend="jnp", decode_backend="per-tick",
                  decode_ticks=8, eos_id=None, feed=None, metrics=None,
-                 trace=None):
+                 trace=None, max_queue=None, request_deadline_s=None,
+                 degrade_after_s=None):
         if cfg.family == "hybrid":
             raise NotImplementedError(
                 "hybrid cache layout (inner axis before batch) not wired")
@@ -129,6 +130,11 @@ class ServingEngine:
         self.decode_backend = decode_backend
         self.decode_ticks = decode_ticks
         self.eos_id = eos_id
+        # robustness knobs (docs/robustness.md): bounded admission queue
+        # (shed past max_queue), per-request submit→retire deadline
+        # (overdue rows retire cleanly with deadline_exceeded), degraded
+        # base-model serving when no adapter slot can be acquired
+        self.request_deadline_s = request_deadline_s
 
         # observability (repro.obs): a MetricsRegistry by default
         # (report()'s latency percentiles ride its histograms);
@@ -165,12 +171,21 @@ class ServingEngine:
                 "repro_serve_batch_occupancy", "active rows / max_batch")
             self._g_pool = m.gauge(
                 "repro_serve_pool_occupancy", "used pages / capacity")
+            self._c_shed = m.counter(
+                "repro_serve_shed_total", "requests shed unserved")
+            self._c_deadline = m.counter(
+                "repro_serve_deadline_total",
+                "rows retired by the deadline sweep")
+            self._c_degraded = m.counter(
+                "repro_serve_degraded_total",
+                "requests served base-model (degraded)")
         # registry-side events/latency report through the same sinks
         if registry.trace is None:
             registry.trace = trace
         if registry.metrics is None:
             registry.metrics = self.metrics
         self.tick = 0                   # step() count (trace tick ids)
+        self._shed_seen = 0             # scheduler.shed mirrored to obs
 
         if kv_layout == "paged":
             self.page_size = page_size
@@ -181,12 +196,15 @@ class ServingEngine:
             self.pool = PagePool(n_pages, page_size)
             self.scheduler = Scheduler(max_batch, pool=self.pool,
                                        table_pages=self.table_pages,
-                                       trace=trace)
+                                       trace=trace, max_queue=max_queue,
+                                       degrade_after_s=degrade_after_s)
             self.cache = init_paged_cache(cfg, n_pages, page_size,
                                           cache_dtype)
         else:
             self.pool = None
-            self.scheduler = Scheduler(max_batch, trace=trace)
+            self.scheduler = Scheduler(max_batch, trace=trace,
+                                       max_queue=max_queue,
+                                       degrade_after_s=degrade_after_s)
             self.cache = init_cache(cfg, max_batch, max_seq, cache_dtype)
         self._toks = np.zeros((max_batch, 1), np.int32)
         self._pos = np.zeros((max_batch,), np.int32)
@@ -197,7 +215,9 @@ class ServingEngine:
         self.decode_retraces = 0
         self.reset_stats()
         local = registry.local_tree
-        n_slots = registry.n_slots
+        # registries with a degraded zero slot stride their tables by
+        # n_slots + 1; older/minimal registries fall back to n_slots
+        slot_stride = getattr(registry, "slot_stride", registry.n_slots)
         engine = self
 
         def _adapters(tree):
@@ -208,7 +228,7 @@ class ServingEngine:
         if self.versioned:
             def _gather(tables, slots, bufs):
                 return _adapters(gather_adapters_versioned(
-                    tables, local, slots, bufs, n_slots))
+                    tables, local, slots, bufs, slot_stride))
         else:
             # bufs rides the signature unused — XLA drops it, and both
             # registry kinds share one set of step functions
@@ -313,6 +333,8 @@ class ServingEngine:
         if self.metrics is not None:
             self.metrics.reset_window()
         self.finished = {}
+        self.deadline_retired = 0
+        self.degraded_served = 0
         self.decoded_tokens = self.prefill_tokens = self.decode_steps = 0
         self.prefilled_requests = self.prefill_batch_count = 0
         self.host_syncs = 0             # steps that ran a decode phase
@@ -332,14 +354,33 @@ class ServingEngine:
         self.registry.evictions = 0
 
     # -- request plane ------------------------------------------------------
-    def submit(self, client_id, prompt, max_new_tokens=16):
+    def submit(self, client_id, prompt, max_new_tokens=16, deadline_s=None):
+        """Queue one request. Returns its rid — or None when the bounded
+        admission queue shed it (backpressure; the caller may retry
+        later). ``deadline_s`` overrides the engine-wide
+        ``request_deadline_s`` submit→retire budget for this request."""
         assert len(prompt) + max_new_tokens <= self.max_seq, \
             "prompt + generation exceeds engine max_seq"
         if self.pool is not None:
             assert (self.pool.pages_needed(len(prompt) + max_new_tokens)
                     <= self.pool.capacity), \
                 "request needs more KV pages than the pool holds"
-        return self.scheduler.submit(client_id, prompt, max_new_tokens)
+        if deadline_s is None:
+            deadline_s = self.request_deadline_s
+        rid = self.scheduler.submit(client_id, prompt, max_new_tokens,
+                                    deadline_s=deadline_s)
+        self._sync_shed_counter()
+        return rid
+
+    def _sync_shed_counter(self):
+        """Mirror the scheduler's lifetime shed count into the obs
+        counter (sheds happen both at submit and inside admit's overdue
+        sweep, so the engine diffs rather than double-booking)."""
+        if self.metrics is not None:
+            d = self.scheduler.shed - self._shed_seen
+            if d > 0:
+                self._c_shed.inc(d)
+        self._shed_seen = self.scheduler.shed
 
     # -- serving loop -------------------------------------------------------
     def step(self):
@@ -359,6 +400,7 @@ class ServingEngine:
         # here, so this tick's admissions already read the new round
         self._refresh()
         admitted = self.scheduler.admit(self.registry)
+        self._sync_shed_counter()      # admit's overdue sweep may shed
         if self.kv_layout == "paged":
             self._prefill_paged_groups(admitted)
         else:
@@ -654,7 +696,30 @@ class ServingEngine:
             jnp.asarray(self._pos), bts, self.cache)
         return np.asarray(out)
 
+    def _sweep_deadlines(self):
+        """Mark active rows whose submit→retire deadline has passed as
+        finished: they retire cleanly through ``_retire_done`` with
+        whatever tokens they produced, freeing row/pin/pages for the
+        queue instead of starving it."""
+        now = time.perf_counter()
+        for seq in self.scheduler.active.values():
+            if seq.done:
+                continue
+            dl = seq.request.deadline_s
+            if dl is not None and now - seq.request.t_submit > dl:
+                seq.finished = True
+                seq.deadline_hit = True
+                self.deadline_retired += 1
+                if self.metrics is not None:
+                    self._c_deadline.inc()
+                if self.trace is not None:
+                    self.trace.emit("deadline_exceeded",
+                                    rid=seq.request.rid,
+                                    client=seq.request.client_id,
+                                    tokens=len(seq.generated))
+
     def _retire_done(self):
+        self._sweep_deadlines()
         for row, seq in list(self.scheduler.active.items()):
             if seq.done:
                 self.scheduler.retire(row, self.registry)
@@ -678,10 +743,16 @@ class ServingEngine:
                                     tokens=len(seq.generated),
                                     queue_wait_s=queue_wait, ttft_s=ttft,
                                     e2e_s=e2e, version=seq.version)
+                if seq.degraded:
+                    self.degraded_served += 1
+                    if self.metrics is not None:
+                        self._c_degraded.inc()
                 self.finished[req.rid] = {
                     "client_id": req.client_id,
                     "tokens": np.asarray(seq.generated, np.int32),
-                    "version": seq.version}
+                    "version": seq.version,
+                    "degraded": seq.degraded,
+                    "deadline_exceeded": seq.deadline_hit}
 
     def run(self, max_steps=10_000):
         """Drive ``step()`` until queue and batch drain; returns report."""
@@ -750,6 +821,12 @@ class ServingEngine:
                                if steps and self.pool is not None
                                else None),
             "adapter_hit_rate": self.registry.stats["hit_rate"],
+            # robustness accounting: every submitted request is exactly
+            # one of finished (incl. deadline-retired), shed, or still
+            # in flight — serving_chaos.py asserts the identity
+            "shed_requests": self.scheduler.shed,
+            "deadline_retired": self.deadline_retired,
+            "degraded_served": self.degraded_served,
             "kv_layout": self.kv_layout,
             "lora_backend": self.lora_backend,
             "attn_backend": self.attn_backend,

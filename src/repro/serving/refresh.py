@@ -101,7 +101,8 @@ class AdapterFeed:
 def train_and_serve(cfg, acfg, fed, *, rounds=6, n_slots=4, requests=16,
                     max_new_tokens=8, batch_size=8, publish_every=1,
                     submit_every=2, seed=0, engine_kw=None, log=None,
-                    max_steps=200_000, metrics=None, trace=None):
+                    max_steps=200_000, metrics=None, trace=None,
+                    faults=None, robust=None):
     """Run federated training in a background thread while the foreground
     serving engine absorbs each round's adapters live.
 
@@ -116,6 +117,15 @@ def train_and_serve(cfg, acfg, fed, *, rounds=6, n_slots=4, requests=16,
     the engine's serve-side histograms and ``run_rounds``'s per-round
     train metrics land in ONE ``MetricsRegistry``, and the trace
     timeline interleaves admits/retires with flips.
+
+    ``faults`` (``repro.failures.FaultInjector``) threads the SAME
+    injector through both sides: the federation loop runs its
+    fault-tolerant path (with ``robust``, a ``RobustConfig``), and the
+    train→serve bridge drops (``feed_drop``) or stalls (``feed_stall``,
+    delivered one round late) publishes on the way to the feed.
+    Exceptions raised inside the trainer thread are captured and
+    re-raised here after the serving loop winds down — a dead trainer
+    can no longer park the bridge forever.
     """
     from repro.core import federation
     from repro.data.synthetic import make_lm_task
@@ -137,12 +147,33 @@ def train_and_serve(cfg, acfg, fed, *, rounds=6, n_slots=4, requests=16,
                            metrics=metrics, trace=trace, **kw)
 
     history = {}
+    trainer_errors = []
+    stalled = []                       # publishes held back one round
+
+    def publish_cb(version, trainables):
+        if faults is not None:
+            if faults.drops_publish(version):
+                return                 # lost on the wire
+            while stalled:             # a stalled round rides the next one
+                v0, t0 = stalled.pop(0)
+                feed.publish(v0, t0)
+            if faults.stalls_publish(version):
+                stalled.append((version, trainables))
+                return
+        feed.publish(version, trainables)
 
     def trainer():
-        history.update(federation.run_rounds(
-            system, clients_data, rounds=rounds, batch_size=batch_size,
-            seed=seed, publish=feed.publish, publish_every=publish_every,
-            metrics=engine.metrics))
+        try:
+            history.update(federation.run_rounds(
+                system, clients_data, rounds=rounds, batch_size=batch_size,
+                seed=seed, publish=publish_cb, publish_every=publish_every,
+                metrics=engine.metrics, faults=faults, robust=robust,
+                trace=trace))
+            while stalled:             # flush a final-round stall
+                v0, t0 = stalled.pop(0)
+                feed.publish(v0, t0)
+        except BaseException as err:   # noqa: BLE001 — re-raised on join
+            trainer_errors.append(err)
 
     thread = threading.Thread(target=trainer, daemon=True)
     rng = np.random.default_rng(seed)
@@ -151,6 +182,8 @@ def train_and_serve(cfg, acfg, fed, *, rounds=6, n_slots=4, requests=16,
     while (thread.is_alive() or submitted < requests
            or not engine.scheduler.idle or feed.pending
            or registry.stats.get("pending_version") is not None):
+        if trainer_errors:
+            break                      # fail fast: don't serve to drain
         # pace the stream across rounds: each published version unlocks
         # its share of the request budget, so served traffic spans
         # adapter versions instead of racing ahead of the first round
@@ -173,6 +206,9 @@ def train_and_serve(cfg, acfg, fed, *, rounds=6, n_slots=4, requests=16,
         if steps >= max_steps:
             raise RuntimeError("train_and_serve failed to drain")
     thread.join()
+    if trainer_errors:                 # surface the thread's failure here
+        raise RuntimeError(
+            "train_and_serve trainer thread died") from trainer_errors[0]
     report = engine.report()
     served_versions = sorted({rec["version"]
                               for rec in engine.finished.values()})

@@ -72,16 +72,18 @@ def gather_adapters(tables, local, slot_ids):
         tables, local)
 
 
-def gather_adapters_versioned(tables, local, slot_ids, buf_ids, n_slots):
+def gather_adapters_versioned(tables, local, slot_ids, buf_ids, stride):
     """Version-indexed per-row gather for double-buffered registries.
 
-    LOCAL tables index the doubled slot axis at ``buf*n_slots + slot``;
+    LOCAL tables index the doubled slot axis at ``buf*stride + slot``;
     SHARED leaves index their 2-wide version axis per row, so the
     aggregated Ā ALSO gains a per-row axis — ``lora_delta`` handles the
     resulting (B, d_in, r) A as a batched matmul, letting one decode
     batch mix rows admitted under different federation rounds.
+    ``stride`` is the registry's ``slot_stride`` (``n_slots + 1`` — the
+    extra index is the all-zeros degraded slot, see below).
     """
-    eff = buf_ids * n_slots + slot_ids
+    eff = buf_ids * stride + slot_ids
     return jax.tree_util.tree_map(
         lambda leaf, loc: jnp.take(leaf, eff if loc else buf_ids,
                                    axis=_pack_axis(leaf.ndim - 1)),
@@ -91,14 +93,37 @@ def gather_adapters_versioned(tables, local, slot_ids, buf_ids, n_slots):
 class AdapterRegistry:
     """LRU admission of per-client local adapters into dense slot tables."""
 
-    def __init__(self, template, n_slots, *, mode="fedsa", versioned=False):
+    def __init__(self, template, n_slots, *, mode="fedsa", versioned=False,
+                 flip_patience=None, validate_publish=False):
         """template: ONE client's trainables tree (e.g.
         ``{"adapters": ...}`` without the client axis); its SHARED leaves
-        seed the batch-global Ā."""
+        seed the batch-global Ā.
+
+        flip_patience: after this many CONSECUTIVE deferred ``try_flip``
+        attempts on the same pending publish, the stage is dropped and
+        serving stays on the last-good tables (a ``rollback`` event with
+        ``reason="flip_timeout"``). None = wait forever (the default —
+        under normal retirement the blocker always drains).
+        validate_publish: reject non-finite staged weights at ``publish``
+        time — per-client (that client's stage is skipped, the rest of
+        the round lands) and for the SHARED leaves (the whole publish is
+        refused: a poisoned Ā must never reach the flip).
+        """
         self.mode = mode
         self.n_slots = n_slots
+        # slot axis stride: one extra, never-written index per buffer —
+        # the DEGRADED slot. Its table entries stay all-zero, so a row
+        # gathered at ``degraded_slot`` sees a zero LoRA delta and serves
+        # the frozen base model (graceful fallback when no real slot can
+        # be pinned; see docs/robustness.md).
+        self.slot_stride = n_slots + 1
         self.versioned = versioned
         self.n_buffers = 2 if versioned else 1
+        self.flip_patience = flip_patience
+        self.validate_publish = validate_publish
+        self._defer_streak = 0
+        self.flip_timeouts = 0
+        self.publish_rejects = 0
         flat, self._treedef = jax.tree_util.tree_flatten_with_path(template)
         self._local = [leaf_role(path, mode) == LOCAL for path, _ in flat]
         if not any(self._local):
@@ -121,7 +146,8 @@ class AdapterRegistry:
                         "no per-row gather path in lora_delta")
                 self.has_local_A |= name == "A"
                 shape = (leaf.shape[:ax]
-                         + (self.n_buffers * n_slots,) + leaf.shape[ax:])
+                         + (self.n_buffers * self.slot_stride,)
+                         + leaf.shape[ax:])
                 self._leaves.append(jnp.zeros(shape, leaf.dtype))
             elif versioned:
                 leaf = jnp.asarray(leaf)
@@ -255,10 +281,17 @@ class AdapterRegistry:
             if loc:
                 table = self._leaves[i]
                 idx = ((slice(None),) * _pack_axis(table.ndim - 1)
-                       + (buf * self.n_slots + slot,))
+                       + (buf * self.slot_stride + slot,))
                 self._leaves[i] = table.at[idx].set(
                     jnp.asarray(next(stored), table.dtype))
         self._slot_tag[buf][slot] = self._tag_of(client_id)
+
+    @property
+    def degraded_slot(self):
+        """The reserved all-zeros slot index (``n_slots``): rows gathered
+        here see a zero LoRA delta in every buffer — i.e. the frozen base
+        model. Never written, never pinned, never evicted."""
+        return self.n_slots
 
     # -- versioned refresh (repro.serving.refresh) --------------------------
     def retain_buffer(self):
@@ -304,6 +337,26 @@ class AdapterRegistry:
             src = next(iter(client_trees.values()))
         staged = {cid: self._local_leaves(t)
                   for cid, t in client_trees.items()}
+        if self.validate_publish:
+            shared = self._shared_leaves(src)
+            if not all(np.isfinite(leaf).all() for leaf in shared):
+                # a poisoned Ā would reach EVERY tenant at the flip:
+                # refuse the whole publish, keep serving last-good
+                self.publish_rejects += 1
+                if self.trace is not None:
+                    self.trace.emit("rollback", reason="nonfinite_shared",
+                                    version=version)
+                return False
+            bad = [cid for cid, leaves in staged.items()
+                   if not all(np.isfinite(leaf).all() for leaf in leaves)]
+            for cid in bad:
+                del staged[cid]
+                self.publish_rejects += 1
+                if self.trace is not None:
+                    self.trace.emit("update_rejected", round=version,
+                                    client=cid, reason="nonfinite_publish")
+            # an all-rejected round still stages: the (validated) shared
+            # Ā flip is independent of the per-client stages
         # publish→flip latency is measured from the OLDEST unflipped
         # stage: a coalesced publish inherits the pending stamp
         staged_t = time.perf_counter()
@@ -331,10 +384,23 @@ class AdapterRegistry:
         target = 1 - self.active_buf
         if self._buf_rows[target] > 0:
             self.deferred_flips += 1
+            self._defer_streak += 1
             if self.trace is not None:
                 self.trace.emit("deferred_flip",
                                 version=self._pending["version"],
                                 blocking_rows=self._buf_rows[target])
+            if (self.flip_patience is not None
+                    and self._defer_streak >= self.flip_patience):
+                # bounded retry: the blocker has outlived our patience —
+                # drop the stage and keep serving the last-good tables
+                # (the NEXT publish gets a fresh stage and fresh streak)
+                dropped = self._pending["version"]
+                self._pending = None
+                self._defer_streak = 0
+                self.flip_timeouts += 1
+                if self.trace is not None:
+                    self.trace.emit("rollback", reason="flip_timeout",
+                                    version=dropped)
             return False
         pend = self._pending
         shared = iter(pend["shared"])
@@ -357,6 +423,7 @@ class AdapterRegistry:
         self.version = pend["version"]
         self.flips += 1
         self._pending = None
+        self._defer_streak = 0
         if self.trace is not None:
             self.trace.emit("flip", version=self.version)
         if self.metrics is not None:
@@ -389,7 +456,7 @@ class AdapterRegistry:
             buf_ids = jnp.full(slot_ids.shape, self.active_buf, jnp.int32)
         return gather_adapters_versioned(
             self.tables, self.local_tree, slot_ids,
-            jnp.asarray(buf_ids, jnp.int32), self.n_slots)
+            jnp.asarray(buf_ids, jnp.int32), self.slot_stride)
 
     @property
     def stats(self):
@@ -401,7 +468,9 @@ class AdapterRegistry:
                "mode": self.mode, "local_A": self.has_local_A,
                "clients": len(self._store), "version": self.version,
                "flips": self.flips, "deferred_flips": self.deferred_flips,
-               "publishes": self.publishes}
+               "publishes": self.publishes,
+               "flip_timeouts": self.flip_timeouts,
+               "publish_rejects": self.publish_rejects}
         if self.versioned:
             out["pending_version"] = (self._pending["version"]
                                       if self._pending else None)

@@ -98,6 +98,7 @@ class Request:
     max_new_tokens: int = 16
     rid: int = -1                      # assigned on submit
     t_submit: float = 0.0              # perf_counter at submit
+    deadline_s: float = None           # submit→retire budget (None = ∞)
 
 
 @dataclasses.dataclass
@@ -112,6 +113,8 @@ class Sequence:
     buf: int = 0                       # registry buffer at admission
     version: int = 0                   # adapter round at admission
     finished: bool = False             # early stop (engine saw eos_id)
+    degraded: bool = False             # serving the base model (zero slot)
+    deadline_hit: bool = False         # retired by the deadline sweep
     # latency trace stamps (perf_counter; see repro.obs):
     t_admit: float = 0.0               # left the queue for a batch row
     t_first: float = 0.0               # first token visible on the host
@@ -129,45 +132,112 @@ class Sequence:
 
 
 class Scheduler:
-    def __init__(self, max_batch, *, pool=None, table_pages=0, trace=None):
+    def __init__(self, max_batch, *, pool=None, table_pages=0, trace=None,
+                 max_queue=None, degrade_after_s=None):
+        """max_queue: bound on the waiting queue — a submit past it is
+        SHED (returns None, ``request_shed`` event) instead of growing
+        host memory without bound. None = unbounded (legacy behavior).
+        degrade_after_s: once a queued request has waited this long for
+        a registry slot (all pinned, or its client was never ingested),
+        admit it on the registry's all-zeros DEGRADED slot and serve the
+        base model rather than starving it. None disables degradation
+        (acquire failures keep their raise/requeue semantics)."""
         self.max_batch = max_batch
         self.pool = pool
         self.trace = trace             # optional repro.obs.TraceLog
+        self.max_queue = max_queue
+        self.degrade_after_s = degrade_after_s
         self.queue = deque()
         self.active = {}               # row → Sequence
         self._free_rows = list(range(max_batch))[::-1]
         self._next_rid = 0
+        self.shed = 0                  # requests refused or dropped unserved
+        self.degraded_admits = 0
         self.block_tables = (np.zeros((max_batch, table_pages), np.int32)
                              if pool is not None else None)
 
-    def submit(self, client_id, prompt, max_new_tokens=16):
+    def submit(self, client_id, prompt, max_new_tokens=16, deadline_s=None):
         req = Request(client_id, np.asarray(prompt, np.int32),
                       max_new_tokens, rid=self._next_rid,
-                      t_submit=time.perf_counter())
+                      t_submit=time.perf_counter(), deadline_s=deadline_s)
         self._next_rid += 1
+        if (self.max_queue is not None
+                and len(self.queue) >= self.max_queue):
+            self.shed += 1
+            if self.trace is not None:
+                self.trace.emit("request_shed", client=client_id,
+                                reason="queue_full", rid=req.rid)
+            return None
         self.queue.append(req)
         if self.trace is not None:
             self.trace.emit("submit", rid=req.rid, client=client_id)
         return req.rid
 
+    def _shed_overdue(self):
+        """Drop queued requests whose submit→retire deadline has already
+        passed — they could not emit a single useful token."""
+        now = time.perf_counter()
+        kept = deque()
+        for req in self.queue:
+            if (req.deadline_s is not None
+                    and now - req.t_submit > req.deadline_s):
+                self.shed += 1
+                if self.trace is not None:
+                    self.trace.emit("request_shed", client=req.client_id,
+                                    reason="deadline", rid=req.rid)
+            else:
+                kept.append(req)
+        self.queue = kept
+
+    def _acquire_or_degrade(self, registry, req):
+        """(slot, degraded) for the queue head, or None to keep waiting.
+        Degradation (serve the base model off the registry's zero slot)
+        kicks in only when enabled AND the request has waited out its
+        patience — a momentary all-pinned blip still resolves normally."""
+        try:
+            return registry.acquire(req.client_id), False
+        except (RuntimeError, KeyError) as err:
+            unknown = isinstance(err, KeyError)
+            if self.degrade_after_s is None:
+                if unknown:
+                    raise               # never-ingested client: legacy raise
+                return None             # all pinned: stay queued
+            waited = time.perf_counter() - req.t_submit
+            # an unknown client can never acquire — degrade immediately
+            if not unknown and waited < self.degrade_after_s:
+                return None
+            slot = getattr(registry, "degraded_slot", None)
+            if slot is None:           # registry without a zero slot
+                if unknown:
+                    raise
+                return None
+            self.degraded_admits += 1
+            if self.trace is not None:
+                self.trace.emit(
+                    "degraded_serve", rid=req.rid, client=req.client_id,
+                    reason="unknown_client" if unknown else "all_pinned")
+            return slot, True
+
     def admit(self, registry):
         """Move queue heads into free rows while registry slots pin and
         (paged layout) the page pool can reserve the sequence's pages.
         Returns the newly admitted Sequences (prefill still pending)."""
+        self._shed_overdue()
         admitted = []
         while self.queue and self._free_rows:
             req = self.queue[0]
-            try:
-                slot = registry.acquire(req.client_id)
-            except RuntimeError:       # every slot pinned by active rows
+            got = self._acquire_or_degrade(registry, req)
+            if got is None:
                 break
+            slot, degraded = got
             pages = []
             if self.pool is not None:
                 needed = self.pool.pages_needed(
                     len(req.prompt) + req.max_new_tokens)
                 pages = self.pool.alloc(needed)
                 if pages is None:      # pool exhausted: stay queued
-                    registry.release(req.client_id)
+                    if not degraded:
+                        registry.release(req.client_id)
                     if self.trace is not None:
                         self.trace.emit("pool_exhausted",
                                         client=req.client_id,
@@ -179,7 +249,8 @@ class Scheduler:
             now = time.perf_counter()
             seq = Sequence(req, row, slot, pos=len(req.prompt), pages=pages,
                            buf=registry.retain_buffer(),
-                           version=registry.version, t_admit=now)
+                           version=registry.version, t_admit=now,
+                           degraded=degraded)
             if self.trace is not None:
                 self.trace.emit("admit", rid=req.rid, client=req.client_id,
                                 row=row, slot=slot,
@@ -194,7 +265,8 @@ class Scheduler:
     def retire(self, row, registry):
         """Free a finished row + its registry pin, buffer hold + pages."""
         seq = self.active.pop(row)
-        registry.release(seq.request.client_id)
+        if not seq.degraded:           # degraded rows never pinned a slot
+            registry.release(seq.request.client_id)
         registry.release_buffer(seq.buf)
         if self.pool is not None:
             self.pool.release(seq.pages)

@@ -1,0 +1,506 @@
+"""Failure paths end to end: deterministic fault injection, the robust
+federation round (rejection / clipping / rollback), serving degradation
+(shed, deadline, degraded base-model slot), atomic checkpoints, and the
+hardened train→serve bridge. See docs/robustness.md."""
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import AdapterConfig, FedConfig, get_config, reduced
+from repro.core import federation
+from repro.core.adapters import init_adapters
+from repro.core.aggregation import _trimmed_mean, aggregate
+from repro.core.strategies import LOCAL, leaf_role
+from repro.data.synthetic import make_classification_task
+from repro.failures import (FaultInjector, FaultPlan, PagePressure,
+                            default_plan)
+from repro.models.transformer import decode_step, init_model, prefill
+from repro.obs import TraceLog
+from repro.serving import AdapterRegistry, ServingEngine
+from repro.serving.demo import synthetic_clients
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan / FaultInjector determinism
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_deterministic_replay():
+    """The same plan replayed in a DIFFERENT query order (and with
+    unrelated queries interleaved) yields identical per-key decisions —
+    the property every postmortem and the chaos CI job rest on."""
+    plan = default_plan(seed=3)
+    a = FaultInjector(plan)
+    b = FaultInjector(plan)
+    keys = [(r, c) for r in range(4) for c in range(8)]
+    got_a = {k: a.client_fate(*k)[0] for k in keys}
+    for v in range(6):                   # unrelated draws must not shift
+        b.drops_publish(v)               # the dropout stream
+    got_b = {k: b.client_fate(*k)[0] for k in reversed(keys)}
+    assert got_a == got_b
+    assert [a.corrupts(1, c) for c in range(8)] == \
+           [b.corrupts(1, c) for c in range(8)]
+    # a different seed is a different timeline
+    c = FaultInjector(default_plan(seed=4))
+    assert any(got_a[k] != c.client_fate(*k)[0] for k in keys) or \
+        [a.corrupts(1, i) for i in range(8)] != \
+        [c.corrupts(1, i) for i in range(8)]
+
+
+def test_fault_injector_records_and_traces():
+    trace = TraceLog(validate=True)
+    inj = FaultInjector(FaultPlan(seed=0, dropout_rate=1.0,
+                                  retry_success_rate=0.0), trace=trace)
+    dropped, _ = inj.client_fate(0, 0)
+    assert dropped
+    assert inj.count("dropout") == 1
+    assert trace.by_type("fault_injected")[0]["kind"] == "dropout"
+    # rate-1.0 plans fire always; rate-0.0 plans never
+    calm = FaultInjector(FaultPlan(seed=0))
+    assert not any(calm.client_fate(r, c)[0]
+                   for r in range(3) for c in range(4))
+
+
+def test_fault_plan_validates_rates():
+    with pytest.raises(ValueError):
+        FaultPlan(dropout_rate=1.5)
+    with pytest.raises(ValueError):
+        FaultPlan(corrupt_kind="garbage")
+
+
+# ---------------------------------------------------------------------------
+# Aggregation validation primitives
+# ---------------------------------------------------------------------------
+
+def test_trimmed_mean_drops_extremes():
+    x = jnp.asarray([[1.0], [2.0], [3.0], [100.0]])
+    valid = jnp.ones((4,))
+    # trim=0.25 drops one rank at each end → mean(2, 3)
+    assert np.allclose(_trimmed_mean(x, valid, trim=0.25), 2.5)
+    # trim=0 is the plain mean over the valid clients
+    assert np.allclose(_trimmed_mean(x, valid, trim=0.0), x.mean(0))
+    # invalid clients are pushed past every valid rank: excluding the
+    # outlier client changes nothing else
+    assert np.allclose(
+        _trimmed_mean(x, jnp.asarray([1.0, 1.0, 1.0, 0.0]), trim=0.0),
+        2.0)
+
+
+def test_aggregate_excluded_nan_does_not_poison_mean():
+    """participation=0 for a NaN client must fully exclude it — the
+    0-weight × NaN = NaN tensordot pitfall."""
+    adapters = {"adapters": {"blk": {"attn": {
+        "A": jnp.stack([jnp.ones((2, 2)), jnp.full((2, 2), jnp.nan)]),
+        "B": jnp.zeros((2, 2, 2))}}}}
+    part = jnp.asarray([1.0, 0.0])
+    out = aggregate(adapters, "fedsa", participation=part,
+                    receive=jnp.ones((2,)))
+    A = out["adapters"]["blk"]["attn"]["A"]
+    assert np.isfinite(np.asarray(A)).all()
+    assert np.allclose(A, 1.0)           # both clients receive the mean
+
+
+# ---------------------------------------------------------------------------
+# Robust federation rounds
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def fed_setup():
+    cfg = reduced(get_config("roberta-large"), n_layers=2, d_model=64)
+    clients, _ = make_classification_task(
+        n_clients=3, n_classes=4, vocab=cfg.vocab_size, seq=16,
+        n_train=240, n_test=60, alpha=0.5, seed=0)
+    return cfg, clients
+
+
+def build_system(cfg, seed=0):
+    fed = FedConfig(n_clients=3, local_steps=2)
+    acfg = AdapterConfig(mode="fedsa", rank=4)
+    return federation.build(jax.random.PRNGKey(seed), cfg, acfg, fed,
+                            task="classification", n_classes=4, lr=5e-2)
+
+
+def shared_leaves(tr, mode="fedsa"):
+    flat = jax.tree_util.tree_flatten_with_path(tr)[0]
+    return [np.asarray(leaf) for path, leaf in flat
+            if leaf_role(path, mode) != LOCAL]
+
+
+def test_corrupted_update_rejected_round_trip(fed_setup):
+    """NaN client updates are rejected at the validation gate: training
+    survives with finite losses, zero rollbacks, and the rejected
+    clients still RECEIVE the clean aggregate (heal path)."""
+    cfg, clients = fed_setup
+    sys = build_system(cfg)
+    plan = FaultPlan(seed=2, corrupt_rate=0.5, corrupt_kind="nan")
+    trace = TraceLog(validate=True)
+    faults = FaultInjector(plan, trace=trace)
+    hist = federation.run_rounds(sys, clients, rounds=4, batch_size=16,
+                                 seed=1, faults=faults, trace=trace)
+    n_rej = sum(len(r) for r in hist["rejected"])
+    assert np.isfinite(hist["loss"]).all()
+    assert hist["rollbacks"] == 0
+    assert n_rej >= 1
+    assert n_rej == faults.count("corrupt")
+    assert len(trace.by_type("update_rejected")) == n_rej
+    for leaf in shared_leaves(sys.trainables):
+        assert np.isfinite(leaf).all()
+        # post-aggregation: every client (incl. rejected) holds the
+        # same shared Ā
+        assert np.allclose(leaf, leaf[0])
+
+
+def test_rollback_heals_bad_aggregate(fed_setup):
+    """With the validation gate off, a NaN update reaches the mean; the
+    post-aggregate check must roll the shared leaves back to last-good
+    and count it — weights stay finite for serving."""
+    cfg, clients = fed_setup
+    sys = build_system(cfg)
+    plan = FaultPlan(seed=2, corrupt_rate=0.5, corrupt_kind="nan")
+    robust = federation.RobustConfig(reject_nonfinite=False)
+    trace = TraceLog(validate=True)
+    hist = federation.run_rounds(sys, clients, rounds=4, batch_size=16,
+                                 seed=1, faults=FaultInjector(plan),
+                                 robust=robust, trace=trace)
+    assert hist["rollbacks"] >= 1
+    assert len(trace.by_type("rollback")) == hist["rollbacks"]
+    for leaf in shared_leaves(sys.trainables):
+        assert np.isfinite(leaf).all()
+
+
+def test_full_dropout_round_keeps_state(fed_setup):
+    """Every client dropped every round → no update ever lands: the
+    trainables (shared AND local) are bit-identical to the start."""
+    cfg, clients = fed_setup
+    sys = build_system(cfg)
+    before = jax.tree_util.tree_map(np.asarray, sys.trainables)
+    plan = FaultPlan(seed=0, dropout_rate=1.0, retry_success_rate=0.0)
+    hist = federation.run_rounds(sys, clients, rounds=2, batch_size=16,
+                                 seed=1, faults=FaultInjector(plan))
+    assert hist["dropped"] == [[0, 1, 2], [0, 1, 2]]
+    after = jax.tree_util.tree_map(np.asarray, sys.trainables)
+    for a, b in zip(jax.tree_util.tree_leaves(before),
+                    jax.tree_util.tree_leaves(after)):
+        assert np.array_equal(a, b)
+
+
+def test_faulted_history_replays_bit_exact(fed_setup):
+    """Same plan + same workload → identical fault timeline AND
+    identical training history (the deterministic-replay acceptance)."""
+    cfg, clients = fed_setup
+    runs = []
+    for _ in range(2):
+        sys = build_system(cfg)
+        faults = FaultInjector(default_plan(seed=1))
+        hist = federation.run_rounds(sys, clients, rounds=3,
+                                     batch_size=16, seed=1, faults=faults)
+        runs.append((hist, faults.decisions))
+    (h0, d0), (h1, d1) = runs
+    assert d0 == d1
+    assert h0["dropped"] == h1["dropped"]
+    assert h0["rejected"] == h1["rejected"]
+    assert np.allclose(h0["loss"], h1["loss"])
+
+
+# ---------------------------------------------------------------------------
+# Serving degradation
+# ---------------------------------------------------------------------------
+
+def tiny_cfg():
+    return reduced(get_config("deepseek-7b"), n_layers=2, d_model=64)
+
+
+@pytest.fixture(scope="module")
+def serve_setup():
+    cfg = tiny_cfg()
+    acfg = AdapterConfig(mode="fedsa", rank=4)
+    params = init_model(KEY, cfg, jnp.float32)
+    template = {"adapters": init_adapters(KEY, cfg, acfg)}
+    trees = synthetic_clients(template, 4, seed=50, scale=0.05)
+    return cfg, acfg, params, template, trees
+
+
+def make_engine(serve_setup, *, n_slots=2, n_clients=4, **kw):
+    cfg, acfg, params, template, trees = serve_setup
+    reg = AdapterRegistry(template, n_slots=n_slots)
+    for i, t in enumerate(trees[:n_clients]):
+        reg.ingest(i, t)
+    return ServingEngine(cfg, params, acfg, reg, max_batch=2,
+                         max_seq=32, **kw)
+
+
+def test_queue_bound_sheds_excess(serve_setup):
+    trace = TraceLog(validate=True)
+    engine = make_engine(serve_setup, max_queue=1, trace=trace)
+    prompt = np.arange(4) % 7
+    rids = [engine.submit(i % 4, prompt, max_new_tokens=4)
+            for i in range(4)]
+    # one queued, the rest shed with an explicit event
+    assert rids[0] is not None and rids[1:] == [None, None, None]
+    assert engine.scheduler.shed == 3
+    shed = trace.by_type("request_shed")
+    assert len(shed) == 3
+    assert all(e["reason"] == "queue_full" for e in shed)
+    rep = engine.run()
+    assert rep["shed_requests"] == 3
+    # accounting identity: submitted == finished + shed
+    assert engine.scheduler._next_rid == len(engine.finished) + 3
+
+
+def test_scheduler_recovers_after_pool_pressure(serve_setup):
+    """PagePressure holds every free page → admission stalls with
+    pool_exhausted (requests queue, nothing lost); release → the queue
+    drains on its own and every request retires."""
+    trace = TraceLog(validate=True)
+    engine = make_engine(serve_setup, trace=trace)
+    pressure = PagePressure(engine.pool, 1.0)
+    held = pressure.apply()
+    assert held == engine.pool.capacity
+    for i in range(3):
+        engine.submit(i % 4, np.arange(6) % 7, max_new_tokens=4)
+    for _ in range(4):
+        engine.step()
+    assert len(engine.finished) == 0            # stuck, not lost
+    assert len(trace.by_type("pool_exhausted")) >= 1
+    assert len(engine.scheduler.queue) == 3
+    pressure.release()
+    rep = engine.run()
+    assert rep["requests"] == 3                 # full recovery
+    assert engine.scheduler.shed == 0
+
+
+def test_unknown_client_degrades_to_base_model(serve_setup):
+    """A never-ingested tenant serves the base model (degraded=True off
+    the registry's zero slot) instead of raising — and its tokens match
+    a reference decode with a zeroed LoRA delta."""
+    cfg, acfg, params, template, trees = serve_setup
+    trace = TraceLog(validate=True)
+    engine = make_engine(serve_setup, degrade_after_s=5.0, trace=trace)
+    prompt = (np.arange(9) * 3) % 11
+    rid = engine.submit(99, prompt, max_new_tokens=6)
+    rep = engine.run()
+    rec = engine.finished[rid]
+    assert rec["degraded"]
+    assert rep["degraded_served"] == 1
+    ev = trace.by_type("degraded_serve")
+    assert len(ev) == 1 and ev[0]["reason"] == "unknown_client"
+    # reference: the base model IS a zero LoRA delta (B ≡ 0)
+    zero_b = jax.tree_util.tree_map_with_path(
+        lambda p, x: jnp.zeros_like(x) if leaf_role(p, acfg.mode) == LOCAL
+        else x, template)
+    ad = zero_b["adapters"]
+    toks = jnp.asarray(np.asarray(prompt)[None].astype(np.int32))
+    logits, cache, _ = prefill(cfg, params, ad, acfg, toks, 32,
+                               cache_dtype=jnp.float32)
+    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    want = [int(tok[0, 0])]
+    for s in range(5):
+        pos = jnp.full((1,), len(prompt) + s, jnp.int32)
+        logits, cache = decode_step(cfg, params, ad, acfg, tok, pos, cache)
+        tok = jnp.argmax(logits[:, 0], -1)[:, None].astype(jnp.int32)
+        want.append(int(tok[0, 0]))
+    assert list(rec["tokens"]) == want
+
+
+def test_all_pinned_without_degradation_still_waits(serve_setup):
+    """Legacy semantics preserved: degrade_after_s=None keeps the
+    stay-queued behavior on an all-pinned registry (and raises on an
+    unknown client)."""
+    engine = make_engine(serve_setup, n_slots=1)
+    engine.submit(0, np.arange(6) % 7, max_new_tokens=4)
+    engine.submit(1, np.arange(6) % 7, max_new_tokens=4)
+    rep = engine.run()                           # sequential slot reuse
+    assert rep["requests"] == 2
+    assert engine.scheduler.degraded_admits == 0
+    with pytest.raises(KeyError):
+        engine.submit(99, np.arange(4) % 7, max_new_tokens=2)
+        engine.run()
+
+
+def test_all_pinned_degrades_after_patience(serve_setup):
+    """n_slots=1, two tenants in flight: the second can't pin a slot —
+    after degrade_after_s it serves base-model instead of starving."""
+    trace = TraceLog(validate=True)
+    engine = make_engine(serve_setup, n_slots=1, degrade_after_s=0.0,
+                         trace=trace)
+    engine.submit(0, np.arange(12) % 7, max_new_tokens=8)
+    engine.step()                                # client 0 pins slot 0
+    engine.submit(1, np.arange(6) % 7, max_new_tokens=4)
+    rep = engine.run()
+    assert rep["requests"] == 2
+    degraded = [r for r in engine.finished.values() if r["degraded"]]
+    assert len(degraded) == 1
+    ev = trace.by_type("degraded_serve")
+    assert len(ev) == 1 and ev[0]["reason"] == "all_pinned"
+
+
+def test_request_deadline_retires_overdue_row(serve_setup):
+    """An admitted row past its submit→retire deadline is retired
+    cleanly (partial tokens, deadline_exceeded event) — the row, pin
+    and pages come back to the queue."""
+    trace = TraceLog(validate=True)
+    engine = make_engine(serve_setup, trace=trace)
+    rid = engine.submit(0, np.arange(6) % 7, max_new_tokens=16,
+                        deadline_s=1e9)
+    engine.step()                                # admit + prefill
+    seq = next(iter(engine.scheduler.active.values()))
+    assert seq.request.rid == rid
+    seq.request.deadline_s = 1e-9                # now overdue mid-decode
+    rep = engine.run()
+    rec = engine.finished[rid]
+    assert rec["deadline_exceeded"]
+    assert len(rec["tokens"]) < 16
+    assert rep["deadline_retired"] == 1
+    assert len(trace.by_type("deadline_exceeded")) == 1
+    # the engine is healthy afterwards: next request serves fully
+    rid2 = engine.submit(1, np.arange(4) % 7, max_new_tokens=4)
+    engine.run()
+    assert len(engine.finished[rid2]["tokens"]) == 4
+
+
+def test_overdue_queued_request_is_shed(serve_setup):
+    trace = TraceLog(validate=True)
+    engine = make_engine(serve_setup, trace=trace)
+    engine.submit(0, np.arange(4) % 7, max_new_tokens=4, deadline_s=0.0)
+    rep = engine.run()
+    assert rep["requests"] == 0 and engine.scheduler.shed == 1
+    ev = trace.by_type("request_shed")
+    assert len(ev) == 1 and ev[0]["reason"] == "deadline"
+
+
+# ---------------------------------------------------------------------------
+# Registry publish validation + bounded flip retry
+# ---------------------------------------------------------------------------
+
+def versioned_registry(serve_setup, **kw):
+    _, _, _, template, trees = serve_setup
+    reg = AdapterRegistry(template, n_slots=2, versioned=True, **kw)
+    for i, t in enumerate(trees):
+        reg.ingest(i, t)
+    return reg
+
+
+def nan_tree(tree, mode, role=LOCAL):
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x: jnp.full_like(x, jnp.nan)
+        if leaf_role(p, mode) == role else x, tree)
+
+
+def test_publish_rejects_nonfinite(serve_setup):
+    _, acfg, _, _, trees = serve_setup
+    trace = TraceLog(validate=True)
+    reg = versioned_registry(serve_setup, validate_publish=True)
+    reg.trace = trace
+    # poisoned shared Ā → whole publish refused, version unchanged
+    from repro.core.strategies import SHARED
+    bad_shared = nan_tree(trees[0], acfg.mode, role=SHARED)
+    assert reg.publish(1, {0: bad_shared}, shared_from=bad_shared) is False
+    assert reg.version == 0 and reg.publish_rejects == 1
+    assert trace.by_type("rollback")[0]["reason"] == "nonfinite_shared"
+    # one poisoned B_i → only that client's stage dropped
+    flipped = reg.publish(1, {0: nan_tree(trees[0], acfg.mode),
+                              1: trees[1]})
+    assert flipped and reg.version == 1
+    assert reg._client_ver[1] == 1 and reg._client_ver[0] == 0
+    rej = trace.by_type("update_rejected")
+    assert len(rej) == 1 and rej[0]["client"] == 0
+
+
+def test_flip_patience_drops_stuck_publish(serve_setup):
+    _, _, _, _, trees = serve_setup
+    trace = TraceLog(validate=True)
+    reg = versioned_registry(serve_setup, flip_patience=3)
+    reg.trace = trace
+    buf = reg.retain_buffer()                    # a long-lived row admitted
+    assert reg.publish(1, {0: trees[0]}) is True  # other buffer was free
+    # the row still reads the now-inactive buffer → round 2 can't flip
+    assert reg.publish(2, {1: trees[1]}) is False
+    for _ in range(2):
+        assert reg.try_flip() is False
+    # patience exhausted: the stage is dropped, last-good keeps serving
+    assert reg.stats["pending_version"] is None
+    assert reg.flip_timeouts == 1 and reg.version == 1
+    assert any(e["reason"] == "flip_timeout"
+               for e in trace.by_type("rollback"))
+    reg.release_buffer(buf)
+    # the NEXT publish is fresh and commits normally
+    assert reg.publish(3, {1: trees[1]}) is True
+    assert reg.version == 3
+
+
+# ---------------------------------------------------------------------------
+# Atomic checkpoints + hardened bridge + bench gate errors
+# ---------------------------------------------------------------------------
+
+def test_atomic_checkpoint_survives_crash(tmp_path, monkeypatch):
+    from repro.checkpoint import npz as ckpt
+    tree = {"w": jnp.ones((3, 2)), "b": jnp.zeros((2,))}
+    path = str(tmp_path / "state.npz")
+    ckpt.save_pytree(path, tree)
+    good = open(path, "rb").read()
+
+    calls = {"n": 0}
+    real = np.savez
+
+    def crashy(f, **arrays):
+        real(f, **arrays)
+        raise OSError("disk full mid-save")
+
+    monkeypatch.setattr(np, "savez", crashy)
+    with pytest.raises(OSError):
+        ckpt.save_pytree(path, {"w": jnp.full((3, 2), 9.0),
+                                "b": jnp.ones((2,))})
+    monkeypatch.undo()
+    # the old checkpoint is untouched and no temp litter remains
+    assert open(path, "rb").read() == good
+    assert os.listdir(tmp_path) == ["state.npz"]
+    restored = ckpt.load_pytree(path, tree)
+    assert np.allclose(restored["w"], 1.0)
+
+
+def test_trainer_thread_death_reraised(monkeypatch):
+    """A trainer-thread exception must surface in the caller, not park
+    the serving loop forever."""
+    from repro.serving import refresh
+
+    def boom(*a, **kw):
+        raise ValueError("synthetic trainer crash")
+
+    monkeypatch.setattr(federation, "run_rounds", boom)
+    cfg = tiny_cfg()
+    acfg = AdapterConfig(mode="fedsa", rank=4)
+    fed = FedConfig(n_clients=2, local_steps=1)
+    with pytest.raises(RuntimeError, match="trainer thread died") as exc:
+        refresh.train_and_serve(cfg, acfg, fed, rounds=1, requests=2,
+                                n_slots=2, max_new_tokens=2)
+    assert isinstance(exc.value.__cause__, ValueError)
+
+
+def test_bench_gate_names_missing_and_bad_records(tmp_path, capsys):
+    import sys
+    sys.path.insert(0, str(tmp_path.parent))
+    from benchmarks import bench_gate
+    rc = bench_gate.main(["--fresh", str(tmp_path / "nope.json")])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "cannot read fresh record" in out and "nope.json" in out
+    bad = tmp_path / "bad.json"
+    bad.write_text('{"bench": "serving_chaos", not json')
+    rc = bench_gate.main(["--fresh", str(bad)])
+    out = capsys.readouterr().out
+    assert rc == 1 and "not valid JSON" in out
+    fresh = tmp_path / "fresh.json"
+    fresh.write_text('{"bench": "serving_chaos", '
+                     '"faulted_decode_ratio": 1.0, "config": {}}')
+    rc = bench_gate.main(["--fresh", str(fresh),
+                          "--baseline", str(tmp_path / "gone.json")])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "cannot read baseline record" in out
+    assert "faulted_decode_ratio" in out       # names the expected spec
+    assert "regenerate" in out
