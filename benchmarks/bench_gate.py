@@ -14,6 +14,9 @@ picks the gated metric:
   serving_decode_fused ``speedup_vs_pertick`` — fused multi-tick decode
                       at the gated tick count vs the per-tick engine
                       (baseline ``BENCH_decode.json``)
+  serving_tiering     ``admission_speedup`` — tiered (host ring +
+                      prefetch) p99 admission vs evict-and-reingest
+                      from cold (baseline ``BENCH_tiering.json``)
 
 The gate fails (exit 1) when the fresh metric regresses:
 
@@ -81,6 +84,18 @@ _BENCHES = {
         # loop's edge IS dispatch overhead, which shared runners vary
         "floor": 1.2,
         "baseline": "BENCH_decode.json",
+    },
+    "serving_tiering": {
+        # baseline p99 admission latency ÷ tiered p99 over the same
+        # Zipf(1.0) trace at equal HBM slot count — how much the host
+        # ring + prefetch lookahead beat evict-and-reingest-from-cold
+        "metric": "admission_speedup",
+        "workload": _COMMON_KEYS + ("n_slots", "host_ring_slots",
+                                    "zipf_a", "accesses", "lookahead"),
+        # ISSUE 8 acceptance: tiered p99 ≤ 0.5× the cold-reingest
+        # baseline (speedup ≥ 2×); the committed record runs well above
+        "floor": 2.0,
+        "baseline": "BENCH_tiering.json",
     },
     "serving_chaos": {
         # faulted decode tok/s ÷ clean decode tok/s under the default

@@ -20,7 +20,7 @@ def main() -> None:
     from benchmarks import (fig2_similarity, nlg_generation, roofline,
                             serving_chaos, serving_decode_fused,
                             serving_refresh, serving_sgmv,
-                            serving_throughput,
+                            serving_throughput, serving_tiering,
                             table1_accuracy, table2_comm,
                             table3_heterogeneity, table4_clients,
                             table5_rank, table10_compression)
@@ -46,6 +46,8 @@ def main() -> None:
             ticks=(1, 8) if q else (1, 4, 8, 16)),
         "chaos": lambda: serving_chaos.main(
             requests=12 if q else 18, new_tokens=6 if q else 8),
+        "tiering": lambda: serving_tiering.main(
+            accesses=800 if q else 2000),
     }
     only = set(args.only.split(",")) if args.only else set(suites)
     for name, fn in suites.items():

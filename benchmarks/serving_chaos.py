@@ -46,7 +46,8 @@ from repro.core.strategies import LOCAL, leaf_role
 from repro.failures import FaultInjector, PagePressure, default_plan
 from repro.models.transformer import init_model
 from repro.obs import TraceLog
-from repro.serving import AdapterFeed, AdapterRegistry, ServingEngine
+from repro.serving import (AdapterFeed, AdapterRegistry, ServingConfig,
+                           ServingEngine)
 from repro.serving.demo import synthetic_clients
 
 try:
@@ -99,10 +100,12 @@ def run_arm(cfg, params, acfg, rounds_trees, prompts, *, batch, max_seq,
     for i, t in enumerate(rounds_trees[0]):
         reg.ingest(i, t)
     feed = AdapterFeed()
-    engine = ServingEngine(cfg, params, acfg, reg, max_batch=batch,
-                           max_seq=max_seq, page_size=page_size,
-                           feed=feed, trace=trace, max_queue=max_queue,
-                           degrade_after_s=2.0)
+    engine = ServingEngine(cfg, params, acfg, reg,
+                           ServingConfig(max_batch=batch, max_seq=max_seq,
+                                         page_size=page_size,
+                                         max_queue=max_queue,
+                                         degrade_after_s=2.0),
+                           feed=feed, trace=trace)
     # warm-up compiles prefill/decode variants (untimed, both arms)
     engine.submit(0, prompts[0], max_new_tokens=new_tokens)
     engine.run()

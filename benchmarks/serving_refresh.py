@@ -31,7 +31,8 @@ import jax.numpy as jnp
 from repro.configs import AdapterConfig, get_config, reduced
 from repro.core.adapters import init_adapters
 from repro.models.transformer import init_model
-from repro.serving import AdapterFeed, AdapterRegistry, ServingEngine
+from repro.serving import (AdapterFeed, AdapterRegistry, ServingConfig,
+                           ServingEngine)
 from repro.serving.demo import synthetic_clients
 
 try:                       # python -m benchmarks.serving_refresh / run.py
@@ -64,8 +65,9 @@ def run_live(cfg, params, acfg, rounds_trees, segs, new_tokens, batch,
     for i, t in enumerate(rounds_trees[0]):
         reg.ingest(i, t)
     feed = AdapterFeed()
-    engine = ServingEngine(cfg, params, acfg, reg, max_batch=batch,
-                           max_seq=max_seq, feed=feed)
+    engine = ServingEngine(cfg, params, acfg, reg,
+                           ServingConfig(max_batch=batch, max_seq=max_seq),
+                           feed=feed)
     # warm-up: compile prefill/decode variants on round-0 weights
     engine.submit(0, segs[0][0], max_new_tokens=new_tokens)
     engine.run()
@@ -108,8 +110,9 @@ def run_drain(cfg, params, acfg, rounds_trees, segs, new_tokens, batch,
         reg = AdapterRegistry(rounds_trees[version][0], n_slots=batch)
         for i, t in enumerate(rounds_trees[version]):
             reg.ingest(i, t)
-        return ServingEngine(cfg, params, acfg, reg, max_batch=batch,
-                             max_seq=max_seq)
+        return ServingEngine(cfg, params, acfg, reg,
+                             ServingConfig(max_batch=batch,
+                                           max_seq=max_seq))
 
     engine = build(0)
     engine.submit(0, segs[0][0], max_new_tokens=new_tokens)

@@ -44,7 +44,7 @@ import jax.numpy as jnp
 from repro.configs import AdapterConfig, get_config, reduced
 from repro.core.adapters import init_adapters
 from repro.models.transformer import decode_step, init_model, prefill
-from repro.serving import AdapterRegistry, ServingEngine
+from repro.serving import AdapterRegistry, ServingConfig, ServingEngine
 from repro.serving.demo import synthetic_clients
 
 try:                       # python -m benchmarks.serving_sgmv / run.py
@@ -63,8 +63,9 @@ def run_grouped(cfg, params, acfg, template, trees, reg_mode, prompts,
     reg = AdapterRegistry(template, n_slots=batch, mode=reg_mode)
     for i, tr in enumerate(trees):
         reg.ingest(i, tr)
-    engine = ServingEngine(cfg, params, acfg, reg, max_batch=batch,
-                           max_seq=max_seq, **engine_kw)
+    engine = ServingEngine(cfg, params, acfg, reg,
+                           ServingConfig(max_batch=batch, max_seq=max_seq,
+                                         **engine_kw))
     for timed in (False, True):
         engine.reset_stats()
         for i, p in enumerate(prompts):

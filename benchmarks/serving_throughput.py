@@ -33,7 +33,7 @@ import jax.numpy as jnp
 from repro.configs import AdapterConfig, get_config, reduced
 from repro.core.adapters import init_adapters
 from repro.models.transformer import decode_step, init_model, prefill
-from repro.serving import AdapterRegistry, ServingEngine
+from repro.serving import AdapterRegistry, ServingConfig, ServingEngine
 from repro.serving.demo import synthetic_clients
 
 try:                       # python -m benchmarks.serving_throughput / run.py
@@ -55,8 +55,9 @@ def run_engine(cfg, params, acfg, base, client_trees, prompts, new_tokens,
     reg = AdapterRegistry({"adapters": base}, n_slots=batch)
     for i, tr in enumerate(client_trees):
         reg.ingest(i, {"adapters": tr})
-    engine = ServingEngine(cfg, params, acfg, reg, max_batch=batch,
-                           max_seq=max_seq, **engine_kw)
+    engine = ServingEngine(cfg, params, acfg, reg,
+                           ServingConfig(max_batch=batch, max_seq=max_seq,
+                                         **engine_kw))
     for timed in (False, True):
         engine.reset_stats()
         for i, p in enumerate(prompts):

@@ -25,15 +25,15 @@ from repro.configs import AdapterConfig, FedConfig, get_config, reduced
 from repro.core import federation
 from repro.data.synthetic import make_lm_task
 from repro.models.transformer import decode_step, prefill
-from repro.serving import AdapterRegistry, ServingEngine
+from repro.serving import AdapterRegistry, ServingConfig, ServingEngine
 
 
 def serve_multi_tenant(cfg, acfg, system, fed, args):
     """Mixed-client traffic: every request may come from any client."""
     reg = AdapterRegistry.from_system(system, n_slots=fed.n_clients)
     engine = ServingEngine(cfg, system.params, acfg, reg,
-                           max_batch=args.batch,
-                           max_seq=12 + args.tokens)
+                           ServingConfig(max_batch=args.batch,
+                                         max_seq=12 + args.tokens))
     rng = np.random.default_rng(3)
     n_requests = 2 * args.batch
     for r in range(n_requests):

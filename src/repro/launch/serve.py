@@ -60,7 +60,7 @@ def run_multi_tenant(args, acfg):
     from repro.configs import get_config, reduced
     from repro.core.adapters import init_adapters
     from repro.models.transformer import init_model
-    from repro.serving import AdapterRegistry, ServingEngine
+    from repro.serving import AdapterRegistry, ServingConfig, ServingEngine
     from repro.serving.demo import mixed_fleet, synthetic_clients
 
     cfg = reduced(get_config(args.arch))
@@ -86,18 +86,11 @@ def run_multi_tenant(args, acfg):
     for i, tree in enumerate(trees):
         reg.ingest(i, tree)
     metrics, trace = _make_sinks(args)
-    engine = ServingEngine(cfg, params, acfg, reg,
-                           max_batch=min(8, args.clients), max_seq=64,
-                           kv_layout=args.kv_layout,
-                           page_size=args.page_size,
-                           attn_backend=args.attn_backend,
-                           lora_backend=args.lora_backend,
-                           decode_backend=args.decode_backend,
-                           decode_ticks=args.decode_ticks,
-                           metrics=metrics, trace=trace,
-                           max_queue=args.max_queue,
-                           request_deadline_s=args.request_deadline,
-                           degrade_after_s=args.degrade_after)
+    # ONE place argparse flags meet engine knobs: the config builder
+    scfg = ServingConfig.from_args(args, max_batch=min(8, args.clients),
+                                   max_seq=64)
+    engine = ServingEngine(cfg, params, acfg, reg, scfg,
+                           metrics=metrics, trace=trace)
     rng = np.random.default_rng(0)
     for r in range(args.requests):
         plen = int(rng.integers(4, 33))          # heterogeneous prompts
@@ -119,6 +112,16 @@ def run_multi_tenant(args, acfg):
           f"({rep['decode_tok_per_s']:.1f} decode-only), "
           f"occupancy {rep['batch_occupancy']:.2f}, "
           f"adapter hit rate {rep['adapter_hit_rate']:.2f}{extra}")
+    if rep["tier_host_hits"] or rep["tier_cold_misses"] \
+            or rep["prefetches"]:
+        hr = rep["host_hit_rate"]
+        rate = f"{hr:.2f}" if hr is not None else "n/a"
+        print(f"tiering: {rep['tier_host_hits']} host-hits, "
+              f"{rep['tier_cold_misses']} cold misses "
+              f"(host hit rate {rate}), {rep['prefetches']} prefetches, "
+              f"{rep['tier_promotions']} promotions, "
+              f"{rep['tier_demotions']} demotions, "
+              f"occupancy {rep['tier_occupancy']}")
     if rep["shed_requests"] or rep["degraded_served"] \
             or rep["deadline_retired"]:
         print(f"degradation: {rep['shed_requests']} shed, "
@@ -137,7 +140,7 @@ def run_live_refresh(args, acfg):
     """Background federation publishing into a foreground engine — the
     repro.serving.refresh bridge, end to end on the host backend."""
     from repro.configs import FedConfig, get_config, reduced
-    from repro.serving import train_and_serve
+    from repro.serving import ServingConfig, train_and_serve
 
     cfg = reduced(get_config(args.arch), n_layers=2, d_model=64)
     fed = FedConfig(n_clients=args.clients, local_steps=2)
@@ -149,13 +152,11 @@ def run_live_refresh(args, acfg):
         faults = FaultInjector(default_plan(args.chaos_seed),
                                trace=trace, metrics=metrics)
         robust = RobustConfig()
-    engine_kw = {"max_queue": args.max_queue,
-                 "request_deadline_s": args.request_deadline,
-                 "degrade_after_s": args.degrade_after}
+    scfg = ServingConfig.from_args(args, max_batch=4, max_seq=32)
     report, history = train_and_serve(
         cfg, acfg, fed, rounds=args.train_rounds, n_slots=args.slots,
         requests=args.requests, log=print, metrics=metrics, trace=trace,
-        engine_kw=engine_kw, faults=faults, robust=robust)
+        config=scfg, faults=faults, robust=robust)
     if faults is not None:
         print(f"chaos (seed {args.chaos_seed}): "
               f"{faults.count('dropout')} dropouts, "
@@ -221,6 +222,18 @@ def main():
     ap.add_argument("--trace-out", default=None,
                     help="write the structured event timeline (JSONL, "
                          "one event per line) here")
+    ap.add_argument("--host-ring-slots", type=int, default=None,
+                    help="bound the pinned-host-RAM adapter ring (the "
+                         "tier under the HBM slot tables); overflow "
+                         "demotes to the cold store (default: unbounded "
+                         "host tier, no cold traffic)")
+    ap.add_argument("--cold-dir", default=None,
+                    help="cold adapter store directory (atomic npz per "
+                         "client); default: in-memory cold tier")
+    ap.add_argument("--prefetch-lookahead", type=int, default=0,
+                    help="queued admits whose adapters are promoted "
+                         "host-ward in the background each tick "
+                         "(0 = no prefetch)")
     ap.add_argument("--max-queue", type=int, default=None,
                     help="bound the admission queue: a submit past it "
                          "is shed (request_shed) instead of growing "

@@ -47,6 +47,9 @@ EVENT_SCHEMA = {
     "deadline_exceeded": ("rid", "client"),
     "degraded_serve": ("rid", "client", "reason"),
     "rollback": ("reason",),
+    # adapter tiering vocabulary (PR 8 — see docs/serving.md)
+    "adapter_prefetch": ("client",),
+    "tier_miss": ("client", "tier"),
 }
 
 

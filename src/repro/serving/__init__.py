@@ -31,6 +31,7 @@ the jnp paths are the grouped branch of
 kept as ``kv_layout="dense"`` fallback. ``docs/serving.md`` is the
 architecture guide for the whole subsystem.
 """
+from repro.serving.config import ServingConfig
 from repro.serving.engine import ServingEngine
 from repro.serving.refresh import (AdapterFeed, snapshot_clients,
                                    train_and_serve)
@@ -38,8 +39,10 @@ from repro.serving.registry import (AdapterRegistry, gather_adapters,
                                     gather_adapters_versioned)
 from repro.serving.scheduler import (PagePool, Request, Scheduler, Sequence,
                                      bucket_len, prefill_batches)
+from repro.serving.store import AdapterStore, Prefetcher
 
-__all__ = ["AdapterFeed", "AdapterRegistry", "gather_adapters",
-           "gather_adapters_versioned", "PagePool", "Request", "Scheduler",
-           "Sequence", "ServingEngine", "bucket_len", "prefill_batches",
-           "snapshot_clients", "train_and_serve"]
+__all__ = ["AdapterFeed", "AdapterRegistry", "AdapterStore", "Prefetcher",
+           "ServingConfig", "gather_adapters", "gather_adapters_versioned",
+           "PagePool", "Request", "Scheduler", "Sequence", "ServingEngine",
+           "bucket_len", "prefill_batches", "snapshot_clients",
+           "train_and_serve"]

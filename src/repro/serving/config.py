@@ -1,0 +1,195 @@
+"""ServingConfig: the one frozen object that configures a ServingEngine.
+
+Before this module the engine took 17 loose keyword arguments and every
+call site (launcher, benchmarks, examples, tests) re-threaded them by
+hand. ``ServingConfig`` consolidates them with all cross-field
+validation in ``__post_init__`` — an invalid combination fails at
+construction, before any device buffer is allocated — and
+``from_args`` maps an argparse namespace to the dataclass in one place.
+
+Engine construction is ``ServingEngine(cfg, params, acfg, registry,
+config=ServingConfig(...))``. Passing the old loose kwargs still works
+for one release: the engine folds them into a config and emits a
+``DeprecationWarning`` (see ``ServingEngine.__init__``).
+
+The three tiering knobs (``host_ring_slots``, ``cold_dir``,
+``prefetch_lookahead``) configure the hierarchical adapter store —
+HBM slot tables → pinned-host-RAM ring → cold npz store — described in
+``repro.serving.store`` and docs/serving.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax.numpy as jnp
+
+_KV_LAYOUTS = ("auto", "paged", "dense")
+_ATTN_BACKENDS = ("xla", "pallas")
+_LORA_BACKENDS = ("jnp", "bgmv", "sgmv")
+_DECODE_BACKENDS = ("per-tick", "fused")
+
+
+def _choice(name, value, choices):
+    if value not in choices:
+        raise ValueError(f"{name}={value!r}: must be one of {choices}")
+
+
+def _nonnegative_or_none(name, value):
+    if value is not None and value < 0:
+        raise ValueError(f"{name}={value!r}: must be >= 0 (or None); "
+                         "0 means immediately")
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingConfig:
+    """Every engine knob in one validated, hashable, frozen value.
+
+    Grouped the way the engine consumes them:
+
+    batch/cache geometry
+      ``max_batch``   decode batch rows
+      ``max_seq``     prompt + generation budget per row
+      ``cache_dtype`` KV cache dtype
+
+    KV layout
+      ``kv_layout``   "auto" | "paged" | "dense" ("auto" resolves
+                      against the model config at engine construction)
+      ``page_size``   tokens per KV page (power of two)
+      ``n_pages``     pool size; None = worst case + write-off page
+
+    compute backends
+      ``attn_backend``   "xla" | "pallas"
+      ``lora_backend``   "jnp" | "bgmv" | "sgmv"
+      ``decode_backend`` "per-tick" | "fused"
+      ``decode_ticks``   max ticks per fused scan
+      ``eos_id``         early-stop token id (None = generate to budget)
+
+    robustness (docs/robustness.md)
+      ``max_queue``          bound on the admission queue (None = ∞)
+      ``request_deadline_s`` submit→retire budget (None = none)
+      ``degrade_after_s``    base-model fallback patience (None = off)
+
+    adapter tiering (repro.serving.store; docs/serving.md)
+      ``host_ring_slots``    pinned-host-RAM ring capacity in adapters;
+                             None = unbounded host tier (no cold
+                             demotion — the pre-tiering behavior),
+                             0 = everything lives in the cold tier
+      ``cold_dir``           cold-store directory (npz per client);
+                             None = in-memory cold tier
+      ``prefetch_lookahead`` queued admits whose adapters the engine
+                             prefetches host-ward each tick (0 = off)
+    """
+
+    max_batch: int = 8
+    max_seq: int = 64
+    cache_dtype: Any = jnp.float32
+    kv_layout: str = "auto"
+    page_size: int = 16
+    n_pages: int | None = None
+    attn_backend: str = "xla"
+    lora_backend: str = "jnp"
+    decode_backend: str = "per-tick"
+    decode_ticks: int = 8
+    eos_id: int | None = None
+    max_queue: int | None = None
+    request_deadline_s: float | None = None
+    degrade_after_s: float | None = None
+    host_ring_slots: int | None = None
+    cold_dir: str | None = None
+    prefetch_lookahead: int = 0
+
+    def __post_init__(self):
+        _choice("kv_layout", self.kv_layout, _KV_LAYOUTS)
+        _choice("attn_backend", self.attn_backend, _ATTN_BACKENDS)
+        _choice("lora_backend", self.lora_backend, _LORA_BACKENDS)
+        _choice("decode_backend", self.decode_backend, _DECODE_BACKENDS)
+        if self.max_batch < 1:
+            raise ValueError(f"max_batch={self.max_batch}: need >= 1")
+        if self.max_seq < 1:
+            raise ValueError(f"max_seq={self.max_seq}: need >= 1")
+        if self.decode_ticks < 1:
+            raise ValueError(f"decode_ticks={self.decode_ticks}: need >= 1")
+        if self.page_size < 1 or self.page_size & (self.page_size - 1):
+            raise ValueError(f"page_size={self.page_size}: must be a "
+                             "power of two")
+        if self.n_pages is not None:
+            if self.kv_layout == "dense":
+                raise ValueError("n_pages is a paged-layout knob; "
+                                 "kv_layout='dense' has no page pool")
+            if self.n_pages < 2:
+                raise ValueError(f"n_pages={self.n_pages}: the pool needs "
+                                 "at least one page beyond the write-off")
+        if self.kv_layout == "dense" and self.attn_backend == "pallas":
+            raise ValueError("attn_backend='pallas' is the paged decode "
+                             "kernel; the dense layout always runs xla")
+        if self.max_queue is not None and self.max_queue < 0:
+            raise ValueError(f"max_queue={self.max_queue}: need >= 0 "
+                             "(or None for unbounded)")
+        _nonnegative_or_none("request_deadline_s", self.request_deadline_s)
+        _nonnegative_or_none("degrade_after_s", self.degrade_after_s)
+        if self.host_ring_slots is not None and self.host_ring_slots < 0:
+            raise ValueError(f"host_ring_slots={self.host_ring_slots}: "
+                             "need >= 0 (or None for unbounded)")
+        if self.prefetch_lookahead < 0:
+            raise ValueError(f"prefetch_lookahead="
+                             f"{self.prefetch_lookahead}: need >= 0")
+        if (self.prefetch_lookahead > 0 and self.host_ring_slots is None
+                and self.cold_dir is None):
+            raise ValueError("prefetch_lookahead without a tiered store "
+                             "(host_ring_slots/cold_dir both unset) can "
+                             "never promote anything — set a tier bound "
+                             "or drop the lookahead")
+
+    @property
+    def tiered(self):
+        """True when the config asks for a bounded/tiered adapter store."""
+        return self.host_ring_slots is not None or self.cold_dir is not None
+
+    def replace(self, **changes):
+        """A copy with fields replaced (revalidates via __post_init__)."""
+        return dataclasses.replace(self, **changes)
+
+    @classmethod
+    def from_args(cls, ns, **overrides):
+        """Build from an argparse namespace (the launcher's flags).
+
+        Maps each serving flag to its field; flags absent from the
+        namespace keep their defaults, and ``overrides`` win over both
+        (``from_args(ns, max_batch=4)``). This is the ONE place flag
+        names meet field names.
+        """
+        mapping = {
+            "max_batch": "max_batch",
+            "max_seq": "max_seq",
+            "kv_layout": "kv_layout",
+            "page_size": "page_size",
+            "n_pages": "n_pages",
+            "attn_backend": "attn_backend",
+            "lora_backend": "lora_backend",
+            "decode_backend": "decode_backend",
+            "decode_ticks": "decode_ticks",
+            "eos_id": "eos_id",
+            "max_queue": "max_queue",
+            "request_deadline": "request_deadline_s",
+            "degrade_after": "degrade_after_s",
+            "host_ring_slots": "host_ring_slots",
+            "cold_dir": "cold_dir",
+            "prefetch_lookahead": "prefetch_lookahead",
+        }
+        kw = {}
+        sentinel = object()
+        for flag, field in mapping.items():
+            v = getattr(ns, flag, sentinel)
+            if v is not sentinel:
+                kw[field] = v
+        kw.update(overrides)
+        return cls(**kw)
+
+    def engine_kwargs(self):
+        """The config as a plain dict (field → value) — handy for
+        records/reports; NOT for re-threading into loose kwargs."""
+        return dataclasses.asdict(self)
+
+
+FIELD_NAMES = frozenset(f.name for f in dataclasses.fields(ServingConfig))

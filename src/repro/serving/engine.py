@@ -63,6 +63,7 @@ the support matrix.
 from __future__ import annotations
 
 import time
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -75,6 +76,7 @@ from repro.models.transformer import (decode_scan, decode_scan_paged,
                                       paged_unsupported_reason, prefill,
                                       prefill_paged, segments)
 from repro.obs import MetricsRegistry, annotate, named_scope
+from repro.serving.config import FIELD_NAMES, ServingConfig
 from repro.serving.registry import (gather_adapters,
                                     gather_adapters_versioned)
 from repro.serving.scheduler import (PagePool, Scheduler, bucket_len,
@@ -91,13 +93,44 @@ def _scatter_row(big, small, row):
 
 
 class ServingEngine:
-    def __init__(self, cfg, params, acfg, registry, *, max_batch=8,
-                 max_seq=64, cache_dtype=jnp.float32, kv_layout="auto",
-                 page_size=16, n_pages=None, attn_backend="xla",
-                 lora_backend="jnp", decode_backend="per-tick",
-                 decode_ticks=8, eos_id=None, feed=None, metrics=None,
-                 trace=None, max_queue=None, request_deadline_s=None,
-                 degrade_after_s=None):
+    def __init__(self, cfg, params, acfg, registry, config=None, *,
+                 feed=None, metrics=None, trace=None, **legacy):
+        """``config`` is a ``ServingConfig`` — THE way to configure an
+        engine (cross-field validation already ran in its
+        ``__post_init__``). The former 17 loose kwargs (``max_batch``,
+        ``kv_layout``, ...) still work for one release: they fold into
+        a config (on top of ``config`` when both are given) with a
+        ``DeprecationWarning``. ``feed``/``metrics``/``trace`` stay
+        real kwargs — they are live objects, not configuration."""
+        if legacy:
+            unknown = sorted(set(legacy) - FIELD_NAMES)
+            if unknown:
+                raise TypeError(
+                    f"ServingEngine got unexpected keyword arguments "
+                    f"{unknown} (known config fields: "
+                    f"{sorted(FIELD_NAMES)})")
+            warnings.warn(
+                "loose ServingEngine kwargs ("
+                + ", ".join(sorted(legacy))
+                + ") are deprecated; pass config=ServingConfig(...) — "
+                "folding them into a config for now (removed next "
+                "release)", DeprecationWarning, stacklevel=2)
+            config = (config if config is not None
+                      else ServingConfig()).replace(**legacy)
+        elif config is None:
+            config = ServingConfig()
+        self.config = config
+        max_batch, max_seq = config.max_batch, config.max_seq
+        cache_dtype = config.cache_dtype
+        kv_layout, page_size = config.kv_layout, config.page_size
+        n_pages = config.n_pages
+        attn_backend = config.attn_backend
+        lora_backend = config.lora_backend
+        decode_backend = config.decode_backend
+        decode_ticks, eos_id = config.decode_ticks, config.eos_id
+        max_queue = config.max_queue
+        request_deadline_s = config.request_deadline_s
+        degrade_after_s = config.degrade_after_s
         if cfg.family == "hybrid":
             raise NotImplementedError(
                 "hybrid cache layout (inner axis before batch) not wired")
@@ -112,17 +145,19 @@ class ServingEngine:
             kv_layout = "dense" if paged_reason else "paged"
         elif kv_layout == "paged" and paged_reason:
             raise NotImplementedError(paged_reason)
-        assert kv_layout in ("paged", "dense"), kv_layout
-        assert attn_backend in ("xla", "pallas"), attn_backend
-        assert lora_backend in ("jnp", "bgmv", "sgmv"), lora_backend
-        assert decode_backend in ("per-tick", "fused"), decode_backend
-        assert decode_ticks >= 1, decode_ticks
         self.versioned = getattr(registry, "versioned", False)
         if feed is not None and not self.versioned:
             raise ValueError("an adapter feed needs a double-buffered "
                              "registry (AdapterRegistry versioned=True)")
         self.cfg, self.params, self.acfg = cfg, params, acfg
         self.registry = registry
+        # adapter tiering (repro.serving.store): apply the config's tier
+        # bounds to the registry (entries migrate in place) and remember
+        # how many queued admits to prefetch host-ward each tick
+        if config.tiered and hasattr(registry, "configure_tiers"):
+            registry.configure_tiers(host_ring_slots=config.host_ring_slots,
+                                     cold_dir=config.cold_dir)
+        self.prefetch_lookahead = config.prefetch_lookahead
         self.feed = feed
         self.max_batch, self.max_seq = max_batch, max_seq
         self.kv_layout = kv_layout
@@ -352,6 +387,8 @@ class ServingEngine:
         self._t0 = None
         self.registry.hits = self.registry.misses = 0
         self.registry.evictions = 0
+        if hasattr(self.registry, "reset_tier_stats"):
+            self.registry.reset_tier_stats()
 
     # -- request plane ------------------------------------------------------
     def submit(self, client_id, prompt, max_new_tokens=16, deadline_s=None):
@@ -401,6 +438,11 @@ class ServingEngine:
         self._refresh()
         admitted = self.scheduler.admit(self.registry)
         self._sync_shed_counter()      # admit's overdue sweep may shed
+        # the queue heads left behind are the NEXT admits: issue their
+        # host-ward prefetches now, so the promotion I/O overlaps the
+        # prefill + decode device work below instead of stalling a
+        # future admission on a cold npz load
+        self._issue_prefetches()
         if self.kv_layout == "paged":
             self._prefill_paged_groups(admitted)
         else:
@@ -578,6 +620,26 @@ class ServingEngine:
         return all(
             self.pool.pages_needed(s.pos + min(T, s.budget)) <= len(s.pages)
             for s in self.scheduler.active.values())
+
+    def _issue_prefetches(self):
+        """Admission-lookahead prefetch: walk the first
+        ``prefetch_lookahead`` distinct clients of the bounded queue and
+        queue background host-ward promotions for the cold ones (the
+        registry dedups and skips resident/host tenants). Runs at a
+        host-sync boundary — the only cost on this thread is a queue
+        push per cold client."""
+        k = self.prefetch_lookahead
+        if not k or not self.scheduler.queue:
+            return
+        seen = set()
+        for req in self.scheduler.queue:
+            cid = req.client_id
+            if cid in seen:
+                continue
+            seen.add(cid)
+            self.registry.prefetch(cid)
+            if len(seen) >= k:
+                break
 
     def _refresh(self):
         """Refresh phase of the live train→serve bridge: drain the
@@ -782,6 +844,7 @@ class ServingEngine:
         total = self.decoded_tokens + self.prefill_tokens
         generated = self.decoded_tokens + self.prefilled_requests
         steps = self.decode_steps
+        rs = self.registry.stats
         return {
             "requests": len(self.finished),
             # prefill_tokens counts every prompt token processed (NOT one
@@ -820,7 +883,17 @@ class ServingEngine:
             "pool_occupancy": (self._pool_occ_sum / steps
                                if steps and self.pool is not None
                                else None),
-            "adapter_hit_rate": self.registry.stats["hit_rate"],
+            "adapter_hit_rate": rs["hit_rate"],
+            # adapter tiering (repro.serving.store): where HBM misses
+            # were served from, what the prefetcher promoted, and the
+            # current per-tier occupancy
+            "tier_host_hits": rs.get("tier_host_hits", 0),
+            "tier_cold_misses": rs.get("tier_cold_misses", 0),
+            "host_hit_rate": rs.get("host_hit_rate"),
+            "tier_promotions": rs.get("promotions", 0),
+            "tier_demotions": rs.get("demotions", 0),
+            "prefetches": rs.get("prefetches", 0),
+            "tier_occupancy": rs.get("tier_occupancy"),
             # robustness accounting: every submitted request is exactly
             # one of finished (incl. deadline-retired), shed, or still
             # in flight — serving_chaos.py asserts the identity

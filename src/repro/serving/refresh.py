@@ -100,8 +100,8 @@ class AdapterFeed:
 
 def train_and_serve(cfg, acfg, fed, *, rounds=6, n_slots=4, requests=16,
                     max_new_tokens=8, batch_size=8, publish_every=1,
-                    submit_every=2, seed=0, engine_kw=None, log=None,
-                    max_steps=200_000, metrics=None, trace=None,
+                    submit_every=2, seed=0, config=None, engine_kw=None,
+                    log=None, max_steps=200_000, metrics=None, trace=None,
                     faults=None, robust=None):
     """Run federated training in a background thread while the foreground
     serving engine absorbs each round's adapters live.
@@ -129,6 +129,7 @@ def train_and_serve(cfg, acfg, fed, *, rounds=6, n_slots=4, requests=16,
     """
     from repro.core import federation
     from repro.data.synthetic import make_lm_task
+    from repro.serving.config import ServingConfig
     from repro.serving.engine import ServingEngine
     from repro.serving.registry import AdapterRegistry
 
@@ -141,10 +142,14 @@ def train_and_serve(cfg, acfg, fed, *, rounds=6, n_slots=4, requests=16,
                               task="lm", lr=5e-2)
     registry = AdapterRegistry.from_system(system, n_slots, versioned=True)
     feed = AdapterFeed()
-    kw = {"max_batch": 4, "max_seq": 32}
-    kw.update(engine_kw or {})
-    engine = ServingEngine(cfg, system.params, acfg, registry, feed=feed,
-                           metrics=metrics, trace=trace, **kw)
+    # config wins; engine_kw (legacy loose knobs) folds on top of the
+    # bridge's defaults for callers still passing a dict
+    if config is None:
+        config = ServingConfig(max_batch=4, max_seq=32)
+    if engine_kw:
+        config = config.replace(**engine_kw)
+    engine = ServingEngine(cfg, system.params, acfg, registry, config,
+                           feed=feed, metrics=metrics, trace=trace)
 
     history = {}
     trainer_errors = []
@@ -191,7 +196,7 @@ def train_and_serve(cfg, acfg, fed, *, rounds=6, n_slots=4, requests=16,
             requests, max(1, (requests * (registry.version + 1))
                           // (rounds + 1)))
         if submitted < budget and steps % submit_every == 0:
-            plen = int(rng.integers(4, kw["max_seq"] - max_new_tokens))
+            plen = int(rng.integers(4, config.max_seq - max_new_tokens))
             engine.submit(submitted % fed.n_clients,
                           rng.integers(0, cfg.vocab_size, plen),
                           max_new_tokens=max_new_tokens)

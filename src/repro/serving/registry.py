@@ -1,10 +1,16 @@
 """AdapterRegistry: dense slot tables over the hot set of per-client
 adapter matrices.
 
-The tenant population can be arbitrarily large (the cold store is a host
-dict of numpy adapter trees, a few KB per client at rank 8), but a
-decode batch only ever references the *hot* set admitted into
-``n_slots`` dense on-device tables. Each LOCAL adapter *matrix* leaf is
+The tenant population can be arbitrarily large — below the ``n_slots``
+dense on-device tables sits a hierarchical ``AdapterStore``
+(``repro.serving.store``): a pinned-host-RAM ring of preformatted
+slot-shaped numpy arrays, then a cold npz store. ``acquire`` therefore
+distinguishes three outcomes: an HBM hit (slot already resident), a
+host-hit (one device transfer per leaf), and a cold miss (synchronous
+npz load — the only stalling path, counted and traced as ``tier_miss``).
+Eviction demotes down a tier instead of discarding, and ``prefetch``
+promotes upcoming clients host-ward on a background thread. A decode
+batch only ever references the *hot* set admitted into the tables. Each LOCAL adapter *matrix* leaf is
 packed with a slot axis so a whole mixed batch is served by one gather:
 
   B leaf  (n_layers, r, d_out)  →  table (n_layers, n_slots, r, d_out)
@@ -41,13 +47,14 @@ of already-admitted sequences never change mid-generation.
 from __future__ import annotations
 
 import time
-from collections import OrderedDict
+from collections import OrderedDict, deque
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.strategies import LOCAL, leaf_role
+from repro.serving.store import AdapterStore, Prefetcher
 
 
 def _pack_axis(leaf_ndim):
@@ -94,7 +101,8 @@ class AdapterRegistry:
     """LRU admission of per-client local adapters into dense slot tables."""
 
     def __init__(self, template, n_slots, *, mode="fedsa", versioned=False,
-                 flip_patience=None, validate_publish=False):
+                 flip_patience=None, validate_publish=False,
+                 host_ring_slots=None, cold_dir=None):
         """template: ONE client's trainables tree (e.g.
         ``{"adapters": ...}`` without the client axis); its SHARED leaves
         seed the batch-global Ā.
@@ -108,6 +116,10 @@ class AdapterRegistry:
         time — per-client (that client's stage is skipped, the rest of
         the round lands) and for the SHARED leaves (the whole publish is
         refused: a poisoned Ā must never reach the flip).
+        host_ring_slots / cold_dir: tiering bounds of the underlying
+        ``AdapterStore`` — ring capacity in adapters (None = unbounded
+        host tier, the pre-tiering behavior) and the cold npz directory
+        (None = in-memory cold tier). See ``repro.serving.store``.
         """
         self.mode = mode
         self.n_slots = n_slots
@@ -134,6 +146,7 @@ class AdapterRegistry:
                 "matrices)")
         self.has_local_A = False
         self._leaves = []
+        formats = []                    # table dtype per LOCAL leaf
         for (path, leaf), loc in zip(flat, self._local):
             ax = _pack_axis(leaf.ndim)
             if loc:
@@ -149,12 +162,19 @@ class AdapterRegistry:
                          + (self.n_buffers * self.slot_stride,)
                          + leaf.shape[ax:])
                 self._leaves.append(jnp.zeros(shape, leaf.dtype))
+                formats.append(np.dtype(leaf.dtype))
             elif versioned:
                 leaf = jnp.asarray(leaf)
                 self._leaves.append(jnp.stack([leaf, leaf], axis=ax))
             else:
                 self._leaves.append(jnp.asarray(leaf))
-        self._store = {}                    # client_id → [local leaves] (np)
+        # host-side tiers under the HBM tables: preformatted host ring +
+        # cold npz store (dict-compatible — cid → [local leaves])
+        self._store = AdapterStore(host_ring_slots=host_ring_slots,
+                                   cold_dir=cold_dir, formats=formats)
+        self._local_idx = [i for i, loc in enumerate(self._local) if loc]
+        self._slot_writer = None            # lazy fused jitted writer
+        self._prefetcher = None             # lazy background promoter
         self._client_ver = {}               # client_id → committed version
         self._seq = 0                       # monotone cold-store write stamp
         self._store_seq = {}                # client_id → stamp at last write
@@ -169,6 +189,16 @@ class AdapterRegistry:
         self.version = 0                    # round of the active buffer
         self._pending = None                # staged publish awaiting flip
         self.hits = self.misses = self.evictions = 0
+        # admission-path tier accounting: an HBM miss is either served
+        # from the host ring (host-hit) or stalls on a cold npz load
+        self.tier_host_hits = self.tier_cold_misses = 0
+        self.prefetches = 0
+        self._tier_seen = {}                # store counter → obs diff base
+        # exact per-acquire wall samples, (tier, seconds) — bounded so a
+        # long-lived registry stays O(1); the tiering bench reads p99
+        # off these instead of log-bucketed histograms (bucket error is
+        # too coarse for a 2× latency gate)
+        self._admit_samples = deque(maxlen=4096)
         self.flips = self.deferred_flips = self.publishes = 0
         # observability hooks (repro.obs) — the engine wires these to
         # its own TraceLog / MetricsRegistry; both optional
@@ -200,14 +230,20 @@ class AdapterRegistry:
                 for leaf, loc in zip(flat, self._local) if not loc]
 
     @classmethod
-    def from_system(cls, system, n_slots, *, clients=None, versioned=False):
+    def from_system(cls, system, n_slots, *, clients=None, versioned=False,
+                    mode=None, **kw):
         """Build from a trained ``FedSystem``: splits the client axis off
-        ``system.trainables`` and ingests every (or the given) client."""
+        ``system.trainables`` and ingests every (or the given) client.
+        ``mode`` overrides the system's aggregation mode (e.g. pack a
+        FedSA fleet into ``fedit`` A+B tables for a mixed deployment);
+        extra kwargs (``host_ring_slots``, ``cold_dir``, ...) forward to
+        the constructor."""
         tr = system.trainables
         n_clients = system.fed.n_clients
         template = jax.tree_util.tree_map(lambda x: x[0], tr)
-        reg = cls(template, n_slots, mode=system.acfg.mode,
-                  versioned=versioned)
+        reg = cls(template, n_slots,
+                  mode=system.acfg.mode if mode is None else mode,
+                  versioned=versioned, **kw)
         for c in (range(n_clients) if clients is None else clients):
             reg.ingest(c, jax.tree_util.tree_map(lambda x: x[c], tr))
         return reg
@@ -220,7 +256,30 @@ class AdapterRegistry:
         pinned slot (every slot referenced by an in-flight sequence); a
         failed acquire leaves the LRU order and counters untouched, so
         the scheduler can retry the same request next tick.
+
+        Tier accounting: a resident slot is an HBM hit; a miss is served
+        from the host ring (host-hit — one device transfer per leaf) or
+        stalls on a cold npz load (cold miss, traced as ``tier_miss``).
+        Each successful acquire books one (tier, wall-seconds) sample
+        into ``admission_samples``.
         """
+        t0 = time.perf_counter()
+        resident = client_id in self._lru
+        tier = "hbm" if resident else self._store.tier_of(client_id)
+        slot = self._acquire_slot(client_id, pin=pin)
+        if not resident:
+            if tier == "cold":
+                self.tier_cold_misses += 1
+                if self.trace is not None:
+                    self.trace.emit("tier_miss", client=client_id,
+                                    tier="cold")
+            else:
+                self.tier_host_hits += 1
+        self._admit_samples.append((tier, time.perf_counter() - t0))
+        self._sync_tier_metrics()
+        return slot
+
+    def _acquire_slot(self, client_id, *, pin):
         if client_id in self._lru:
             slot = self._lru[client_id]
             if (self._pins[slot] == 0
@@ -232,6 +291,11 @@ class AdapterRegistry:
                 self._write_slot(slot, client_id, self.active_buf)
             self.hits += 1
             self._lru.move_to_end(client_id)
+            # recency flows DOWN the hierarchy: an HBM hit also bumps
+            # the client's host-ring entry, so a hot resident tenant
+            # never ages out of the ring and its eventual eviction
+            # lands host-warm instead of cold-stalling on re-admission
+            self._store.touch(client_id)
         else:
             if client_id not in self._store:
                 raise KeyError(f"client {client_id} was never ingested")
@@ -247,6 +311,11 @@ class AdapterRegistry:
                         f"{client_id} until one retires")
                 slot = self._lru.pop(victim)
                 self.evictions += 1
+                # demote, don't discard: the victim's bytes stay warm in
+                # the host ring (MRU touch) — or stay cold if ring churn
+                # already demoted them; either way re-admission never
+                # re-ingests from scratch
+                self._store.touch(victim)
                 if self.trace is not None:
                     self.trace.emit("eviction", client=victim, slot=slot)
                 if self.metrics is not None:
@@ -276,15 +345,124 @@ class AdapterRegistry:
         return (client_id, self._store_seq.get(client_id, 0))
 
     def _write_slot(self, slot, client_id, buf=0):
-        stored = iter(self._store[client_id])
-        for i, loc in enumerate(self._local):
-            if loc:
-                table = self._leaves[i]
-                idx = ((slice(None),) * _pack_axis(table.ndim - 1)
-                       + (buf * self.slot_stride + slot,))
-                self._leaves[i] = table.at[idx].set(
-                    jnp.asarray(next(stored), table.dtype))
+        """Commit a client's stored leaves into table position
+        ``buf*stride + slot`` as ONE jitted, donated device call.
+
+        The host ring keeps leaves preformatted (contiguous, table
+        dtype), so admission pays a single dispatch/transfer instead of
+        one eager ``.at[].set`` round-trip per LOCAL leaf — the host-hit
+        fast path the tiering bench gates on. Donation recycles the old
+        table buffers; safe because the engine re-reads ``.tables``
+        every call and never caches the arrays across a host sync."""
+        if self._slot_writer is None:
+            packs = [_pack_axis(self._leaves[i].ndim - 1)
+                     for i in self._local_idx]
+
+            def write(tables, leaves, pos):
+                out = []
+                for table, leaf, ax in zip(tables, leaves, packs):
+                    idx = (slice(None),) * ax + (pos,)
+                    out.append(table.at[idx].set(
+                        jnp.asarray(leaf, table.dtype)))
+                return out
+
+            self._slot_writer = jax.jit(write, donate_argnums=0)
+        new = self._slot_writer([self._leaves[i] for i in self._local_idx],
+                                list(self._store[client_id]),
+                                np.int32(buf * self.slot_stride + slot))
+        for i, table in zip(self._local_idx, new):
+            self._leaves[i] = table
         self._slot_tag[buf][slot] = self._tag_of(client_id)
+
+    # -- tiering / prefetch (repro.serving.store) ---------------------------
+    def prefetch(self, client_id):
+        """Queue a background host-ward promotion for a cold client.
+        No-op (False) for HBM-resident, already-host, unknown, or
+        already-queued clients. The engine calls this with the
+        scheduler's admission lookahead at host-sync boundaries, so the
+        promotion I/O overlaps the device scan."""
+        if client_id in self._lru:
+            return False
+        if self._store.tier_of(client_id) != "cold":
+            return False
+        if self._prefetcher is None:
+            self._prefetcher = Prefetcher(self._store)
+        if not self._prefetcher.request(client_id):
+            return False
+        self.prefetches += 1
+        if self.trace is not None:
+            self.trace.emit("adapter_prefetch", client=client_id)
+        if self.metrics is not None:
+            self.metrics.counter("repro_adapter_prefetch_total",
+                                 "background host-ward promotions "
+                                 "issued").inc()
+        return True
+
+    def drain_prefetch(self, timeout=5.0):
+        """Block until every queued prefetch finished (tests/benches —
+        the serving path never waits on the prefetcher)."""
+        if self._prefetcher is None:
+            return True
+        return self._prefetcher.drain(timeout)
+
+    def configure_tiers(self, *, host_ring_slots=None, cold_dir=None):
+        """Re-tier the store in place (entries migrate, LRU order and
+        bytes preserved) — how an engine applies ``ServingConfig``
+        tiering knobs to a registry built with the unbounded default."""
+        store = self._store
+        if (store.host_ring_slots == host_ring_slots
+                and store.cold_dir == cold_dir):
+            return
+        if self._prefetcher is not None:
+            self._prefetcher.stop()
+            self._prefetcher = None
+        new = AdapterStore(host_ring_slots=host_ring_slots,
+                           cold_dir=cold_dir, formats=store.formats)
+        new.migrate_from(store)
+        self._store = new
+
+    def _sync_tier_metrics(self):
+        """Mirror the store's tier counters into obs counters by diff —
+        promotions/demotions happen on the prefetcher thread, so the
+        registry books them from the main thread rather than sharing
+        Counter.inc across threads."""
+        if self.metrics is None:
+            return
+        counts = self._store.counters
+        counts["host_hits"] = self.tier_host_hits
+        counts["cold_misses"] = self.tier_cold_misses
+        names = {
+            "host_hits": ("repro_adapter_tier_host_hits_total",
+                          "HBM misses served from the host ring"),
+            "cold_misses": ("repro_adapter_tier_cold_misses_total",
+                            "HBM misses that stalled on the cold store"),
+            "promotions": ("repro_adapter_tier_promotions_total",
+                           "cold → host-ring promotions"),
+            "demotions": ("repro_adapter_tier_demotions_total",
+                          "host-ring → cold demotions"),
+        }
+        for key, (name, help_) in names.items():
+            d = counts[key] - self._tier_seen.get(key, 0)
+            if d > 0:
+                self.metrics.counter(name, help_).inc(d)
+            self._tier_seen[key] = counts[key]
+
+    @property
+    def admission_samples(self):
+        """Recent (tier, wall-seconds) acquire samples, oldest first —
+        exact tail-latency data for the tiering bench (tier is "hbm",
+        "host", or "cold")."""
+        return list(self._admit_samples)
+
+    def reset_tier_stats(self):
+        """Zero admission/tier counters and latency samples (e.g. after
+        a warm-up pass); obs counters stay lifetime-monotonic."""
+        self.hits = self.misses = self.evictions = 0
+        self.tier_host_hits = self.tier_cold_misses = 0
+        self.prefetches = 0
+        self._admit_samples.clear()
+        self._store.reset_counters()
+        self._tier_seen = {}
 
     @property
     def degraded_slot(self):
@@ -461,10 +639,32 @@ class AdapterRegistry:
     @property
     def stats(self):
         total = self.hits + self.misses
+        pinned = sum(1 for p in self._pins if p > 0)
+        tier_total = self.tier_host_hits + self.tier_cold_misses
         out = {"hits": self.hits, "misses": self.misses,
                "evictions": self.evictions,
                "hit_rate": self.hits / total if total else 0.0,
                "resident": len(self._lru), "n_slots": self.n_slots,
+               # slot-state breakdown: pinned (in-flight readers),
+               # free (never written), the reserved degraded zero slot
+               "pinned_slots": pinned,
+               "unpinned_resident": len(self._lru) - sum(
+                   1 for c, s in self._lru.items() if self._pins[s] > 0),
+               "free_slots": len(self._free),
+               "degraded_slots": 1,
+               # tiering (repro.serving.store): occupancy per tier and
+               # the admission-path split of HBM misses
+               "tier_occupancy": {"hbm": len(self._lru),
+                                  "host": self._store.host_count,
+                                  "cold": self._store.cold_count},
+               "host_ring_slots": self._store.host_ring_slots,
+               "tier_host_hits": self.tier_host_hits,
+               "tier_cold_misses": self.tier_cold_misses,
+               "host_hit_rate": (self.tier_host_hits / tier_total
+                                 if tier_total else None),
+               "promotions": self._store.promotions,
+               "demotions": self._store.demotions,
+               "prefetches": self.prefetches,
                "mode": self.mode, "local_A": self.has_local_A,
                "clients": len(self._store), "version": self.version,
                "flips": self.flips, "deferred_flips": self.deferred_flips,

@@ -1,0 +1,312 @@
+"""Hierarchical adapter store: pinned-host-RAM ring → cold npz store.
+
+The ``AdapterRegistry``'s HBM slot tables only ever hold the hot set;
+this module is everything BELOW them. A million-tenant fleet (the
+FedSA-LoRA deployment reality: one personal B_i — and under
+FedIT/FedDPA a personal A_i — per client) tiers as
+
+  HBM slot tables      n_slots dense tables, gathered per decode row
+  host ring            ``host_ring_slots`` clients' LOCAL leaves as
+                       preformatted, slot-shaped, table-dtype numpy
+                       arrays — a miss is ONE device transfer per leaf,
+                       no host-side conversion on the admission path
+  cold store           every other client; ``checkpoint/npz`` atomic
+                       files under ``cold_dir`` (or an in-memory dict
+                       when no directory is given)
+
+Eviction demotes down a tier instead of discarding: an HBM eviction
+leaves the client warm in the host ring; a host-ring overflow demotes
+the LRU client to cold. Demotion is write-once — a host entry whose
+bytes already sit in the cold store (every entry starts there or was
+promoted from there unchanged) drops without touching the disk, so
+steady-state ring churn costs dict moves, not fsyncs.
+
+``Prefetcher`` is the async half: a daemon thread draining a queue of
+client ids, promoting each cold entry into the host ring while the
+engine's fused scan runs on device. The registry issues prefetches from
+the scheduler's admission lookahead (the bounded queue already names
+the next admits); by the time those requests reach ``acquire`` the miss
+is a host-hit instead of a cold stall.
+
+Round-trip fidelity: demote→promote must be bit-exact (the versioned
+double-buffer and paired A/B tables are rewritten from store bytes at
+every flip). npz preserves dtype and bits verbatim, and entries are
+converted to the table dtype ONCE at ``put`` — after that the bytes
+never change shape or dtype on any tier transition.
+"""
+from __future__ import annotations
+
+import os
+import queue
+import threading
+from collections import OrderedDict
+
+import numpy as np
+
+from repro.checkpoint.npz import _atomic_savez
+
+_COLD_PREFIX = "adapter_"
+
+
+class AdapterStore:
+    """Two host-side tiers under the HBM slot tables.
+
+    ``host_ring_slots=None`` keeps every entry in the (unbounded) host
+    tier — exactly the pre-tiering registry behavior, zero cold traffic.
+    ``host_ring_slots=0`` forces everything cold (the
+    evict-and-reingest-from-cold baseline arm in
+    ``benchmarks/serving_tiering.py``).
+
+    Entries are lists of numpy arrays (one per LOCAL leaf, in leaf
+    order), preformatted to the registry's table dtypes via ``formats``.
+    All tier state is guarded by one lock — ``put``/``fetch`` run on the
+    engine thread while the ``Prefetcher`` promotes on its own.
+    """
+
+    def __init__(self, *, host_ring_slots=None, cold_dir=None,
+                 formats=None):
+        self.host_ring_slots = host_ring_slots
+        self.cold_dir = cold_dir
+        self.formats = formats          # per-leaf np dtypes (or None)
+        if cold_dir is not None:
+            os.makedirs(cold_dir, exist_ok=True)
+        self._host = OrderedDict()      # cid → [np leaves], LRU order
+        self._cold_mem = {}             # cid → [np leaves] (no cold_dir)
+        self._cold_ids = set()          # cids with a cold copy
+        self._clean = set()             # host cids whose cold copy matches
+        self._lock = threading.RLock()
+        # tier counters (read via .counters; registry mirrors into obs)
+        self.host_hits = 0              # fetches served from the ring
+        self.cold_misses = 0            # fetches that had to go cold
+        self.promotions = 0             # cold → host ring
+        self.demotions = 0              # host ring → cold
+
+    # -- dict-compatible surface (the registry's old ``_store`` uses) ------
+    def __contains__(self, cid):
+        with self._lock:
+            return cid in self._host or cid in self._cold_ids
+
+    def __len__(self):
+        with self._lock:
+            return len(self._host) + len(self._cold_ids - set(self._host))
+
+    def __setitem__(self, cid, leaves):
+        self.put(cid, leaves)
+
+    def __getitem__(self, cid):
+        return self.fetch(cid)[0]
+
+    # -- tier operations ---------------------------------------------------
+    def _format(self, leaves):
+        if self.formats is None:
+            return [np.asarray(x) for x in leaves]
+        return [np.ascontiguousarray(x, dtype=dt)
+                for x, dt in zip(leaves, self.formats)]
+
+    def put(self, cid, leaves):
+        """Ingest/overwrite a client's leaves into the host tier (the
+        authoritative write path — ingest, publish commit). A stale cold
+        copy is invalidated, and ring overflow demotes the LRU entry."""
+        leaves = self._format(leaves)
+        with self._lock:
+            if self.host_ring_slots == 0:
+                # no ring: straight to cold
+                self._host.pop(cid, None)
+                self._clean.discard(cid)
+                self._cold_write(cid, leaves)
+                return
+            self._host[cid] = leaves
+            self._host.move_to_end(cid)
+            self._clean.discard(cid)    # new bytes: any cold copy is stale
+            self._spill()
+
+    def fetch(self, cid):
+        """(leaves, tier) — tier is "host" or "cold". A cold fetch loads
+        synchronously (the only stalling path) and promotes the entry
+        into the ring. Raises KeyError for never-ingested clients."""
+        with self._lock:
+            got = self._host.get(cid)
+            if got is not None:
+                self._host.move_to_end(cid)
+                self.host_hits += 1
+                return got, "host"
+            if cid not in self._cold_ids:
+                raise KeyError(cid)
+            self.cold_misses += 1
+            leaves = self._promote(cid)
+            return leaves, "cold"
+
+    def touch(self, cid):
+        """Mark a host-ring entry most-recently-used (the registry calls
+        this when an HBM eviction demotes a slot: the bytes drop ONE
+        tier, to the ring — a cold entry stays cold, no promotion I/O on
+        the admission path)."""
+        with self._lock:
+            if cid in self._host:
+                self._host.move_to_end(cid)
+
+    def tier_of(self, cid):
+        """"host" | "cold" | None (never ingested). Pure peek: no LRU
+        movement, no promotion, no counter."""
+        with self._lock:
+            if cid in self._host:
+                return "host"
+            if cid in self._cold_ids:
+                return "cold"
+            return None
+
+    def prefetch(self, cid):
+        """Promote ``cid`` host-ward if it is cold. Returns True when a
+        promotion happened (the Prefetcher's unit of work)."""
+        with self._lock:
+            if cid in self._host or cid not in self._cold_ids:
+                return False
+            self._promote(cid)
+            return True
+
+    def _promote(self, cid):
+        """Cold → host ring (lock held). The loaded bytes ARE the cold
+        bytes (no reformat — they were formatted at put), so the entry
+        is born clean: a later demotion is a free drop."""
+        leaves = self._cold_read(cid)
+        if self.host_ring_slots == 0:
+            return leaves                # no ring to promote into
+        self.promotions += 1
+        self._host[cid] = leaves
+        self._host.move_to_end(cid)
+        self._clean.add(cid)
+        self._spill()
+        return leaves
+
+    def _spill(self):
+        """Demote LRU host entries past the ring bound (lock held)."""
+        if self.host_ring_slots is None:
+            return
+        while len(self._host) > self.host_ring_slots:
+            victim, leaves = self._host.popitem(last=False)
+            self.demotions += 1
+            if victim in self._clean:    # cold copy already current
+                self._clean.discard(victim)
+                continue
+            self._cold_write(victim, leaves)
+
+    # -- cold tier I/O -----------------------------------------------------
+    def _cold_path(self, cid):
+        return os.path.join(self.cold_dir, f"{_COLD_PREFIX}{cid}.npz")
+
+    def _cold_write(self, cid, leaves):
+        if self.cold_dir is None:
+            self._cold_mem[cid] = leaves
+        else:
+            _atomic_savez(self._cold_path(cid),
+                          {f"leaf_{i}": x for i, x in enumerate(leaves)})
+        self._cold_ids.add(cid)
+
+    def _cold_read(self, cid):
+        if self.cold_dir is None:
+            return self._cold_mem[cid]
+        with np.load(self._cold_path(cid)) as data:
+            return [data[f"leaf_{i}"] for i in range(len(data.files))]
+
+    # -- views -------------------------------------------------------------
+    @property
+    def host_count(self):
+        with self._lock:
+            return len(self._host)
+
+    @property
+    def cold_count(self):
+        """Entries whose CURRENT bytes live only in the cold tier."""
+        with self._lock:
+            return len(self._cold_ids - set(self._host))
+
+    @property
+    def counters(self):
+        with self._lock:
+            return {"host_hits": self.host_hits,
+                    "cold_misses": self.cold_misses,
+                    "promotions": self.promotions,
+                    "demotions": self.demotions}
+
+    def reset_counters(self):
+        with self._lock:
+            self.host_hits = self.cold_misses = 0
+            self.promotions = self.demotions = 0
+
+    def migrate_from(self, other):
+        """Adopt every entry of ``other`` (oldest first, so LRU order
+        carries over) — used when an engine retrofits tiering onto a
+        registry built with the default unbounded store."""
+        with other._lock:
+            entries = list(other._host.items())
+            cold = [(cid, other._cold_read(cid))
+                    for cid in sorted(other._cold_ids - set(other._host))]
+        for cid, leaves in cold + entries:
+            self.put(cid, leaves)
+
+
+class Prefetcher:
+    """Daemon thread promoting cold adapters host-ward.
+
+    ``request(cid)`` enqueues (deduplicating against work already
+    queued); the thread drains via ``AdapterStore.prefetch``. The engine
+    issues requests at host-sync boundaries, so promotion I/O overlaps
+    the device scan instead of the admission path. ``drain()`` blocks
+    until the queue is empty AND the in-flight item finished — the
+    deterministic handle tests and benchmarks use.
+    """
+
+    def __init__(self, store):
+        self.store = store
+        self.issued = 0                  # requests accepted (deduped)
+        self.completed = 0               # promotions actually performed
+        self._q = queue.Queue()
+        self._pending = set()
+        self._lock = threading.Lock()
+        self._idle = threading.Event()
+        self._idle.set()
+        self._stop = False
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name="adapter-prefetch")
+        self._thread.start()
+
+    def request(self, cid):
+        """Queue a host-ward promotion; returns True when enqueued
+        (False: already queued/in flight, or already host-resident)."""
+        if self.store.tier_of(cid) != "cold":
+            return False
+        with self._lock:
+            if cid in self._pending:
+                return False
+            self._pending.add(cid)
+            self.issued += 1
+            self._idle.clear()
+        self._q.put(cid)
+        return True
+
+    def _run(self):
+        while True:
+            cid = self._q.get()
+            if cid is None:
+                return
+            try:
+                if self.store.prefetch(cid):
+                    self.completed += 1
+            except Exception:
+                pass                     # a failed prefetch is only a
+                                         # missed overlap; acquire will
+                                         # take the cold path and raise
+                                         # anything real
+            finally:
+                with self._lock:
+                    self._pending.discard(cid)
+                    if not self._pending and self._q.empty():
+                        self._idle.set()
+
+    def drain(self, timeout=5.0):
+        """Wait for all queued prefetches to finish (tests/benches)."""
+        return self._idle.wait(timeout)
+
+    def stop(self):
+        self._stop = True
+        self._q.put(None)

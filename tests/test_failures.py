@@ -20,7 +20,7 @@ from repro.failures import (FaultInjector, FaultPlan, PagePressure,
                             default_plan)
 from repro.models.transformer import decode_step, init_model, prefill
 from repro.obs import TraceLog
-from repro.serving import AdapterRegistry, ServingEngine
+from repro.serving import AdapterRegistry, ServingConfig, ServingEngine
 from repro.serving.demo import synthetic_clients
 
 KEY = jax.random.PRNGKey(0)
@@ -225,13 +225,14 @@ def serve_setup():
     return cfg, acfg, params, template, trees
 
 
-def make_engine(serve_setup, *, n_slots=2, n_clients=4, **kw):
+def make_engine(serve_setup, *, n_slots=2, n_clients=4, trace=None, **kw):
     cfg, acfg, params, template, trees = serve_setup
     reg = AdapterRegistry(template, n_slots=n_slots)
     for i, t in enumerate(trees[:n_clients]):
         reg.ingest(i, t)
-    return ServingEngine(cfg, params, acfg, reg, max_batch=2,
-                         max_seq=32, **kw)
+    return ServingEngine(cfg, params, acfg, reg,
+                         ServingConfig(max_batch=2, max_seq=32, **kw),
+                         trace=trace)
 
 
 def test_queue_bound_sheds_excess(serve_setup):

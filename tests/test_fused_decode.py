@@ -10,7 +10,7 @@ import jax.numpy as jnp
 from repro.configs import AdapterConfig, get_config, reduced
 from repro.core.adapters import init_adapters
 from repro.models.transformer import init_model
-from repro.serving import AdapterRegistry, ServingEngine
+from repro.serving import AdapterRegistry, ServingConfig, ServingEngine
 from repro.serving.demo import mixed_fleet, synthetic_clients
 
 KEY = jax.random.PRNGKey(0)
@@ -32,7 +32,7 @@ def make_engine(setup, **kw):
     reg = AdapterRegistry({"adapters": base}, n_slots=kw.pop("n_slots", 2))
     for i, t in enumerate(trees):
         reg.ingest(i, {"adapters": t})
-    return ServingEngine(cfg, params, acfg, reg, **kw)
+    return ServingEngine(cfg, params, acfg, reg, ServingConfig(**kw))
 
 
 def serve(eng, prompts, *, n_clients=3, new_tokens=7):
@@ -118,8 +118,9 @@ def test_fused_sgmv_mixed_fleet_parity(setup):
         reg = AdapterRegistry(template, n_slots=3, mode="fedit")
         for i, t in enumerate(trees):
             reg.ingest(i, t)
-        eng = ServingEngine(cfg, params, acfg, reg, max_batch=3,
-                            max_seq=16, lora_backend=lora_backend, **kw)
+        eng = ServingEngine(cfg, params, acfg, reg,
+                            ServingConfig(max_batch=3, max_seq=16,
+                                          lora_backend=lora_backend, **kw))
         rng = np.random.default_rng(7)
         prompts = [rng.integers(0, cfg.vocab_size, 6) for _ in range(5)]
         for i, p in enumerate(prompts):

@@ -15,7 +15,7 @@ from repro.models.transformer import init_model
 from repro.obs import (EVENT_SCHEMA, Histogram, MetricsRegistry, Timer,
                        TraceLog, sanitize, to_json, to_prometheus,
                        validate_exposition, validate_trace, write_metrics)
-from repro.serving import AdapterRegistry, ServingEngine
+from repro.serving import AdapterRegistry, ServingConfig, ServingEngine
 from repro.serving.demo import synthetic_clients
 
 KEY = jax.random.PRNGKey(0)
@@ -45,8 +45,9 @@ def make_engine(setup, *, metrics=None, trace=None, **kw):
     reg = AdapterRegistry({"adapters": base}, n_slots=4)
     for i, t in enumerate(trees):
         reg.ingest(i, {"adapters": t})
-    return ServingEngine(cfg, params, acfg, reg, max_batch=4, max_seq=32,
-                         metrics=metrics, trace=trace, **kw)
+    return ServingEngine(cfg, params, acfg, reg,
+                         ServingConfig(max_batch=4, max_seq=32, **kw),
+                         metrics=metrics, trace=trace)
 
 
 def drive(engine, requests=6, new_tokens=6, seed=0):
@@ -139,7 +140,7 @@ def test_trace_schema_round_trip():
             "version": 1, "blocking_rows": 1, "needed": 2, "free": 0,
             "from_ticks": 8, "to_ticks": 4, "tokens": 6, "ttft_s": 0.2,
             "e2e_s": 0.3, "kind": "dropout", "round": 2,
-            "reason": "queue_full"}
+            "reason": "queue_full", "tier": "cold"}
     for ev, required in EVENT_SCHEMA.items():
         log.emit(ev, **{k: fill[k] for k in required})
     n, errors = validate_trace(log.to_jsonl())

@@ -11,7 +11,8 @@ from repro.configs import AdapterConfig, get_config, reduced
 from repro.core.adapters import init_adapters
 from repro.models.transformer import init_model
 from repro.serving import (AdapterRegistry, PagePool, Scheduler,
-                           ServingEngine, bucket_len, prefill_batches)
+                           ServingConfig, ServingEngine, bucket_len,
+                           prefill_batches)
 from repro.serving.demo import synthetic_clients
 
 KEY = jax.random.PRNGKey(0)
@@ -38,7 +39,7 @@ def make_registry(base, trees, n_slots):
 def make_engine(setup, **kw):
     cfg, acfg, params, base, trees = setup
     reg = make_registry(base, trees, kw.pop("n_slots", 2))
-    return ServingEngine(cfg, params, acfg, reg, **kw)
+    return ServingEngine(cfg, params, acfg, reg, ServingConfig(**kw))
 
 
 def serve(eng, prompts, *, n_clients=3, new_tokens=5):
@@ -258,7 +259,9 @@ def test_paged_layout_rejects_ssm_and_auto_falls_back(setup):
     reg = make_registry(base, trees, n_slots=2)
     acfg = setup[1]
     with pytest.raises(NotImplementedError):
-        ServingEngine(ssm_cfg, None, acfg, reg, max_batch=2, max_seq=16,
-                      kv_layout="paged")
-    eng = ServingEngine(ssm_cfg, None, acfg, reg, max_batch=2, max_seq=16)
+        ServingEngine(ssm_cfg, None, acfg, reg,
+                      ServingConfig(max_batch=2, max_seq=16,
+                                    kv_layout="paged"))
+    eng = ServingEngine(ssm_cfg, None, acfg, reg,
+                        ServingConfig(max_batch=2, max_seq=16))
     assert eng.kv_layout == "dense"                  # auto fallback

@@ -16,7 +16,8 @@ from repro.configs import AdapterConfig, get_config, reduced
 from repro.core.adapters import init_adapters
 from repro.core.strategies import LOCAL, leaf_role
 from repro.models.transformer import decode_step, init_model, prefill
-from repro.serving import AdapterFeed, AdapterRegistry, ServingEngine
+from repro.serving import (AdapterFeed, AdapterRegistry, ServingConfig,
+                           ServingEngine)
 from repro.serving.demo import synthetic_clients
 
 KEY = jax.random.PRNGKey(0)
@@ -246,9 +247,11 @@ def run_with_publish(setup, publish_at, kv_layout="paged", warm_steps=4,
     cfg, acfg, params, template0, trees0, trees1 = setup
     reg = make_registry(template0, trees0)
     feed = AdapterFeed()
-    eng = ServingEngine(cfg, params, acfg, reg, max_batch=2, max_seq=32,
-                        kv_layout=kv_layout, page_size=8, feed=feed,
-                        **engine_kw)
+    eng = ServingEngine(cfg, params, acfg, reg,
+                        ServingConfig(max_batch=2, max_seq=32,
+                                      kv_layout=kv_layout, page_size=8,
+                                      **engine_kw),
+                        feed=feed)
     rng = np.random.default_rng(3)
     prompt_a = rng.integers(0, cfg.vocab_size, 6)
     prompt_b = rng.integers(0, cfg.vocab_size, 5)
@@ -338,8 +341,10 @@ def test_engine_flip_defers_behind_two_generations(setup):
     cfg, acfg, params, template0, trees0, trees1 = setup
     reg = make_registry(template0, trees0)
     feed = AdapterFeed()
-    eng = ServingEngine(cfg, params, acfg, reg, max_batch=2, max_seq=32,
-                        kv_layout="paged", page_size=8, feed=feed)
+    eng = ServingEngine(cfg, params, acfg, reg,
+                        ServingConfig(max_batch=2, max_seq=32,
+                                      kv_layout="paged", page_size=8),
+                        feed=feed)
     rng = np.random.default_rng(4)
     eng.submit(0, rng.integers(0, cfg.vocab_size, 4), max_new_tokens=16)
     eng.step()                                   # admit at round 0, buf 0

@@ -9,7 +9,8 @@ import jax.numpy as jnp
 from repro.configs import AdapterConfig, get_config, reduced
 from repro.core.adapters import init_adapters
 from repro.models.transformer import decode_step, init_model, prefill
-from repro.serving import AdapterRegistry, Scheduler, ServingEngine
+from repro.serving import (AdapterRegistry, Scheduler, ServingConfig,
+                           ServingEngine)
 from repro.serving.demo import synthetic_clients
 
 KEY = jax.random.PRNGKey(0)
@@ -257,7 +258,8 @@ def test_engine_rejects_mla_configs(setup):
     assert mla_cfg.mla is not None
     reg = make_registry(base, trees, n_slots=2)
     with pytest.raises(NotImplementedError):
-        ServingEngine(mla_cfg, None, acfg, reg, max_batch=2, max_seq=8)
+        ServingEngine(mla_cfg, None, acfg, reg,
+                      ServingConfig(max_batch=2, max_seq=8))
 
 
 # ---------------------------------------------------------------------------
@@ -308,7 +310,8 @@ def test_engine_mixed_batch_matches_naive_per_client(setup):
     cfg, acfg, params, base, trees = setup
     n_clients, new_tokens, plen = 3, 5, 6
     reg = make_registry(base, trees, n_slots=2)     # force eviction churn
-    eng = ServingEngine(cfg, params, acfg, reg, max_batch=2, max_seq=16)
+    eng = ServingEngine(cfg, params, acfg, reg,
+                        ServingConfig(max_batch=2, max_seq=16))
     rng = np.random.default_rng(1)
     prompts = [rng.integers(0, cfg.vocab_size, plen) for _ in range(4)]
     for i, p in enumerate(prompts):
@@ -339,7 +342,8 @@ def test_engine_mixed_batch_matches_naive_per_client(setup):
 def test_engine_rejects_oversized_requests(setup):
     cfg, acfg, params, base, trees = setup
     reg = make_registry(base, trees, n_slots=2)
-    eng = ServingEngine(cfg, params, acfg, reg, max_batch=2, max_seq=8)
+    eng = ServingEngine(cfg, params, acfg, reg,
+                        ServingConfig(max_batch=2, max_seq=8))
     with pytest.raises(AssertionError):
         eng.submit(0, np.zeros(6, np.int32), max_new_tokens=4)
 
@@ -387,8 +391,9 @@ def run_mixed(mixed_setup, lora_backend, n_slots=3, new_tokens=5):
     reg = AdapterRegistry(template, n_slots=n_slots, mode="fedit")
     for i, t in enumerate(trees):
         reg.ingest(i, t)
-    eng = ServingEngine(cfg, params, acfg, reg, max_batch=3, max_seq=16,
-                        lora_backend=lora_backend)
+    eng = ServingEngine(cfg, params, acfg, reg,
+                        ServingConfig(max_batch=3, max_seq=16,
+                                      lora_backend=lora_backend))
     rng = np.random.default_rng(7)
     prompts = [rng.integers(0, cfg.vocab_size, 6) for _ in range(5)]
     for i, p in enumerate(prompts):
@@ -437,8 +442,8 @@ def test_fused_decode_parity_and_observability(setup):
 
     def run(**kw):
         reg = make_registry(base, trees, n_slots=2)
-        eng = ServingEngine(cfg, params, acfg, reg, max_batch=2,
-                            max_seq=32, **kw)
+        eng = ServingEngine(cfg, params, acfg, reg,
+                            ServingConfig(max_batch=2, max_seq=32, **kw))
         for i, p in enumerate(prompts):
             eng.submit(i % 3, p, max_new_tokens=6)
         rep = eng.run()
@@ -480,7 +485,8 @@ def test_feddpa_engine_matches_per_client(setup):
     reg = AdapterRegistry(template, n_slots=2, mode="feddpa")
     for i, t in enumerate(trees):
         reg.ingest(i, t)
-    eng = ServingEngine(cfg, params, acfg, reg, max_batch=2, max_seq=16)
+    eng = ServingEngine(cfg, params, acfg, reg,
+                        ServingConfig(max_batch=2, max_seq=16))
     rng = np.random.default_rng(8)
     prompts = [rng.integers(0, cfg.vocab_size, 5) for _ in range(3)]
     for i, p in enumerate(prompts):

@@ -1,0 +1,174 @@
+"""ServingConfig (PR 8): one frozen object for every engine knob.
+
+Validation fires at construction (before any device allocation), the
+launcher maps argparse flags through ``from_args``, and the engine keeps
+a one-release back-compat shim that folds loose kwargs into a config
+under a DeprecationWarning — with token parity against the config path.
+"""
+import argparse
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import AdapterConfig, get_config, reduced
+from repro.core.adapters import init_adapters
+from repro.models.transformer import init_model
+from repro.serving import AdapterRegistry, ServingConfig, ServingEngine
+from repro.serving.config import FIELD_NAMES
+from repro.serving.demo import synthetic_clients
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# Validation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bad", [
+    dict(kv_layout="ragged"),
+    dict(attn_backend="cuda"),
+    dict(lora_backend="cutlass"),
+    dict(decode_backend="speculative"),
+    dict(max_batch=0),
+    dict(max_seq=0),
+    dict(decode_ticks=0),
+    dict(page_size=12),                      # not a power of two
+    dict(page_size=0),
+    dict(n_pages=1),                         # write-off page needs a peer
+    dict(n_pages=8, kv_layout="dense"),      # dense has no pool
+    dict(kv_layout="dense", attn_backend="pallas"),
+    dict(max_queue=-1),
+    dict(request_deadline_s=-0.5),
+    dict(degrade_after_s=-1.0),
+    dict(host_ring_slots=-1),
+    dict(prefetch_lookahead=-1),
+    dict(prefetch_lookahead=2),              # lookahead without a tier
+])
+def test_rejects_invalid_combinations(bad):
+    with pytest.raises(ValueError):
+        ServingConfig(**bad)
+
+
+def test_zero_means_immediately_is_legal():
+    cfg = ServingConfig(request_deadline_s=0.0, degrade_after_s=0.0,
+                        max_queue=0)
+    assert cfg.request_deadline_s == 0.0
+
+
+def test_tiered_property_and_replace():
+    cfg = ServingConfig()
+    assert not cfg.tiered
+    assert cfg.replace(host_ring_slots=8).tiered
+    assert cfg.replace(cold_dir="/tmp/x").tiered
+    # replace() revalidates the whole config
+    with pytest.raises(ValueError):
+        cfg.replace(prefetch_lookahead=4)
+    cfg.replace(host_ring_slots=8, prefetch_lookahead=4)
+
+
+def test_frozen_and_field_names():
+    cfg = ServingConfig()
+    with pytest.raises(Exception):
+        cfg.max_batch = 4
+    assert "max_batch" in FIELD_NAMES and "prefetch_lookahead" in FIELD_NAMES
+    # engine_kwargs round-trips through the constructor
+    assert ServingConfig(**cfg.engine_kwargs()) == cfg
+
+
+# ---------------------------------------------------------------------------
+# from_args: the launcher's flag → field mapping
+# ---------------------------------------------------------------------------
+
+def test_from_args_maps_flags_and_overrides():
+    ns = argparse.Namespace(kv_layout="paged", page_size=8,
+                            attn_backend="xla", lora_backend="bgmv",
+                            decode_backend="fused", decode_ticks=4,
+                            max_queue=16, request_deadline=1.5,
+                            degrade_after=2.0, host_ring_slots=32,
+                            cold_dir="/tmp/cold", prefetch_lookahead=4)
+    cfg = ServingConfig.from_args(ns, max_batch=4, max_seq=48)
+    assert cfg.max_batch == 4 and cfg.max_seq == 48
+    assert cfg.request_deadline_s == 1.5     # flag name != field name
+    assert cfg.degrade_after_s == 2.0
+    assert cfg.host_ring_slots == 32 and cfg.prefetch_lookahead == 4
+    assert cfg.decode_backend == "fused" and cfg.decode_ticks == 4
+
+
+def test_from_args_tolerates_missing_flags():
+    cfg = ServingConfig.from_args(argparse.Namespace(page_size=32))
+    assert cfg.page_size == 32
+    assert cfg.max_batch == ServingConfig().max_batch
+
+
+# ---------------------------------------------------------------------------
+# Engine shim: loose kwargs warn, then behave identically
+# ---------------------------------------------------------------------------
+
+def engine_setup():
+    cfg = reduced(get_config("deepseek-7b"), n_layers=2, d_model=64)
+    acfg = AdapterConfig(mode="fedsa", rank=4)
+    params = init_model(KEY, cfg, jnp.float32)
+    base = init_adapters(KEY, cfg, acfg)
+    trees = [t["adapters"] for t in
+             synthetic_clients({"adapters": base}, 3, seed=50, scale=0.05)]
+    return cfg, acfg, params, base, trees
+
+
+def make_registry(base, trees):
+    reg = AdapterRegistry({"adapters": base}, n_slots=2)
+    for i, t in enumerate(trees):
+        reg.ingest(i, {"adapters": t})
+    return reg
+
+
+def run_tokens(eng, cfg, n=4):
+    rng = np.random.default_rng(5)
+    for i, p in enumerate(rng.integers(0, cfg.vocab_size, (n, 5))):
+        eng.submit(i % 3, p, max_new_tokens=4)
+    eng.run()
+    return {r: eng.finished[r]["tokens"].tolist() for r in eng.finished}
+
+
+def test_legacy_kwargs_warn_and_match_config(recwarn):
+    cfg, acfg, params, base, trees = engine_setup()
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        legacy = ServingEngine(cfg, params, acfg,
+                               make_registry(base, trees),
+                               max_batch=2, max_seq=16,
+                               kv_layout="paged", page_size=8)
+    modern = ServingEngine(cfg, params, acfg, make_registry(base, trees),
+                           ServingConfig(max_batch=2, max_seq=16,
+                                         kv_layout="paged", page_size=8))
+    assert run_tokens(legacy, cfg) == run_tokens(modern, cfg)
+    assert legacy.max_batch == modern.max_batch == 2
+    assert legacy.kv_layout == modern.kv_layout == "paged"
+
+
+def test_legacy_kwargs_fold_on_top_of_config():
+    cfg, acfg, params, base, trees = engine_setup()
+    with pytest.warns(DeprecationWarning):
+        eng = ServingEngine(cfg, params, acfg, make_registry(base, trees),
+                            ServingConfig(max_batch=2, max_seq=16),
+                            page_size=8)
+    assert eng.page_size == 8 and eng.max_batch == 2
+
+
+def test_unknown_kwarg_is_a_type_error():
+    cfg, acfg, params, base, trees = engine_setup()
+    with pytest.raises(TypeError, match="max_batches"):
+        ServingEngine(cfg, params, acfg, make_registry(base, trees),
+                      max_batches=2)
+
+
+def test_invalid_combo_fails_before_device_work():
+    cfg, acfg, params, base, trees = engine_setup()
+    with pytest.raises(ValueError, match="pallas"):
+        ServingConfig(kv_layout="dense", attn_backend="pallas")
+    # and via the shim, same failure (after the warning)
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(ValueError):
+            ServingEngine(cfg, params, acfg, make_registry(base, trees),
+                          kv_layout="dense", attn_backend="pallas")

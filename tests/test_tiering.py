@@ -1,0 +1,336 @@
+"""Hierarchical adapter store (PR 8): HBM slots → host ring → cold npz.
+
+Covers the tier transitions the registry rides on — bit-exact
+demote→promote round trips (versioned double-buffer and paired-A/B
+tables rewrite slots from store bytes, so any drift would corrupt
+serving), write-once demotion, prefetch overlap, and the all-pinned
+cold-miss path.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import AdapterConfig, get_config, reduced
+from repro.core.adapters import init_adapters
+from repro.serving import AdapterRegistry, AdapterStore, Prefetcher
+from repro.serving.demo import synthetic_clients
+
+KEY = jax.random.PRNGKey(0)
+
+
+def leaves_of(n=3, seed=0, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    return [rng.standard_normal((4, 8)).astype(dtype) for _ in range(n)]
+
+
+def bits(leaves):
+    return [x.tobytes() for x in leaves]
+
+
+# ---------------------------------------------------------------------------
+# AdapterStore unit semantics
+# ---------------------------------------------------------------------------
+
+def test_store_demote_promote_bit_exact(tmp_path):
+    store = AdapterStore(host_ring_slots=2, cold_dir=str(tmp_path))
+    want = {c: leaves_of(seed=c) for c in range(5)}
+    for c, lv in want.items():
+        store.put(c, lv)
+    # ring holds the 2 MRU clients; 0..2 were demoted to npz
+    assert store.host_count == 2 and store.cold_count == 3
+    for c, lv in want.items():
+        got, tier = store.fetch(c)
+        assert bits(got) == bits(lv), f"client {c} drifted via {tier}"
+    # a second full sweep: every entry has round-tripped at least once
+    for c, lv in want.items():
+        got, _ = store.fetch(c)
+        assert bits(got) == bits(lv)
+    assert store.promotions > 0 and store.demotions > 0
+
+
+def test_store_write_once_demotion(tmp_path):
+    """An entry promoted from cold is born clean: demoting it again must
+    NOT rewrite the npz file (steady-state ring churn is fsync-free)."""
+    store = AdapterStore(host_ring_slots=1, cold_dir=str(tmp_path))
+    store.put(0, leaves_of(seed=0))
+    store.put(1, leaves_of(seed=1))          # demotes 0 (dirty: written)
+    path0 = tmp_path / "adapter_0.npz"
+    stamp = path0.stat().st_mtime_ns
+    store.fetch(0)                           # promotes 0, demotes 1
+    store.fetch(1)                           # promotes 1, demotes 0 again
+    assert path0.stat().st_mtime_ns == stamp, \
+        "clean demotion rewrote the cold file"
+
+
+def test_store_ring_zero_is_all_cold(tmp_path):
+    store = AdapterStore(host_ring_slots=0, cold_dir=str(tmp_path))
+    lv = leaves_of(seed=3)
+    store.put(7, lv)
+    assert store.host_count == 0 and store.tier_of(7) == "cold"
+    got, tier = store.fetch(7)
+    assert tier == "cold" and bits(got) == bits(lv)
+    assert store.promotions == 0             # nothing to promote into
+    assert store.tier_of(7) == "cold"
+
+
+def test_store_formats_and_unknown_client():
+    store = AdapterStore(formats=[np.dtype(np.float32)])
+    store.put(0, [np.arange(6, dtype=np.float64).reshape(2, 3)])
+    got, tier = store.fetch(0)
+    assert tier == "host" and got[0].dtype == np.float32
+    with pytest.raises(KeyError):
+        store.fetch(99)
+
+
+def test_store_migrate_preserves_bytes_and_order(tmp_path):
+    src = AdapterStore(host_ring_slots=2, cold_dir=str(tmp_path / "a"))
+    want = {c: leaves_of(seed=10 + c) for c in range(4)}
+    for c, lv in want.items():
+        src.put(c, lv)
+    dst = AdapterStore(host_ring_slots=2, cold_dir=str(tmp_path / "b"))
+    dst.migrate_from(src)
+    assert len(dst) == len(want)
+    assert dst.host_count == 2               # same ring occupancy
+    for c, lv in want.items():
+        assert bits(dst.fetch(c)[0]) == bits(lv)
+
+
+def test_prefetcher_promotes_and_dedups(tmp_path):
+    store = AdapterStore(host_ring_slots=4, cold_dir=str(tmp_path))
+    for c in range(8):
+        store.put(c, leaves_of(seed=c))
+    pf = Prefetcher(store)
+    cold = [c for c in range(8) if store.tier_of(c) == "cold"]
+    assert pf.request(cold[0])
+    assert pf.drain()
+    assert store.tier_of(cold[0]) == "host"
+    assert not pf.request(cold[0])           # already host-resident
+    pf.stop()
+
+
+# ---------------------------------------------------------------------------
+# Registry-level tiering
+# ---------------------------------------------------------------------------
+
+def fedsa_setup(n_clients=6):
+    cfg = reduced(get_config("deepseek-7b"), n_layers=2, d_model=64)
+    acfg = AdapterConfig(mode="fedsa", rank=4)
+    base = init_adapters(KEY, cfg, acfg)
+    template = {"adapters": base}
+    trees = synthetic_clients(template, n_clients, seed=50, scale=0.05)
+    return template, trees
+
+
+def test_registry_round_trip_bit_exact_versioned(tmp_path):
+    """Versioned registry over a tiny ring: every slot write after a
+    demote→promote round trip must reproduce the ingested bytes."""
+    template, trees = fedsa_setup()
+    reg = AdapterRegistry(template, n_slots=2, versioned=True,
+                          host_ring_slots=2, cold_dir=str(tmp_path))
+    want = {}
+    for i, t in enumerate(trees):
+        reg.ingest(i, t)
+        want[i] = [x.tobytes() for x in reg._store._format(
+            reg._local_leaves(t))]
+    assert reg._store.cold_count > 0         # the ring really spilled
+    for i in range(len(trees)):              # cycle: evict + promote
+        reg.acquire(i)
+        reg.release(i)
+    for i in range(len(trees)):
+        got, _ = reg._store.fetch(i)
+        assert [x.tobytes() for x in got] == want[i], f"client {i}"
+    assert reg._store.demotions > 0 and reg._store.promotions > 0
+
+
+def test_registry_round_trip_bit_exact_fedit(tmp_path):
+    """Paired A/B tables (fedit): BOTH matrices ride the tiers and must
+    come back bit-exact — a mixed round-t A with round-t B would be a
+    silent corruption."""
+    template, _ = fedsa_setup()
+    trees = synthetic_clients(template, 6, mode="fedit", seed=9,
+                              scale=0.05)
+    reg = AdapterRegistry(template, n_slots=2, mode="fedit",
+                          host_ring_slots=2, cold_dir=str(tmp_path))
+    assert reg.has_local_A
+    want = {}
+    for i, t in enumerate(trees):
+        reg.ingest(i, t)
+        want[i] = [x.tobytes() for x in reg._store._format(
+            reg._local_leaves(t))]
+    for i in list(range(6)) + [0, 3, 5, 1]:
+        reg.acquire(i)
+        reg.release(i)
+    for i in range(6):
+        got, _ = reg._store.fetch(i)
+        assert [x.tobytes() for x in got] == want[i]
+
+
+def test_eviction_demotes_instead_of_discarding(tmp_path):
+    template, trees = fedsa_setup()
+    reg = AdapterRegistry(template, n_slots=2, host_ring_slots=3,
+                          cold_dir=str(tmp_path))
+    for i, t in enumerate(trees):
+        reg.ingest(i, t)
+    reg.acquire(0), reg.release(0)
+    reg.acquire(1), reg.release(1)
+    reg.acquire(2), reg.release(2)           # evicts 0 → host ring touch
+    assert 0 not in reg._lru
+    assert reg._store.tier_of(0) in ("host", "cold")
+    reg.acquire(0)                           # re-admission, no KeyError
+    reg.release(0)
+
+
+def test_prefetch_converts_cold_miss_to_host_hit(tmp_path):
+    template, trees = fedsa_setup()
+    reg = AdapterRegistry(template, n_slots=2, host_ring_slots=2,
+                          cold_dir=str(tmp_path))
+    for i, t in enumerate(trees):
+        reg.ingest(i, t)
+    cold_cid = next(i for i in range(len(trees))
+                    if reg._store.tier_of(i) == "cold")
+    assert reg.prefetch(cold_cid) is True
+    assert reg.prefetch(cold_cid) is False   # deduped while pending/host
+    assert reg.drain_prefetch()
+    before = reg.stats["tier_cold_misses"]
+    reg.acquire(cold_cid)
+    reg.release(cold_cid)
+    st = reg.stats
+    assert st["tier_cold_misses"] == before  # no stall: served host-ward
+    assert st["tier_host_hits"] >= 1
+    assert st["prefetches"] == 1
+    tiers = [t for t, _ in reg.admission_samples]
+    assert tiers[-1] == "host"
+
+
+def test_cold_miss_under_all_pinned_table(tmp_path):
+    """All slots pinned: admission still raises RuntimeError (the
+    degraded-slot path stays the engine's call), and the FAILED acquire
+    books no tier counters or samples."""
+    template, trees = fedsa_setup()
+    reg = AdapterRegistry(template, n_slots=1, host_ring_slots=1,
+                          cold_dir=str(tmp_path))
+    for i, t in enumerate(trees):
+        reg.ingest(i, t)
+    reg.acquire(0)                           # pins the only slot
+    before = (reg.stats["tier_host_hits"], reg.stats["tier_cold_misses"],
+              len(reg.admission_samples))
+    with pytest.raises(RuntimeError, match="pinned"):
+        reg.acquire(1)
+    after = (reg.stats["tier_host_hits"], reg.stats["tier_cold_misses"],
+             len(reg.admission_samples))
+    assert after == before
+    reg.release(0)
+    reg.acquire(1)                           # retry succeeds post-release
+    reg.release(1)
+
+
+def test_zipf_hot_tenants_stay_warm(tmp_path):
+    """Zipf(1.0) traffic: the hottest tenants must never regress to the
+    cold tier, and non-resident admissions should be mostly host hits."""
+    template, trees = fedsa_setup(n_clients=12)
+    reg = AdapterRegistry(template, n_slots=2, host_ring_slots=6,
+                          cold_dir=str(tmp_path))
+    for i, t in enumerate(trees):
+        reg.ingest(i, t)
+    rng = np.random.default_rng(4)
+    ranks = np.arange(1, 13, dtype=np.float64)
+    p = 1.0 / ranks
+    p /= p.sum()
+    trace = rng.choice(12, size=400, p=p)    # client id == rank-1 (hot=0)
+    reg.reset_tier_stats()
+    cold_stalls = {c: 0 for c in range(12)}
+    seen = {c: 0 for c in range(12)}
+    for cid in trace:
+        cid = int(cid)
+        seen[cid] += 1
+        if cid not in reg._lru and reg._store.tier_of(cid) == "cold":
+            cold_stalls[cid] += 1            # this acquire pays npz I/O
+        reg.acquire(cid)
+        reg.release(cid)
+    st = reg.stats
+    # Zipf sanity: the hot head lives in HBM + ring, so its stall rate
+    # must sit far below the cold tail's (LRU alone can't make it zero —
+    # the engine's prefetch lookahead closes the rest, tested below)
+    hot_rate = sum(cold_stalls[c] for c in (0, 1)) / max(
+        1, seen[0] + seen[1])
+    tail_seen = sum(seen[c] for c in range(6, 12))
+    tail_rate = sum(cold_stalls[c] for c in range(6, 12)) / max(
+        1, tail_seen)
+    assert hot_rate < 0.15, f"hot tenants stalled cold {hot_rate:.0%}"
+    assert hot_rate < tail_rate / 2, (hot_rate, tail_rate)
+    # raw LRU (no prefetch) over a half-fleet ring: roughly half the
+    # non-resident admissions land host-side; the bench's ≥0.8 gate
+    # needs the prefetch lookahead on top
+    assert st["host_hit_rate"] is not None and st["host_hit_rate"] >= 0.4
+    occ = st["tier_occupancy"]
+    assert occ["hbm"] == 2 and occ["host"] == 6
+    assert occ["hbm"] + occ["host"] + occ["cold"] >= 12
+
+
+def test_stats_slot_breakdown(tmp_path):
+    template, trees = fedsa_setup()
+    reg = AdapterRegistry(template, n_slots=3, host_ring_slots=4,
+                          cold_dir=str(tmp_path))
+    for i, t in enumerate(trees):
+        reg.ingest(i, t)
+    reg.acquire(0)                           # pinned
+    reg.acquire(1)
+    reg.release(1)                           # resident, unpinned
+    st = reg.stats
+    assert st["pinned_slots"] == 1
+    assert st["unpinned_resident"] == 1
+    assert st["free_slots"] == 1
+    assert st["degraded_slots"] == 1
+    assert st["host_ring_slots"] == 4
+    assert st["tier_occupancy"]["hbm"] == 2
+
+
+def test_engine_issues_prefetches_from_lookahead(tmp_path):
+    """End to end: a tiered engine walks the scheduler's queue at each
+    host-sync boundary and promotes upcoming admits host-ward — the
+    report counts prefetches and the trace carries the new events."""
+    from repro.models.transformer import init_model
+    from repro.obs import TraceLog
+    from repro.serving import ServingConfig, ServingEngine
+
+    cfg = reduced(get_config("deepseek-7b"), n_layers=2, d_model=64)
+    acfg = AdapterConfig(mode="fedsa", rank=4)
+    params = init_model(KEY, cfg, jnp.float32)
+    base = init_adapters(KEY, cfg, acfg)
+    trees = synthetic_clients({"adapters": base}, 8, seed=50, scale=0.05)
+    reg = AdapterRegistry({"adapters": base}, n_slots=2,
+                          host_ring_slots=2, cold_dir=str(tmp_path))
+    for i, t in enumerate(trees):
+        reg.ingest(i, t)
+    trace = TraceLog(validate=True)
+    eng = ServingEngine(cfg, params, acfg, reg,
+                        ServingConfig(max_batch=2, max_seq=16,
+                                      host_ring_slots=2,
+                                      cold_dir=str(tmp_path),
+                                      prefetch_lookahead=2),
+                        trace=trace)
+    rng = np.random.default_rng(2)
+    for r in range(8):
+        eng.submit(r, rng.integers(0, cfg.vocab_size, 4),
+                   max_new_tokens=3)
+    rep = eng.run()
+    assert rep["requests"] == 8
+    assert rep["prefetches"] > 0
+    kinds = {rec["ev"] for rec in trace}
+    assert "adapter_prefetch" in kinds
+    assert rep["tier_occupancy"]["hbm"] == 2
+
+
+def test_configure_tiers_migrates(tmp_path):
+    template, trees = fedsa_setup()
+    reg = AdapterRegistry(template, n_slots=2)   # unbounded host store
+    for i, t in enumerate(trees):
+        reg.ingest(i, t)
+    want = {i: [x.tobytes() for x in reg._store[i]]
+            for i in range(len(trees))}
+    reg.configure_tiers(host_ring_slots=2, cold_dir=str(tmp_path))
+    assert reg._store.host_count == 2
+    for i in range(len(trees)):
+        assert [x.tobytes() for x in reg._store.fetch(i)[0]] == want[i]
