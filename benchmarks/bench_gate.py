@@ -97,6 +97,20 @@ _BENCHES = {
         "floor": 2.0,
         "baseline": "BENCH_tiering.json",
     },
+    "serving_sharded": {
+        # (N, 1) data-sharded decode tok/s ÷ single-device decode tok/s
+        # — on CI's forced host devices the shards share one CPU, so the
+        # collectives and partitioned dispatch are pure overhead and the
+        # ratio sits well under 1×. The bench asserts bit-identical
+        # token parity in-process (it aborts before writing a record on
+        # divergence); the gate's job is to catch a *collapse* — a
+        # retrace storm or host-sync explosion on the sharded path —
+        # not to demand speedup, hence the low floor
+        "metric": "sharded_decode_ratio",
+        "workload": _COMMON_KEYS + ("page_size", "mesh_data"),
+        "floor": 0.05,
+        "baseline": "BENCH_sharded.json",
+    },
     "serving_chaos": {
         # faulted decode tok/s ÷ clean decode tok/s under the default
         # seeded fault profile — availability under chaos, not raw speed

@@ -20,8 +20,8 @@ def main() -> None:
     from benchmarks import (fig2_similarity, nlg_generation, roofline,
                             serving_chaos, serving_decode_fused,
                             serving_refresh, serving_sgmv,
-                            serving_throughput, serving_tiering,
-                            table1_accuracy, table2_comm,
+                            serving_sharded, serving_throughput,
+                            serving_tiering, table1_accuracy, table2_comm,
                             table3_heterogeneity, table4_clients,
                             table5_rank, table10_compression)
 
@@ -48,6 +48,11 @@ def main() -> None:
             requests=12 if q else 18, new_tokens=6 if q else 8),
         "tiering": lambda: serving_tiering.main(
             accesses=800 if q else 2000),
+        # needs XLA_FLAGS=--xla_force_host_platform_device_count=N set
+        # before any jax import (the module sets it only when unset, and
+        # the sibling imports above may initialize jax first)
+        "sharded": lambda: serving_sharded.main(
+            requests=8 if q else 16, new_tokens=8 if q else 16),
     }
     only = set(args.only.split(",")) if args.only else set(suites)
     for name, fn in suites.items():

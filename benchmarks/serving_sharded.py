@@ -1,0 +1,205 @@
+"""Mesh-sharded serving vs the single-device engine — 1-vs-N arms on
+forced host devices, token parity asserted in-bench.
+
+The PR-9 claim is about *correctness under partitioning*, not CPU
+speed: the engine sharded over an (N, 1) ("data", "model") mesh — base
+weights placed, KV page pool and decode rows split N ways, adapter
+slot tables replicated — must emit BIT-IDENTICAL tokens to the
+single-device engine on the same workload, while the versioned refresh
+flip commits through the mesh-wide collective check. On real
+accelerators row sharding buys decode throughput; on CPU the forced
+host devices (``--xla_force_host_platform_device_count``) share the
+same cores, so the collectives and partitioned dispatch are pure
+overhead — the gated ``sharded_decode_ratio`` (sharded ÷ single
+decode tok/s) therefore has a deliberately low floor and exists to
+catch *collapses* (a retrace storm, a host-sync explosion, an
+all-gather on the hot path), not to demand speedup.
+
+Arms, same model / prompts / greedy decode, paged layout, fused decode:
+
+  single       shard_serving=False — the PR-8 engine
+  sharded@N    shard_serving=True, mesh_shape=(N, 1)
+
+A mid-stream publish lands in the sharded arm's registry before the
+timed pass, so the record also witnesses ≥1 collective flip. Results →
+``BENCH_sharded.json``.
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+      PYTHONPATH=src python benchmarks/serving_sharded.py \\
+      [--requests 16] [--new-tokens 16] [--mesh-data 4]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import pathlib
+
+# the forced device count must be in place BEFORE jax initializes; a
+# no-op when the caller (CI, benchmarks/run.py) already exported it
+if os.environ.get("XLA_FLAGS") is None:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import AdapterConfig, get_config, reduced
+from repro.core.adapters import init_adapters
+from repro.models.transformer import init_model
+from repro.serving.demo import synthetic_clients
+
+try:                       # python -m benchmarks.serving_sharded / run.py
+    from benchmarks.common import emit, latency_row, write_record
+    from benchmarks.serving_throughput import run_engine
+except ImportError:        # python benchmarks/serving_sharded.py
+    from common import emit, latency_row, write_record
+    from serving_throughput import run_engine
+
+BENCH_PATH = pathlib.Path(__file__).resolve().parent.parent / \
+    "BENCH_sharded.json"
+
+
+def _row(rep):
+    keys = ("tok_per_s", "gen_tok_per_s", "decode_tok_per_s",
+            "decode_tokens", "decode_steps", "decode_retraces",
+            "host_syncs", "batch_occupancy", "wall_s", "sharded",
+            "mesh_shape", "collective_flips", "cross_shard_allocs",
+            "adapter_version", "flips")
+    row = {k: rep[k] for k in keys if k in rep}
+    row["latency"] = latency_row(rep)
+    return row
+
+
+def _tokens(eng):
+    return {r: eng.finished[r]["tokens"].tolist() for r in eng.finished}
+
+
+def main(clients=8, batch=8, requests=16, new_tokens=16, page_size=16,
+         max_seq=128, mesh_data=4, out=None):
+    n_dev = len(jax.devices())
+    if n_dev < mesh_data:
+        raise SystemExit(
+            f"serving_sharded needs {mesh_data} devices, found {n_dev}: "
+            "export XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{mesh_data} before jax imports")
+    cfg = reduced(get_config("deepseek-7b"), n_layers=2, d_model=128)
+    acfg = AdapterConfig(mode="fedsa", rank=8)
+    key = jax.random.PRNGKey(0)
+    params = init_model(key, cfg, jnp.float32)
+    template = {"adapters": init_adapters(key, cfg, acfg)}
+    client_trees = [t["adapters"] for t in
+                    synthetic_clients(template, clients, seed=11)]
+    base = template["adapters"]
+    hetero = [8, 24, 12, 48, 6, 32, 16, 40]
+    lens = [hetero[i % len(hetero)] for i in range(requests)]
+    assert max(lens) + new_tokens <= max_seq
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, n) for n in lens]
+
+    common = (cfg, params, acfg, base, client_trees, prompts, new_tokens,
+              batch, max_seq)
+
+    def arm(**kw):
+        rep = run_engine(*common, kv_layout="paged", page_size=page_size,
+                         decode_backend="fused", keep_engine=True, **kw)
+        return rep, rep.pop("_engine")
+
+    single_rep, single_eng = arm()
+    want = _tokens(single_eng)
+    sharded_rep, sharded_eng = arm(shard_serving=True,
+                                   mesh_shape=(mesh_data, 1))
+    got = _tokens(sharded_eng)
+    # the whole point: partitioning must not change a single token
+    assert got == want, (
+        f"sharded ({mesh_data},1) engine broke token parity with the "
+        "single-device engine")
+
+    # witness a collective flip: re-drive the sharded engine with a
+    # publish landing mid-stream (versioned registry), parity again
+    from repro.serving import AdapterRegistry, ServingConfig, ServingEngine
+    flips = {}
+    for shard in (False, True):
+        reg = AdapterRegistry({"adapters": base}, n_slots=batch,
+                              versioned=True)
+        for i, tr in enumerate(client_trees):
+            reg.ingest(i, {"adapters": tr})
+        eng = ServingEngine(cfg, params, acfg, reg, ServingConfig(
+            max_batch=batch, max_seq=max_seq, kv_layout="paged",
+            page_size=page_size, decode_backend="fused",
+            shard_serving=shard,
+            mesh_shape=(mesh_data, 1) if shard else None))
+        for i, p in enumerate(prompts):
+            eng.submit(i % clients, p, max_new_tokens=new_tokens)
+        eng.step()
+        reg.publish(1, {0: {"adapters": client_trees[1]}})
+        eng.run()
+        flips[shard] = (_tokens(eng), eng.collective_flips, reg.flips)
+    assert flips[True][0] == flips[False][0], \
+        "mid-publish flip broke sharded token parity"
+    collective_flips, committed_flips = flips[True][1], flips[True][2]
+    assert committed_flips >= 1, "publish never committed a flip"
+    assert collective_flips == committed_flips, (
+        f"{committed_flips} flips committed but only {collective_flips} "
+        "passed the mesh-wide collective check")
+
+    ratio = (sharded_rep["decode_tok_per_s"]
+             / single_rep["decode_tok_per_s"])
+    emit("serving.single_decode_tok_per_s",
+         1e6 / single_rep["decode_tok_per_s"],
+         f"{single_rep['decode_tok_per_s']:.1f}")
+    emit(f"serving.sharded{mesh_data}x1_decode_tok_per_s",
+         1e6 / sharded_rep["decode_tok_per_s"],
+         f"{sharded_rep['decode_tok_per_s']:.1f}")
+    emit("serving.sharded_decode_ratio", 0.0, f"{ratio:.3f}x")
+    emit("serving.sharded_cross_shard_allocs", 0.0,
+         str(sharded_rep["cross_shard_allocs"]))
+
+    bench_path = BENCH_PATH if out is None else pathlib.Path(out)
+    record = {
+        "bench": "serving_sharded",
+        "config": {"arch": cfg.name, "n_layers": cfg.n_layers,
+                   "d_model": cfg.d_model, "rank": acfg.rank,
+                   "clients": clients, "batch": batch,
+                   "requests": requests, "prompt_lens": lens,
+                   "new_tokens": new_tokens, "max_seq": max_seq,
+                   "page_size": page_size, "mesh_data": mesh_data,
+                   "devices": n_dev,
+                   "backend": jax.default_backend()},
+        "single": _row(single_rep),
+        "sharded": _row(sharded_rep),
+        "token_parity": True,            # asserted above, both workloads
+        "collective_flips": collective_flips,
+        "sharded_decode_ratio": ratio,
+    }
+    write_record(bench_path, record)
+    print(f"sharded ({mesh_data},1) {sharded_rep['decode_tok_per_s']:.1f} "
+          f"decode tok/s vs single {single_rep['decode_tok_per_s']:.1f} → "
+          f"{ratio:.3f}x, token parity OK, {collective_flips} collective "
+          f"flips [{bench_path.name}]")
+    return record
+
+
+def _cli():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--mesh-data", type=int, default=4,
+                    help="data-axis extent of the sharded arm's (N, 1) "
+                         "mesh")
+    ap.add_argument("--out", default=None,
+                    help="write the JSON record here instead of the "
+                         "committed BENCH_sharded.json (CI keeps the "
+                         "baseline intact for the regression gate)")
+    a = ap.parse_args()
+    main(clients=a.clients, batch=a.batch, requests=a.requests,
+         new_tokens=a.new_tokens, page_size=a.page_size,
+         max_seq=a.max_seq, mesh_data=a.mesh_data, out=a.out)
+
+
+if __name__ == "__main__":
+    _cli()

@@ -1,9 +1,10 @@
-"""Production mesh definitions.
+"""Mesh construction: one general factory + the production presets.
 
 Functions, not module-level constants — importing this module never touches
 jax device state. The dry-run sets ``XLA_FLAGS=--xla_force_host_platform_
-device_count=512`` *before* importing jax so both meshes can be built on a
-CPU host.
+device_count=512`` *before* importing jax so both production meshes can be
+built on a CPU host; tests and the sharded serving engine build small
+meshes (e.g. (4, 1), (2, 2)) through ``make_mesh`` under the same flag.
 
 single-pod : (16, 16)        axes ("data", "model")   — 256 chips (v5e pod)
 multi-pod  : (2, 16, 16)     axes ("pod", "data", "model") — 512 chips
@@ -12,24 +13,49 @@ from __future__ import annotations
 
 import jax
 
+_DEFAULT_AXES = {2: ("data", "model"), 3: ("pod", "data", "model")}
 
-def make_production_mesh(*, multi_pod: bool = False):
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+
+def make_mesh(shape, axes=None):
+    """A ``jax.sharding.Mesh`` of the given shape over the first
+    ``prod(shape)`` devices.
+
+    ``axes`` defaults to ``("data", "model")`` for 2-d shapes and
+    ``("pod", "data", "model")`` for 3-d ones — the axis names every
+    spec builder in ``repro.sharding.rules`` keys on. Raises with the
+    ``XLA_FLAGS`` hint when the host exposes too few devices (CPU hosts
+    fake a device count with
+    ``--xla_force_host_platform_device_count=N``).
+    """
+    shape = tuple(int(s) for s in shape)
+    if not shape or any(s < 1 for s in shape):
+        raise ValueError(f"mesh shape {shape}: need positive extents")
+    if axes is None:
+        if len(shape) not in _DEFAULT_AXES:
+            raise ValueError(f"no default axis names for a {len(shape)}-d "
+                             "mesh; pass axes=")
+        axes = _DEFAULT_AXES[len(shape)]
+    axes = tuple(axes)
+    if len(axes) != len(shape):
+        raise ValueError(f"mesh shape {shape} vs axes {axes}: rank mismatch")
     n = 1
     for s in shape:
         n *= s
     devices = jax.devices()[:n]
     if len(devices) < n:
         raise RuntimeError(
-            f"mesh needs {n} devices, found {len(devices)}; run under "
-            f"XLA_FLAGS=--xla_force_host_platform_device_count=512")
+            f"mesh {shape} needs {n} devices, found {len(devices)}; run "
+            f"under XLA_FLAGS=--xla_force_host_platform_device_count={n} "
+            "(set BEFORE jax is imported)")
     import numpy as np
     return jax.sharding.Mesh(np.asarray(devices).reshape(shape), axes)
 
 
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    return make_mesh(shape)
+
+
 def make_host_mesh():
     """1×1 mesh over the single real device (tests / examples)."""
-    import numpy as np
-    return jax.sharding.Mesh(
-        np.asarray(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    return make_mesh((1, 1))

@@ -98,6 +98,12 @@ def run_multi_tenant(args, acfg):
                       rng.integers(0, cfg.vocab_size, plen),
                       max_new_tokens=16)
     rep = engine.run()
+    if rep["sharded"]:
+        d, m = rep["mesh_shape"]
+        print(f"sharded over a {d}x{m} mesh ({d*m} devices: {d}-way rows, "
+              f"{m}-way model), {rep['collective_flips']} collective "
+              f"flips, {rep['cross_shard_allocs'] or 0} cross-shard page "
+              "allocs")
     extra = (f", page util {rep['page_utilization']:.2f}"
              if rep["kv_layout"] == "paged" else "")
     fleet_note = (f"{fleet} fleet "
@@ -251,6 +257,16 @@ def main():
                          "repro.failures.default_plan(seed) — client "
                          "dropout, corrupted updates, feed stalls — "
                          "with the robust federation path on")
+    ap.add_argument("--shard-serving", action="store_true",
+                    help="partition the serving engine over a (data, "
+                         "model) device mesh: base weights tensor-"
+                         "parallel, KV pool + decode rows batch-sharded, "
+                         "refresh flips verified by a mesh-wide "
+                         "collective (repro.serving.sharded)")
+    ap.add_argument("--mesh-shape", default=None,
+                    help="serving mesh extents as DATAxMODEL, e.g. 4x1 "
+                         "or 2x2 (default: all visible devices on the "
+                         "data axis); requires --shard-serving")
     ap.add_argument("--fleet", default="fedsa",
                     choices=["fedsa", "fedit", "feddpa", "mixed"],
                     help="tenant population for --multi-tenant: fedsa "

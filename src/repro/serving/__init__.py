@@ -12,6 +12,11 @@ shared x·Ā projection can therefore serve a *mixed* batch of clients:
                  versioned double-buffered slot tables, so a federation
                  round's new Ā/B_i is absorbed mid-stream with no batch
                  drain and token parity for in-flight sequences
+  ``sharded``    mesh placement for ``ServingConfig(shard_serving=True)``:
+                 params tensor-parallel over "model", KV pages and decode
+                 rows over "data", slot tables replicated, and the
+                 collective flip check that makes every shard commit a
+                 refresh on the same tick
 
 The registry is not FedSA-only: modes whose clients own their whole
 adapter pair (FedIT-style plain LoRA, FedDPA personal adapters) pack
@@ -39,10 +44,13 @@ from repro.serving.registry import (AdapterRegistry, gather_adapters,
                                     gather_adapters_versioned)
 from repro.serving.scheduler import (PagePool, Request, Scheduler, Sequence,
                                      bucket_len, prefill_batches)
+from repro.serving.sharded import (collective_flip_check, serving_mesh,
+                                   shard_cache, shard_params, shard_tables)
 from repro.serving.store import AdapterStore, Prefetcher
 
 __all__ = ["AdapterFeed", "AdapterRegistry", "AdapterStore", "Prefetcher",
            "ServingConfig", "gather_adapters", "gather_adapters_versioned",
            "PagePool", "Request", "Scheduler", "Sequence", "ServingEngine",
-           "bucket_len", "prefill_batches", "snapshot_clients",
-           "train_and_serve"]
+           "bucket_len", "collective_flip_check", "prefill_batches",
+           "serving_mesh", "shard_cache", "shard_params", "shard_tables",
+           "snapshot_clients", "train_and_serve"]

@@ -41,6 +41,19 @@ def _nonnegative_or_none(name, value):
                          "0 means immediately")
 
 
+def parse_mesh_shape(text):
+    """``--mesh-shape``'s "DATAxMODEL" string (e.g. "4x2") → (4, 2)."""
+    parts = text.lower().split("x")
+    try:
+        shape = tuple(int(p) for p in parts)
+    except ValueError:
+        shape = ()
+    if len(shape) != 2:
+        raise ValueError(f"--mesh-shape {text!r}: expected DATAxMODEL, "
+                         "e.g. 4x1 or 2x2")
+    return shape
+
+
 @dataclasses.dataclass(frozen=True)
 class ServingConfig:
     """Every engine knob in one validated, hashable, frozen value.
@@ -79,6 +92,17 @@ class ServingConfig:
                              None = in-memory cold tier
       ``prefetch_lookahead`` queued admits whose adapters the engine
                              prefetches host-ward each tick (0 = off)
+
+    mesh sharding (repro.serving.sharded; docs/serving.md)
+      ``shard_serving``      partition the engine over a ("data",
+                             "model") device mesh: base weights
+                             tensor-parallel, KV pool + decode rows
+                             batch-sharded, refresh flips verified by a
+                             mesh-wide collective
+      ``mesh_shape``         (data, model) extents; None = all visible
+                             devices on the data axis. The data extent
+                             must divide ``max_batch`` (decode rows
+                             split evenly across row shards).
     """
 
     max_batch: int = 8
@@ -98,6 +122,8 @@ class ServingConfig:
     host_ring_slots: int | None = None
     cold_dir: str | None = None
     prefetch_lookahead: int = 0
+    shard_serving: bool = False
+    mesh_shape: tuple | None = None
 
     def __post_init__(self):
         _choice("kv_layout", self.kv_layout, _KV_LAYOUTS)
@@ -140,6 +166,29 @@ class ServingConfig:
                              "(host_ring_slots/cold_dir both unset) can "
                              "never promote anything — set a tier bound "
                              "or drop the lookahead")
+        if self.mesh_shape is not None and not self.shard_serving:
+            raise ValueError(f"mesh_shape={self.mesh_shape} without "
+                             "shard_serving=True — a mesh shape only "
+                             "means something on a sharded engine")
+        if self.shard_serving:
+            if self.attn_backend == "pallas":
+                raise ValueError(
+                    "shard_serving with attn_backend='pallas': the paged "
+                    "attention kernel is not shard_map-aware — run the "
+                    "xla block-table path on a mesh")
+            if self.mesh_shape is not None:
+                shape = self.mesh_shape
+                if (len(shape) != 2
+                        or any(not isinstance(s, int) or s < 1
+                               for s in shape)):
+                    raise ValueError(
+                        f"mesh_shape={shape!r}: need two positive ints "
+                        "(data, model)")
+                if self.max_batch % shape[0] != 0:
+                    raise ValueError(
+                        f"mesh_shape={shape}: data axis {shape[0]} must "
+                        f"divide max_batch={self.max_batch} — decode "
+                        "rows split evenly across row shards")
 
     @property
     def tiered(self):
@@ -176,6 +225,8 @@ class ServingConfig:
             "host_ring_slots": "host_ring_slots",
             "cold_dir": "cold_dir",
             "prefetch_lookahead": "prefetch_lookahead",
+            "shard_serving": "shard_serving",
+            "mesh_shape": "mesh_shape",
         }
         kw = {}
         sentinel = object()
@@ -183,6 +234,8 @@ class ServingConfig:
             v = getattr(ns, flag, sentinel)
             if v is not sentinel:
                 kw[field] = v
+        if isinstance(kw.get("mesh_shape"), str):
+            kw["mesh_shape"] = parse_mesh_shape(kw["mesh_shape"])
         kw.update(overrides)
         return cls(**kw)
 

@@ -81,6 +81,9 @@ from repro.serving.registry import (gather_adapters,
                                     gather_adapters_versioned)
 from repro.serving.scheduler import (PagePool, Scheduler, bucket_len,
                                      prefill_batches)
+from repro.serving.sharded import (collective_flip_check, constrain_rows,
+                                   data_size, serving_mesh, shard_cache,
+                                   shard_params, shard_tables)
 
 
 def _scatter_row(big, small, row):
@@ -222,13 +225,45 @@ class ServingEngine:
         self.tick = 0                   # step() count (trace tick ids)
         self._shed_seen = 0             # scheduler.shed mirrored to obs
 
+        # mesh-sharded serving (repro.serving.sharded): base weights
+        # tensor-parallel over "model", page pool / decode rows over
+        # "data", adapter tables replicated over "data" (col-parallel B
+        # over "model"). The engine stays single-controller — GSPMD
+        # partitions the jitted steps from the placements + row
+        # constraints below.
+        self.mesh = None
+        self.collective_flips = 0
+        self._flips_seen = getattr(registry, "flips", 0)
+        n_row_shards = 1
+        if config.shard_serving:
+            shape = config.mesh_shape or (len(jax.devices()), 1)
+            n_row_shards = shape[0]
+            # validated BEFORE mesh construction so invalid combos are
+            # rejected even on hosts exposing a single device
+            if max_batch % n_row_shards != 0:
+                raise ValueError(
+                    f"mesh data axis {n_row_shards} must divide "
+                    f"max_batch={max_batch}")
+            if registry.n_slots % n_row_shards != 0:
+                raise ValueError(
+                    f"mesh data axis {n_row_shards} must divide the "
+                    f"registry's n_slots={registry.n_slots} — adapter "
+                    "capacity splits evenly across row shards")
+            self.mesh = serving_mesh(config.mesh_shape)
+            self.params = params = shard_params(cfg, params, self.mesh)[0]
+            registry.place(self.mesh, shard_tables(registry, self.mesh))
         if kv_layout == "paged":
             self.page_size = page_size
             # table width covers the largest prefill bucket (pow2 >= max_seq)
             self.table_pages = bucket_len(max_seq, page_size) // page_size
             if n_pages is None:        # worst case + the write-off page
                 n_pages = max_batch * (-(-max_seq // page_size)) + 1
-            self.pool = PagePool(n_pages, page_size)
+            # a sharded pool rounds up so the page axis block-partitions
+            # evenly over "data" (paged_cache_specs falls back to
+            # replicated otherwise) and each row shard owns a whole
+            # contiguous block of pages
+            n_pages = -(-n_pages // n_row_shards) * n_row_shards
+            self.pool = PagePool(n_pages, page_size, n_shards=n_row_shards)
             self.scheduler = Scheduler(max_batch, pool=self.pool,
                                        table_pages=self.table_pages,
                                        trace=trace, max_queue=max_queue,
@@ -241,6 +276,9 @@ class ServingEngine:
                                        max_queue=max_queue,
                                        degrade_after_s=degrade_after_s)
             self.cache = init_cache(cfg, max_batch, max_seq, cache_dtype)
+        if self.mesh is not None:
+            self.cache = shard_cache(cfg, self.cache, self.mesh,
+                                     paged=kv_layout == "paged")[0]
         self._toks = np.zeros((max_batch, 1), np.int32)
         self._pos = np.zeros((max_batch,), np.int32)
         self._slots = np.zeros((max_batch,), np.int32)
@@ -270,6 +308,21 @@ class ServingEngine:
             def _gather(tables, slots, bufs):
                 return _adapters(gather_adapters(tables, local, slots))
 
+        # sharded engines pin every per-row operand (tokens, positions,
+        # slot/buf ids, block tables) and the per-row outputs to
+        # P("data", ...) inside the jitted steps, so GSPMD splits the
+        # batch instead of replicating it; identity on plain engines and
+        # on axes the mesh does not divide (small prefill groups)
+        if self.mesh is not None:
+            mesh = self.mesh
+
+            def _rows(*xs):
+                out = tuple(constrain_rows(x, mesh) for x in xs)
+                return out if len(out) > 1 else out[0]
+        else:
+            def _rows(*xs):
+                return xs if len(xs) > 1 else xs[0]
+
         # jax.named_scope names the HLO under each serving phase so a
         # jax.profiler device capture attributes kernels back to the
         # phase (and lines up with the host-side TraceLog timeline)
@@ -286,33 +339,38 @@ class ServingEngine:
                               cache):
             engine.prefill_retraces += 1
             with named_scope("serve.prefill_paged"):
+                slots, bufs, tokens, lengths, bts = _rows(
+                    slots, bufs, tokens, lengths, bts)
                 ad = _gather(tables, slots, bufs)
                 with grouped_lora_backend(engine.lora_backend):
                     logits, cache = prefill_paged(cfg, params, ad, acfg,
                                                   tokens, lengths, cache,
                                                   bts)
-                return jnp.argmax(logits, -1).astype(jnp.int32), cache
+                return _rows(jnp.argmax(logits, -1).astype(jnp.int32)), cache
 
         def _decode_dense_fn(tables, slots, bufs, toks, pos, cache):
             engine.decode_retraces += 1
             with named_scope("serve.decode_dense"):
+                slots, bufs, toks, pos = _rows(slots, bufs, toks, pos)
                 ad = _gather(tables, slots, bufs)
                 with grouped_lora_backend(engine.lora_backend):
                     logits, cache = decode_step(cfg, params, ad, acfg, toks,
                                                 pos, cache)
-                return (jnp.argmax(logits[:, 0], -1).astype(jnp.int32),
-                        cache)
+                return (_rows(jnp.argmax(logits[:, 0], -1)
+                              .astype(jnp.int32)), cache)
 
         def _decode_paged_fn(tables, slots, bufs, toks, pos, bts, cache):
             engine.decode_retraces += 1
             with named_scope("serve.decode_paged"):
+                slots, bufs, toks, pos, bts = _rows(slots, bufs, toks,
+                                                    pos, bts)
                 ad = _gather(tables, slots, bufs)
                 with grouped_lora_backend(engine.lora_backend):
                     logits, cache = decode_step_paged(
                         cfg, params, ad, acfg, toks, pos, cache, bts,
                         attn_backend=engine.attn_backend)
-                return (jnp.argmax(logits[:, 0], -1).astype(jnp.int32),
-                        cache)
+                return (_rows(jnp.argmax(logits[:, 0], -1)
+                              .astype(jnp.int32)), cache)
 
         # fused multi-tick scans: the adapter gather hoists OUT of the
         # tick loop (slot/buf ids are loop-invariant between host syncs,
@@ -322,6 +380,8 @@ class ServingEngine:
                                   cache, n_ticks):
             engine.decode_retraces += 1
             with named_scope("serve.decode_scan_dense"):
+                slots, bufs, toks, pos, budget = _rows(slots, bufs, toks,
+                                                       pos, budget)
                 ad = _gather(tables, slots, bufs)
                 with grouped_lora_backend(engine.lora_backend):
                     return decode_scan(cfg, params, ad, acfg, toks, pos,
@@ -332,6 +392,8 @@ class ServingEngine:
                                   bts, cache, n_ticks):
             engine.decode_retraces += 1
             with named_scope("serve.decode_scan_paged"):
+                slots, bufs, toks, pos, budget, bts = _rows(
+                    slots, bufs, toks, pos, budget, bts)
                 ad = _gather(tables, slots, bufs)
                 with grouped_lora_backend(engine.lora_backend):
                     return decode_scan_paged(
@@ -653,6 +715,27 @@ class ServingEngine:
                 self.registry.publish(version, trees)
         if self.versioned:
             self.registry.try_flip()
+            # publish→flip is a collective on a mesh: the registry's
+            # single flip commit site (publish() flips inline when
+            # unblocked, try_flip() otherwise) already lands on every
+            # shard on the same tick, and this all-reduce (pmin/pmax of
+            # the version across EVERY mesh device) makes that
+            # observable — a torn flip would surface as lo != hi.
+            # Detected by counter delta so flips committed through
+            # either path (or directly on the registry) are verified.
+            if (self.mesh is not None
+                    and self.registry.flips > self._flips_seen):
+                self._flips_seen = self.registry.flips
+                version = self.registry.version
+                lo, hi = collective_flip_check(self.mesh, version)
+                if not lo == hi == version:
+                    raise RuntimeError(
+                        f"torn collective flip: version {version} but "
+                        f"mesh devices report [{lo}, {hi}]")
+                self.collective_flips += 1
+                if self.trace is not None:
+                    self.trace.emit("collective_flip", version=version,
+                                    devices=self.mesh.size)
 
     # -- prefill paths ------------------------------------------------------
     def _prefill_dense_rows(self, admitted):
@@ -907,6 +990,14 @@ class ServingEngine:
             "decode_ticks": (self.decode_ticks
                              if self.decode_backend == "fused" else 1),
             "registry_mode": getattr(self.registry, "mode", "fedsa"),
+            # mesh sharding (repro.serving.sharded; zeros/None unsharded)
+            "sharded": self.mesh is not None,
+            "mesh_shape": ((self.mesh.shape["data"],
+                            self.mesh.shape["model"])
+                           if self.mesh is not None else None),
+            "collective_flips": self.collective_flips,
+            "cross_shard_allocs": (self.pool.cross_shard_allocs
+                                   if self.pool is not None else None),
             # live refresh (versioned registry; zeros on plain engines)
             "adapter_version": getattr(self.registry, "version", 0),
             "flips": getattr(self.registry, "flips", 0),

@@ -624,6 +624,25 @@ class AdapterRegistry:
     def local_tree(self):
         return jax.tree_util.tree_unflatten(self._treedef, self._local)
 
+    def place(self, mesh, spec_tree):
+        """Commit the packed tables to the mesh (sharded serving).
+
+        ``spec_tree`` mirrors ``.tables`` (build it with
+        ``repro.serving.sharded.shard_tables``): slot tables replicated
+        over "data" — any decode row may gather any slot — and
+        column-parallel B tables split over "model". Resets the lazy
+        slot writer so its donated jit retraces against the committed
+        shardings; eager ``at[].set`` updates (flip commits, slot
+        writes) propagate the placement, so one call at engine
+        construction is enough."""
+        from jax.sharding import NamedSharding
+        specs = jax.tree_util.tree_leaves(
+            spec_tree, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+        assert len(specs) == len(self._leaves)
+        self._leaves = [jax.device_put(leaf, NamedSharding(mesh, spec))
+                        for leaf, spec in zip(self._leaves, specs)]
+        self._slot_writer = None
+
     def gather(self, slot_ids, buf_ids=None):
         """Per-row adapter tree for a batch of slot ids (eager helper).
         Versioned registries default every row to the active buffer."""

@@ -57,14 +57,32 @@ class PagePool:
     Physical page 0 is reserved as the shared write-off page (absorbs
     writes from padded prefill rows and idle decode rows); ``capacity``
     counts the allocatable pages.
+
+    ``n_shards > 1`` splits the free list by contiguous page-id block:
+    shard ``s`` owns physical pages ``[s*span, (s+1)*span)`` with
+    ``span = n_pages // n_shards`` — exactly the blocks GSPMD assigns
+    each "data" shard when the pool's page axis is mesh-sharded (see
+    ``sharding.rules.paged_cache_specs``). ``alloc(n, shard=s)``
+    prefers shard-local pages so a decode row's KV writes stay on its
+    own device shard, falling back to stealing from other shards
+    (counted in ``cross_shard_allocs``) rather than refusing — a steal
+    costs locality, never correctness, because the block table carries
+    full physical page ids either way. Shard 0's span includes the
+    write-off page, so it owns one fewer allocatable page.
     """
 
-    def __init__(self, n_pages, page_size):
+    def __init__(self, n_pages, page_size, *, n_shards=1):
         assert page_size >= 1 and (page_size & (page_size - 1)) == 0, \
             "page_size must be a power of two"
         assert n_pages >= 2, "need at least one page beyond the write-off"
+        assert n_shards >= 1 and n_pages % n_shards == 0, \
+            f"n_shards={n_shards} must divide n_pages={n_pages}"
         self.n_pages, self.page_size = n_pages, page_size
-        self._free = list(range(1, n_pages))[::-1]
+        self.n_shards = n_shards
+        span = n_pages // n_shards
+        self._frees = [list(range(max(1, s * span), (s + 1) * span))[::-1]
+                       for s in range(n_shards)]
+        self.cross_shard_allocs = 0    # allocs that stole >= 1 foreign page
 
     def pages_needed(self, n_tokens):
         return -(-n_tokens // self.page_size)
@@ -75,20 +93,32 @@ class PagePool:
 
     @property
     def free_count(self):
-        return len(self._free)
+        return sum(len(f) for f in self._frees)
 
     @property
     def used_count(self):
-        return self.capacity - len(self._free)
+        return self.capacity - self.free_count
 
-    def alloc(self, n):
-        """n physical page ids, or None if the pool can't cover them."""
-        if n > len(self._free):
+    def alloc(self, n, shard=0):
+        """n physical page ids (shard-local first), or None if the pool
+        can't cover them."""
+        if n > self.free_count:
             return None
-        return [self._free.pop() for _ in range(n)]
+        pages, stole = [], False
+        for src in [shard] + [s for s in range(self.n_shards) if s != shard]:
+            free = self._frees[src]
+            while free and len(pages) < n:
+                pages.append(free.pop())
+                stole |= src != shard
+            if len(pages) == n:
+                break
+        self.cross_shard_allocs += stole
+        return pages
 
     def release(self, pages):
-        self._free.extend(pages)
+        span = self.n_pages // self.n_shards
+        for p in pages:
+            self._frees[p // span].append(p)
 
 
 @dataclasses.dataclass
@@ -234,7 +264,13 @@ class Scheduler:
             if self.pool is not None:
                 needed = self.pool.pages_needed(
                     len(req.prompt) + req.max_new_tokens)
-                pages = self.pool.alloc(needed)
+                # rows partition over pool shards the same way GSPMD
+                # blocks the batch axis: row r → shard r*S/max_batch,
+                # so a sharded engine's KV writes stay shard-local
+                row_hint = self._free_rows[-1]
+                pages = self.pool.alloc(
+                    needed,
+                    shard=row_hint * self.pool.n_shards // self.max_batch)
                 if pages is None:      # pool exhausted: stay queued
                     if not degraded:
                         registry.release(req.client_id)

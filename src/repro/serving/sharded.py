@@ -1,0 +1,164 @@
+"""Mesh-sharded serving: placement rules + the collective flip check.
+
+The FedSA-LoRA structure is what makes the engine shardable at all: the
+aggregated Ā is batch-global (replicate, or tensor-shard with the base
+weights), while everything per-row — decode tokens, positions, slot/buf
+ids, block tables, and the KV page pool behind them — splits cleanly
+along a batch axis. This module owns the mapping:
+
+  base params        ``param_specs`` (Megatron TP over "model"), divisi-
+                     bility-sanitized per leaf (a 2-way CPU mesh cannot
+                     16-way-shard anything, so non-dividing dims fall
+                     back to replicated)
+  adapter tables     ``serving_table_specs``: REPLICATED over "data"
+                     (any row may gather any slot), col-parallel B
+                     tables sharded over "model"
+  KV page pool       ``paged_cache_specs``: page axis over "data", KV
+                     heads over "model" when divisible; the dense
+                     fallback layout reuses the trainer's
+                     ``cache_specs`` (batch over "data")
+  per-step rows      tokens / positions / slot ids / buf ids / block
+                     tables constrained to P("data", ...) inside the
+                     jitted steps — the block table rides in as a
+                     per-shard operand, so each data shard reads only
+                     its own rows' page indirections
+
+The engine keeps its single-controller structure: one registry, one
+scheduler, one ``step()`` loop; GSPMD partitions every jitted step
+across the mesh from the constraints above. The versioned double-buffer
+flip therefore commits on every shard on the same tick by construction
+(there is exactly one ``try_flip`` call site), and
+``collective_flip_check`` makes that guarantee *observable*: after a
+commit the engine all-reduces the flipped version across every mesh
+device (a real pmin/pmax collective, fully-manual ``shard_map``) and
+verifies min == max == the registry's version. A future multi-controller
+deployment keeps the same check; today it is the mesh-wide barrier the
+sharded test tier and ``benchmarks/serving_sharded.py`` assert on.
+
+CPU caveats (jax 0.4.37, ``--xla_force_host_platform_device_count``):
+the collective runs fully manual (partial-auto shard_map emits
+PartitionId, unsupported by the CPU SPMD partitioner) on int32 operands
+(bf16 in-shard_map reductions trip XLA-CPU's AllReducePromotion check).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.mesh import make_mesh
+from repro.sharding.rules import (cache_specs, paged_cache_specs,
+                                  param_specs, serving_table_specs)
+
+
+def serving_mesh(mesh_shape=None):
+    """The engine's 2-d ("data", "model") mesh. ``mesh_shape=None``
+    spreads the batch axis over every visible device: (n_devices, 1)."""
+    if mesh_shape is None:
+        mesh_shape = (len(jax.devices()), 1)
+    return make_mesh(tuple(mesh_shape), ("data", "model"))
+
+
+def data_size(mesh):
+    return mesh.shape["data"]
+
+
+def _sanitize(shape_tree, spec_tree, mesh):
+    """Drop mesh axes from dims they do not divide (the
+    ``launch.entry.sanitize_specs`` rule, local so serving does not pull
+    in the launch entry builders)."""
+    def fix(leaf, spec):
+        dims = []
+        for d, ax in zip(leaf.shape, tuple(spec) + (None,) * leaf.ndim):
+            if ax is None:
+                dims.append(None)
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            size = 1
+            for a in axes:
+                size *= mesh.shape[a]
+            dims.append(ax if d % size == 0 else None)
+        return P(*dims)
+
+    return jax.tree_util.tree_map(fix, shape_tree, spec_tree)
+
+
+def place(tree, spec_tree, mesh):
+    """device_put every leaf with its NamedSharding (committed layout —
+    jit will neither copy nor re-decide these)."""
+    return jax.tree_util.tree_map(
+        lambda leaf, spec: jax.device_put(leaf, NamedSharding(mesh, spec)),
+        tree, spec_tree)
+
+
+def shard_params(cfg, params, mesh):
+    """Base weights placed tensor-parallel (divisibility-sanitized)."""
+    specs = _sanitize(params, param_specs(cfg, params, mesh), mesh)
+    return place(params, specs, mesh), specs
+
+
+def shard_tables(registry, mesh):
+    """Spec tree for a registry's packed tables (see
+    ``serving_table_specs``), sanitized against the mesh."""
+    tables = registry.tables
+    specs = serving_table_specs(tables, registry.local_tree, mesh)
+    return _sanitize(tables, specs, mesh)
+
+
+def shard_cache(cfg, cache, mesh, *, paged):
+    """KV cache placed on the mesh: page axis (paged) or batch axis
+    (dense) over "data", heads over "model" when divisible."""
+    builder = paged_cache_specs if paged else cache_specs
+    specs = _sanitize(cache, builder(cfg, cache, mesh), mesh)
+    return place(cache, specs, mesh), specs
+
+
+def constrain_rows(x, mesh):
+    """``with_sharding_constraint`` splitting a leading batch/row axis
+    over "data" — identity when the axis does not divide (small prefill
+    groups stay replicated rather than unevenly padded)."""
+    if x.ndim == 0 or x.shape[0] % data_size(mesh) != 0:
+        return x
+    spec = P(*(("data",) + (None,) * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def _shard_map_all(fn, mesh, in_specs, out_specs):
+    """Fully-manual shard_map over EVERY mesh axis (jax version compat;
+    fully manual because the CPU SPMD partitioner rejects partial-auto)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(fn, mesh=mesh,
+                             axis_names=set(mesh.axis_names),
+                             in_specs=in_specs, out_specs=out_specs,
+                             check_vma=False)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(fn, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_rep=False)
+
+
+@functools.lru_cache(maxsize=8)
+def _flip_check_fn(mesh):
+    axes = tuple(mesh.axis_names)
+
+    def agree(v):
+        lo, hi = v, v
+        for ax in axes:
+            lo = jax.lax.pmin(lo, ax)
+            hi = jax.lax.pmax(hi, ax)
+        return lo, hi
+
+    return jax.jit(_shard_map_all(agree, mesh, in_specs=P(),
+                                  out_specs=(P(), P())))
+
+
+def collective_flip_check(mesh, version):
+    """All-reduce ``version`` across every device of the mesh; returns
+    (min, max) as python ints. The refresh path calls this after every
+    committed flip and asserts min == max == version — the observable
+    form of 'all shards flipped the same round on the same tick'."""
+    lo, hi = _flip_check_fn(mesh)(jnp.asarray(np.int32(version)))
+    return int(lo), int(hi)

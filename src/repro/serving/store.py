@@ -307,6 +307,12 @@ class Prefetcher:
         """Wait for all queued prefetches to finish (tests/benches)."""
         return self._idle.wait(timeout)
 
-    def stop(self):
+    def stop(self, timeout=5.0):
+        """Shut the thread down and JOIN it (bounded). Returns True when
+        it exited within the timeout — an unjoined worker leaking across
+        tests is how xdist runs turn flaky, so callers can assert on
+        this instead of fire-and-forgetting the sentinel."""
         self._stop = True
         self._q.put(None)
+        self._thread.join(timeout)
+        return not self._thread.is_alive()

@@ -258,6 +258,62 @@ def cache_specs(cfg, cache_shape, mesh, *, batch_over_dp=True):
 
 
 # ---------------------------------------------------------------------------
+# Serving (repro.serving.sharded)
+# ---------------------------------------------------------------------------
+
+def paged_cache_specs(cfg, cache_shape, mesh):
+    """Specs for an ``init_paged_cache`` pytree.
+
+    Pool leaves are ``(n, n_pages, page_size, Hkv, hd)``: the PAGE axis
+    shards over dp (the pool is the serving batch's K/V, and pages are
+    block-partitioned so a row's reservation lands on its row shard —
+    see ``PagePool(n_shards=...)``), KV heads over ``"model"`` when
+    divisible (the same head split as the dense ``cache_specs`` rule).
+    Non-divisible dims fall back to replicated, leaf by leaf.
+    """
+    dp = dp_axis(mesh)
+    dsize = _dp_size(mesh)
+    msize = _model_size(mesh)
+
+    def rule(path, leaf):
+        names = _names(path)
+        if names[-1] in ("k", "v", "cross_k", "cross_v"):
+            n_pages, Hkv = leaf.shape[-4], leaf.shape[-2]
+            trail = (dp if n_pages % dsize == 0 else None, None,
+                     "model" if Hkv % msize == 0 else None, None)
+            return _pad(leaf.ndim, trail)
+        return _pad(leaf.ndim, ())
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shape)
+
+
+def serving_table_specs(tables, local_tree, mesh):
+    """Specs for an ``AdapterRegistry.tables`` tree on a serving mesh.
+
+    Slot tables REPLICATE over dp — any decode row may gather any slot
+    id, so splitting the slot axis would turn every gather into an
+    all-gather (and the ``n_buffers * (n_slots + 1)`` stride axis is
+    rarely divisible anyway). They tensor-shard with the base weights
+    instead: a LOCAL table's last (output-feature) dim goes over
+    ``"model"`` when divisible — the ``adapter_specs`` B rule, applied
+    post-packing — and everything else (A tables with their tiny rank
+    dim, shared Ā leaves, norms) stays replicated.
+    """
+    msize = _model_size(mesh)
+
+    def rule(path, leaf, loc):
+        names = _names(path)
+        if loc and names and names[-1] == "B":
+            trail = _adapter_trail(names, mesh)      # (None, "model") when
+            if (trail == (None, "model")             # the module is col-par
+                    and leaf.shape[-1] % msize == 0):
+                return _pad(leaf.ndim, trail)
+        return _pad(leaf.ndim, ())
+
+    return jax.tree_util.tree_map_with_path(rule, tables, local_tree)
+
+
+# ---------------------------------------------------------------------------
 # Batches
 # ---------------------------------------------------------------------------
 

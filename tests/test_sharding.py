@@ -12,19 +12,24 @@ from repro.configs import (ASSIGNED, AdapterConfig, get_config, get_shape,
 from repro.launch.entry import (abstract_adapters, abstract_model,
                                 build_entry, lower_entry, sanitize_specs,
                                 skip_reason)
-from repro.launch.mesh import make_host_mesh
-from repro.sharding.rules import adapter_specs, cache_specs, param_specs
+from repro.launch.mesh import make_host_mesh, make_mesh
+from repro.sharding.rules import (adapter_specs, cache_specs,
+                                  paged_cache_specs, param_specs,
+                                  serving_table_specs)
 
 ARCHS = sorted(ASSIGNED)
 
 
 class FakeMesh:
-    """Shape-only stand-in for spec construction (no devices needed)."""
-    def __init__(self, multi_pod=False):
-        self.axis_names = (("pod", "data", "model") if multi_pod
+    """Shape-only stand-in for spec construction (no devices needed).
+    ``shape`` overrides the production extents — the small-mesh
+    divisibility tests below run the same rules on (2, 2) and (1, 4)."""
+    def __init__(self, multi_pod=False, shape=None):
+        if shape is None:
+            shape = (2, 16, 16) if multi_pod else (16, 16)
+        self.axis_names = (("pod", "data", "model") if len(shape) == 3
                            else ("data", "model"))
-        self.shape = dict(zip(self.axis_names,
-                              (2, 16, 16) if multi_pod else (16, 16)))
+        self.shape = dict(zip(self.axis_names, shape))
 
 
 @pytest.mark.parametrize("name", ARCHS)
@@ -156,6 +161,144 @@ def test_fed_train_step_aggregates_A_in_mesh():
     if C > 1:
         np.testing.assert_allclose(np.asarray(A[0]), np.asarray(A[-1]),
                                    rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# make_mesh factory (PR 9): general shapes, validated; production presets
+# are thin wrappers over it
+# ---------------------------------------------------------------------------
+
+def test_make_mesh_builds_small_shapes():
+    m = make_mesh((1, 1))
+    assert m.axis_names == ("data", "model")
+    assert dict(m.shape) == {"data": 1, "model": 1}
+    m = make_mesh((1, 1), axes=("rows", "cols"))
+    assert m.axis_names == ("rows", "cols")
+    m = make_mesh((1, 1, 1))
+    assert m.axis_names == ("pod", "data", "model")
+
+
+@pytest.mark.parametrize("bad", [(), (0, 2), (2, -1)])
+def test_make_mesh_rejects_bad_shapes(bad):
+    with pytest.raises(ValueError, match="positive"):
+        make_mesh(bad)
+
+
+def test_make_mesh_rejects_rank_mismatch_and_unnamed_4d():
+    with pytest.raises(ValueError, match="rank mismatch"):
+        make_mesh((2, 2), axes=("data",))
+    with pytest.raises(ValueError, match="pass axes="):
+        make_mesh((1, 1, 1, 1))
+
+
+def test_make_mesh_too_few_devices_names_the_flag():
+    """The error must tell the user HOW to get the devices (the flag is
+    useless unless exported before jax imports)."""
+    with pytest.raises(RuntimeError, match="xla_force_host_platform"):
+        make_mesh((4096, 4096))
+
+
+# ---------------------------------------------------------------------------
+# Small-mesh divisibility/fallback: (2, 2) and (1, 4) — the serving
+# meshes the multiproc tier runs on
+# ---------------------------------------------------------------------------
+
+SMALL = [(2, 2), (1, 4)]
+
+
+def _axes_size(mesh, ax):
+    axes = ax if isinstance(ax, tuple) else (ax,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+@pytest.mark.parametrize("shape", SMALL)
+def test_param_specs_divisible_after_sanitize_on_small_mesh(shape):
+    cfg = reduced(get_config("deepseek-7b"), n_layers=2, d_model=64)
+    mesh = FakeMesh(shape=shape)
+    params = abstract_model(cfg)
+    specs = sanitize_specs(params, param_specs(cfg, params, mesh), mesh)
+    kept = 0
+    for leaf, spec in zip(
+            jax.tree_util.tree_leaves(params),
+            jax.tree_util.tree_leaves(specs,
+                                      is_leaf=lambda x: isinstance(x, P))):
+        for d, ax in zip(leaf.shape, tuple(spec)):
+            if ax is None:
+                continue
+            assert d % _axes_size(mesh, ax) == 0, (leaf.shape, spec)
+            kept += 1
+    # the fallback must not have replicated EVERYTHING: d_model=64
+    # divides both small meshes, so tensor-parallel survives
+    assert kept > 0
+
+
+@pytest.mark.parametrize("shape", SMALL)
+def test_adapter_specs_fallback_on_small_mesh(shape):
+    cfg = reduced(get_config("deepseek-7b"), n_layers=2, d_model=64)
+    mesh = FakeMesh(shape=shape)
+    ad = abstract_adapters(cfg, AdapterConfig(rank=4))
+    specs = sanitize_specs(ad, adapter_specs(cfg, ad, mesh), mesh)
+    for leaf, spec in zip(
+            jax.tree_util.tree_leaves(ad),
+            jax.tree_util.tree_leaves(specs,
+                                      is_leaf=lambda x: isinstance(x, P))):
+        for d, ax in zip(leaf.shape, tuple(spec)):
+            assert ax is None or d % _axes_size(mesh, ax) == 0, (
+                leaf.shape, spec)
+
+
+@pytest.mark.parametrize("shape", SMALL)
+def test_paged_cache_specs_page_and_head_axes(shape):
+    """Page axis over dp when n_pages divides, KV heads over "model"
+    when they divide — and replicated fallback when not."""
+    import functools
+    from repro.models.transformer import init_paged_cache
+    cfg = reduced(get_config("deepseek-7b"), n_layers=2, d_model=64)
+    mesh = FakeMesh(shape=shape)
+    dsize, msize = mesh.shape["data"], mesh.shape["model"]
+    for n_pages in (8, 9):                       # 9 never divides (2,2)
+        cache = jax.eval_shape(functools.partial(
+            init_paged_cache, cfg=cfg, n_pages=n_pages, page_size=4,
+            dtype=jnp.float32))
+        specs = paged_cache_specs(cfg, cache, mesh)
+        for leaf, spec in zip(
+                jax.tree_util.tree_leaves(cache),
+                jax.tree_util.tree_leaves(
+                    specs, is_leaf=lambda x: isinstance(x, P))):
+            if leaf.ndim != 5:
+                continue
+            full = tuple(spec) + (None,) * (5 - len(spec))
+            want_page = "data" if n_pages % dsize == 0 else None
+            want_head = "model" if leaf.shape[3] % msize == 0 else None
+            assert full[1] == want_page, (n_pages, shape, full)
+            assert full[3] == want_head, (n_pages, shape, full)
+
+
+@pytest.mark.parametrize("shape", SMALL)
+def test_serving_table_specs_replicate_rows_shard_col_B(shape):
+    """Slot tables never shard over "data"; col-parallel B tables carry
+    "model" on their output dim when it divides."""
+    from repro.core.adapters import init_adapters
+    from repro.serving import AdapterRegistry
+    cfg = reduced(get_config("deepseek-7b"), n_layers=2, d_model=64)
+    base = init_adapters(jax.random.PRNGKey(0), cfg,
+                         AdapterConfig(mode="fedsa", rank=4))
+    reg = AdapterRegistry({"adapters": base}, n_slots=2)
+    mesh = FakeMesh(shape=shape)
+    specs = serving_table_specs(reg.tables, reg.local_tree, mesh)
+    saw_model = False
+    for path, spec in jax.tree_util.tree_leaves_with_path(
+            specs, is_leaf=lambda x: isinstance(x, P)):
+        flat = [a for ax in tuple(spec) if ax is not None
+                for a in (ax if isinstance(ax, tuple) else (ax,))]
+        assert "data" not in flat, (path, spec)
+        if "model" in flat:
+            name = str(path[-1].key) if hasattr(path[-1], "key") else ""
+            assert name == "B", (path, spec)
+            assert tuple(spec)[-1] == "model"
+            saw_model = True
+    if mesh.shape["model"] > 1:
+        assert saw_model, "no B table picked up the model axis"
 
 
 @pytest.mark.parametrize("name", ["falcon-mamba-7b", "qwen3-32b"])

@@ -104,10 +104,11 @@ def test_prefetcher_promotes_and_dedups(tmp_path):
     pf = Prefetcher(store)
     cold = [c for c in range(8) if store.tier_of(c) == "cold"]
     assert pf.request(cold[0])
-    assert pf.drain()
+    assert pf.drain(), ("prefetcher did not go idle within the drain "
+                        "timeout (worker thread starved or wedged)")
     assert store.tier_of(cold[0]) == "host"
     assert not pf.request(cold[0])           # already host-resident
-    pf.stop()
+    assert pf.stop(), "prefetcher thread failed to join within timeout"
 
 
 # ---------------------------------------------------------------------------
@@ -192,7 +193,9 @@ def test_prefetch_converts_cold_miss_to_host_hit(tmp_path):
                     if reg._store.tier_of(i) == "cold")
     assert reg.prefetch(cold_cid) is True
     assert reg.prefetch(cold_cid) is False   # deduped while pending/host
-    assert reg.drain_prefetch()
+    assert reg.drain_prefetch(), ("prefetch did not complete within the "
+                                  "drain timeout (worker thread starved "
+                                  "or wedged)")
     before = reg.stats["tier_cold_misses"]
     reg.acquire(cold_cid)
     reg.release(cold_cid)
