@@ -19,7 +19,7 @@ def main() -> None:
 
     from benchmarks import (fig2_similarity, nlg_generation, roofline,
                             serving_chaos, serving_decode_fused,
-                            serving_refresh, serving_sgmv,
+                            serving_prefix, serving_refresh, serving_sgmv,
                             serving_sharded, serving_throughput,
                             serving_tiering, table1_accuracy, table2_comm,
                             table3_heterogeneity, table4_clients,
@@ -48,6 +48,11 @@ def main() -> None:
             requests=12 if q else 18, new_tokens=6 if q else 8),
         "tiering": lambda: serving_tiering.main(
             accesses=800 if q else 2000),
+        "prefix": lambda: serving_prefix.main(
+            requests=12 if q else 24,
+            prefix_tokens=224 if q else 448,
+            max_seq=256 if q else 512,
+            n_pages=44 if q else 72),
         # needs XLA_FLAGS=--xla_force_host_platform_device_count=N set
         # before any jax import (the module sets it only when unset, and
         # the sibling imports above may initialize jax first)

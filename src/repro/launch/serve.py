@@ -92,11 +92,20 @@ def run_multi_tenant(args, acfg):
     engine = ServingEngine(cfg, params, acfg, reg, scfg,
                            metrics=metrics, trace=trace)
     rng = np.random.default_rng(0)
-    for r in range(args.requests):
-        plen = int(rng.integers(4, 33))          # heterogeneous prompts
-        engine.submit(r % args.clients,
-                      rng.integers(0, cfg.vocab_size, plen),
-                      max_new_tokens=16)
+    if scfg.prefix_cache:
+        # shared-prefix traffic: every client front-loads the same
+        # system prompt, suffixes diverge — the shape the cache serves
+        head = rng.integers(0, cfg.vocab_size, 2 * scfg.page_size)
+        for r in range(args.requests):
+            tail = rng.integers(0, cfg.vocab_size, int(rng.integers(4, 13)))
+            engine.submit(r % args.clients, np.concatenate([head, tail]),
+                          max_new_tokens=16)
+    else:
+        for r in range(args.requests):
+            plen = int(rng.integers(4, 33))      # heterogeneous prompts
+            engine.submit(r % args.clients,
+                          rng.integers(0, cfg.vocab_size, plen),
+                          max_new_tokens=16)
     rep = engine.run()
     if rep["sharded"]:
         d, m = rep["mesh_shape"]
@@ -128,6 +137,15 @@ def run_multi_tenant(args, acfg):
               f"{rep['tier_promotions']} promotions, "
               f"{rep['tier_demotions']} demotions, "
               f"occupancy {rep['tier_occupancy']}")
+    if scfg.prefix_cache:
+        hr = rep["prefix_hit_rate"]
+        rate = f"{hr:.2f}" if hr is not None else "n/a"
+        print(f"prefix cache: {rep['prefix_hits']} hits (rate {rate}), "
+              f"{rep['prefix_hit_tokens']} tokens reused, "
+              f"{rep['pages_shared']} pages shared, "
+              f"{rep['cow_copies']} CoW copies, "
+              f"{rep['prefix_evictions']} evictions, "
+              f"{rep['prefix_entries']} entries resident")
     if rep["shed_requests"] or rep["degraded_served"] \
             or rep["deadline_retired"]:
         print(f"degradation: {rep['shed_requests']} shed, "
@@ -210,6 +228,11 @@ def main():
     ap.add_argument("--kv-layout", default="auto",
                     choices=["auto", "paged", "dense"])
     ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--n-pages", type=int, default=None,
+                    help="KV pool size in pages (paged layout only; "
+                         "default: worst case for max_batch × max_seq). "
+                         "Undersize it to exercise prefix-cache "
+                         "eviction / admission backpressure")
     ap.add_argument("--attn-backend", default="xla",
                     choices=["xla", "pallas"])
     ap.add_argument("--lora-backend", default="jnp",
@@ -252,6 +275,16 @@ def main():
                     help="serve the base model (degraded) when a "
                          "request can't acquire an adapter slot within "
                          "this many seconds (default: disabled)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="--multi-tenant paged runs: cache page-aligned "
+                         "prompt-prefix KV per adapter version and serve "
+                         "repeats by pointing new rows at the cached "
+                         "pages (copy-on-write; repro.serving.prefix). "
+                         "The launcher workload switches to shared-"
+                         "prefix prompts so the cache has something "
+                         "to hit")
+    ap.add_argument("--prefix-chunk-pages", type=int, default=1,
+                    help="pages per cached prefix chunk (>= 1)")
     ap.add_argument("--chaos-seed", type=int, default=None,
                     help="--live-refresh only: drive the run through "
                          "repro.failures.default_plan(seed) — client "

@@ -196,6 +196,64 @@ def attn_decode_paged(cfg, p, ad, acfg, x, pos, k_pages, v_pages,
     return y, k_row, v_row
 
 
+def suffix_attention(q, k_cache, v_cache, q_pos, *, window=None):
+    """Multi-token attention against a cache with per-row positions.
+
+    q: (B, L, H, hd); caches: (B, T, Hkv, hd); q_pos: (B, L) int32
+    absolute position of each query token (the cache holds valid entries
+    at [0, q_pos] per query). Generalizes ``decode_attention`` to L
+    queries per row — the suffix-only prefill path, where every row
+    resumes from its own cached-prefix offset and the shared (S,)/(T,)
+    position vectors of ``blockwise_attention`` no longer fit.
+    """
+    B, L, H, hd = q.shape
+    T, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, L, Hkv, G, hd)
+    s = jnp.einsum("blhgd,bshd->bhgls", qg.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * hd ** -0.5
+    idx = jnp.arange(T)[None, None, :]              # (1, 1, T)
+    valid = idx <= q_pos[:, :, None]                # (B, L, T)
+    if window is not None:
+        valid &= (q_pos[:, :, None] - idx) < window
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgls,bshd->blhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, L, H * hd).astype(v_cache.dtype)
+
+
+def attn_prefill_suffix_paged(cfg, p, ad, acfg, x, prefix_lens, k_pages,
+                              v_pages, block_tables, *, window=None,
+                              vera_shared=None):
+    """Suffix-only prefill against a paged cache holding the prefix.
+
+    x: (B, L, d) suffix embeddings; prefix_lens: (B,) cached prompt
+    tokens per row; the pools already hold each row's prefix KV via its
+    block table (possibly pages SHARED with other rows). The pools are
+    read-only here — shared prefix pages must never be written — so the
+    suffix K/V is inserted into the *gathered* logical view for
+    attention and returned for the caller's post-scan scatter into the
+    row's private pages.
+
+    Returns (y, k_suf (B, L, Hkv, hd), v_suf (B, L, Hkv, hd)).
+    """
+    B, L, _ = x.shape
+    q, k, v = _qkv(cfg, p, ad, acfg, x, x, vera_shared)
+    pos = prefix_lens[:, None] + jnp.arange(L)[None, :]   # (B, L)
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    k_suf = k.astype(k_pages.dtype)
+    v_suf = v.astype(v_pages.dtype)
+    bidx = jnp.arange(B)[:, None]
+    ks = paged_gather(k_pages, block_tables).at[bidx, pos].set(k_suf)
+    vs = paged_gather(v_pages, block_tables).at[bidx, pos].set(v_suf)
+    out = suffix_attention(q, ks, vs, pos, window=window)
+    sc = acfg.scaling if acfg is not None else 1.0
+    vs_ = (vera_shared or {})
+    y = adapted(p["wo"], maybe(ad, "wo"), out, sc, vs_.get("wo"))
+    return y, k_suf, v_suf
+
+
 def attn_forward(cfg, p, ad, acfg, x, positions, *, causal=True,
                  window=None, kv_x=None, rope=True, vera_shared=None):
     """Full-sequence attention (training / prefill / encoder / cross)."""

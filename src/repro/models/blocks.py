@@ -15,9 +15,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.attention import (attn_decode, attn_decode_paged,
-                                    attn_forward, cross_attn_decode,
-                                    init_attention, init_mla, mla_decode,
-                                    mla_forward)
+                                    attn_forward, attn_prefill_suffix_paged,
+                                    cross_attn_decode, init_attention,
+                                    init_mla, mla_decode, mla_forward)
 from repro.models.mamba import init_mamba, mamba_forward, mamba_step
 from repro.models.mamba2 import init_mamba2, mamba2_forward, mamba2_step
 from repro.models.mlp import init_mlp, mlp_forward
@@ -144,6 +144,34 @@ def block_forward(cfg, p, ad, acfg, x, positions, kind, *, window=None,
         y = mlp_forward(cfg, p["mlp"], maybe(ad, "mlp"), acfg, h_mlp,
                         vera_shared=vera_shared)
     return x + y, cache, aux
+
+
+def block_prefill_suffix(cfg, p, ad, acfg, x, prefix_lens, cache, *,
+                         block_tables, window=None, vera_shared=None):
+    """Suffix-only prefill through one paged attn block.
+
+    x: (B, L, d) hidden states of the divergent suffix; ``cache`` holds
+    the segment's page pools with each row's PREFIX KV already resident
+    via ``block_tables``. Only the ``attn`` kind exists here — the paged
+    layout admits no other (``paged_unsupported_reason``). Returns
+    (x, {"k", "v"}) with the suffix K/V (B, L, Hkv, hd) for the caller's
+    post-scan scatter into private pages.
+    """
+    h_in = rms_norm(x, p["ln1"], cfg.norm_eps)
+    y, k, v = attn_prefill_suffix_paged(cfg, p["attn"], maybe(ad, "attn"),
+                                        acfg, h_in, prefix_lens,
+                                        cache["k"], cache["v"],
+                                        block_tables, window=window,
+                                        vera_shared=vera_shared)
+    x = x + y
+    h_mlp = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        y, _ = moe_forward(cfg, p["moe"], maybe(ad, "moe"), acfg, h_mlp,
+                           vera_shared=vera_shared)
+    else:
+        y = mlp_forward(cfg, p["mlp"], maybe(ad, "mlp"), acfg, h_mlp,
+                        vera_shared=vera_shared)
+    return x + y, {"k": k, "v": v}
 
 
 # ---------------------------------------------------------------------------

@@ -23,7 +23,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.models.blocks import block_decode, block_forward, init_block
+from repro.models.blocks import (block_decode, block_forward, init_block,
+                                 block_prefill_suffix)
 from repro.models.common import chunked_cross_entropy, embed_init, maybe, rms_norm
 
 
@@ -423,6 +424,58 @@ def prefill_paged(cfg, params, adapters, acfg, tokens, lengths, cache,
              "v": _scatter_pages(e["v"], b["v"], ids, page)})
     last = jnp.take_along_axis(
         hidden, (lengths - 1)[:, None, None].astype(jnp.int32), axis=1)
+    logits = (last[:, 0] @ head_weight(cfg, params)).astype(jnp.float32)
+    return logits, new_cache
+
+
+def prefill_paged_suffix(cfg, params, adapters, acfg, tokens, lengths,
+                         prefix_lens, cache, block_tables, dst_pages, *,
+                         window=None):
+    """Suffix-only prefill for rows whose prompt prefix is already paged
+    in (the prefix-cache hit path — see ``repro.serving.prefix``).
+
+    tokens: (G, L) divergent suffixes right-padded to the bucket length
+    (L a multiple of the page size); lengths: (G,) true suffix lengths
+    (>= 1); prefix_lens: (G,) cached tokens per row — row g's suffix
+    token j sits at absolute position ``prefix_lens[g] + j``, and its
+    attention reads the prefix KV through ``block_tables`` (G, P).
+    dst_pages: (G, L // page) PRIVATE physical pages receiving the
+    suffix K/V — 0 (the write-off page) for padding rows and for
+    full-prompt hits, whose one "suffix" token's K/V already sits in the
+    shared pages. Shared prefix pages are never written: the pools ride
+    the layer scans read-only and only ``dst_pages`` is scattered.
+
+    Returns (next-token logits (G, V) f32, updated cache).
+    """
+    vera_shared = maybe(adapters, "vera_shared") if adapters else None
+    window = window if window is not None else cfg.sliding_window
+    x = params["embed"][tokens]
+    page = cache[0]["k"].shape[2]
+    new_cache = []
+    for i, seg in enumerate(segments(cfg)):
+        sp = params["segments"][i]
+        sad = _seg_adapters(adapters, i)
+
+        def body(x, xs):
+            if sad is not None:
+                p, ad, ci = xs
+            else:
+                p, ci = xs
+                ad = None
+            x, rows = block_prefill_suffix(
+                cfg, p, ad, acfg, x, prefix_lens, ci,
+                block_tables=block_tables, window=window,
+                vera_shared=vera_shared)
+            return x, rows
+
+        xs = (sp, sad, cache[i]) if sad is not None else (sp, cache[i])
+        x, rows = jax.lax.scan(body, x, xs)  # rows["k"]: (n, G, L, Hkv, hd)
+        new_cache.append(
+            {"k": _scatter_pages(cache[i]["k"], rows["k"], dst_pages, page),
+             "v": _scatter_pages(cache[i]["v"], rows["v"], dst_pages, page)})
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    last = jnp.take_along_axis(
+        x, (lengths - 1)[:, None, None].astype(jnp.int32), axis=1)
     logits = (last[:, 0] @ head_weight(cfg, params)).astype(jnp.float32)
     return logits, new_cache
 

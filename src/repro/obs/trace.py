@@ -50,6 +50,11 @@ EVENT_SCHEMA = {
     # adapter tiering vocabulary (PR 8 — see docs/serving.md)
     "adapter_prefetch": ("client",),
     "tier_miss": ("client", "tier"),
+    "tier_prestage": ("client", "slot"),
+    # prefix-cache vocabulary (PR 10 — see docs/serving.md §7)
+    "prefix_hit": ("rid", "client", "tokens", "pages"),
+    "cow_copy": ("row", "page"),
+    "prefix_evict": ("pages",),
 }
 
 

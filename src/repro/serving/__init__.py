@@ -38,6 +38,7 @@ architecture guide for the whole subsystem.
 """
 from repro.serving.config import ServingConfig
 from repro.serving.engine import ServingEngine
+from repro.serving.prefix import PrefixCache
 from repro.serving.refresh import (AdapterFeed, snapshot_clients,
                                    train_and_serve)
 from repro.serving.registry import (AdapterRegistry, gather_adapters,
@@ -50,7 +51,8 @@ from repro.serving.store import AdapterStore, Prefetcher
 
 __all__ = ["AdapterFeed", "AdapterRegistry", "AdapterStore", "Prefetcher",
            "ServingConfig", "gather_adapters", "gather_adapters_versioned",
-           "PagePool", "Request", "Scheduler", "Sequence", "ServingEngine",
+           "PagePool", "PrefixCache", "Request", "Scheduler", "Sequence",
+           "ServingEngine",
            "bucket_len", "collective_flip_check", "prefill_batches",
            "serving_mesh", "shard_cache", "shard_params", "shard_tables",
            "snapshot_clients", "train_and_serve"]

@@ -93,6 +93,15 @@ class ServingConfig:
       ``prefetch_lookahead`` queued admits whose adapters the engine
                              prefetches host-ward each tick (0 = off)
 
+    prefix cache (repro.serving.prefix; docs/serving.md §7)
+      ``prefix_cache``       reuse KV pages across rows whose (adapter
+                             bytes, token prefix) match — suffix-only
+                             prefill + copy-on-write decode. Paged
+                             layout only; rejected with dense or
+                             sharded serving
+      ``prefix_chunk_pages`` pages per cached chunk (>= 1): smaller
+                             chunks match more, larger chunks hash less
+
     mesh sharding (repro.serving.sharded; docs/serving.md)
       ``shard_serving``      partition the engine over a ("data",
                              "model") device mesh: base weights
@@ -122,6 +131,8 @@ class ServingConfig:
     host_ring_slots: int | None = None
     cold_dir: str | None = None
     prefetch_lookahead: int = 0
+    prefix_cache: bool = False
+    prefix_chunk_pages: int = 1
     shard_serving: bool = False
     mesh_shape: tuple | None = None
 
@@ -166,6 +177,21 @@ class ServingConfig:
                              "(host_ring_slots/cold_dir both unset) can "
                              "never promote anything — set a tier bound "
                              "or drop the lookahead")
+        if self.prefix_chunk_pages < 1:
+            raise ValueError(f"prefix_chunk_pages="
+                             f"{self.prefix_chunk_pages}: need >= 1")
+        if self.prefix_cache:
+            if self.kv_layout == "dense":
+                raise ValueError("prefix_cache shares physical KV pages "
+                                 "via the block table; kv_layout='dense' "
+                                 "has no pages to share")
+            if self.shard_serving:
+                raise ValueError(
+                    "prefix_cache with shard_serving=True is not "
+                    "supported: a cached prefix admitted on another row "
+                    "shard would reference foreign page-shard KV, "
+                    "breaking the shard-local page locality the mesh "
+                    "layout depends on")
         if self.mesh_shape is not None and not self.shard_serving:
             raise ValueError(f"mesh_shape={self.mesh_shape} without "
                              "shard_serving=True — a mesh shape only "
@@ -225,6 +251,8 @@ class ServingConfig:
             "host_ring_slots": "host_ring_slots",
             "cold_dir": "cold_dir",
             "prefetch_lookahead": "prefetch_lookahead",
+            "prefix_cache": "prefix_cache",
+            "prefix_chunk_pages": "prefix_chunk_pages",
             "shard_serving": "shard_serving",
             "mesh_shape": "mesh_shape",
         }

@@ -74,9 +74,11 @@ from repro.models.transformer import (decode_scan, decode_scan_paged,
                                       decode_step, decode_step_paged,
                                       init_cache, init_paged_cache,
                                       paged_unsupported_reason, prefill,
-                                      prefill_paged, segments)
+                                      prefill_paged, prefill_paged_suffix,
+                                      segments)
 from repro.obs import MetricsRegistry, annotate, named_scope
 from repro.serving.config import FIELD_NAMES, ServingConfig
+from repro.serving.prefix import PrefixCache
 from repro.serving.registry import (gather_adapters,
                                     gather_adapters_versioned)
 from repro.serving.scheduler import (PagePool, Scheduler, bucket_len,
@@ -217,6 +219,21 @@ class ServingEngine:
             self._c_degraded = m.counter(
                 "repro_serve_degraded_total",
                 "requests served base-model (degraded)")
+            self._c_prefix_hits = m.counter(
+                "repro_serve_prefix_hits_total",
+                "admissions that reused cached prefix pages")
+            self._c_prefix_tokens = m.counter(
+                "repro_serve_prefix_tokens_total",
+                "prompt tokens skipped via prefix reuse")
+            self._c_pages_shared = m.counter(
+                "repro_serve_pages_shared_total",
+                "physical pages attached by refcount instead of alloc")
+            self._c_cow = m.counter(
+                "repro_serve_cow_copies_total",
+                "copy-on-write page copies before a shared-page write")
+            self._c_prefix_evict = m.counter(
+                "repro_serve_prefix_evict_total",
+                "cached prefix entries evicted under pool pressure")
         # registry-side events/latency report through the same sinks
         if registry.trace is None:
             registry.trace = trace
@@ -224,6 +241,10 @@ class ServingEngine:
             registry.metrics = self.metrics
         self.tick = 0                   # step() count (trace tick ids)
         self._shed_seen = 0             # scheduler.shed mirrored to obs
+        # scheduler/prefix lifetime counters mirrored into obs counters
+        # by delta (same pattern as _sync_shed_counter)
+        self._prefix_seen = {"prefix_hits": 0, "prefix_hit_tokens": 0,
+                             "pages_shared": 0, "evictions": 0}
 
         # mesh-sharded serving (repro.serving.sharded): base weights
         # tensor-parallel over "model", page pool / decode rows over
@@ -252,6 +273,12 @@ class ServingEngine:
             self.mesh = serving_mesh(config.mesh_shape)
             self.params = params = shard_params(cfg, params, self.mesh)[0]
             registry.place(self.mesh, shard_tables(registry, self.mesh))
+        if config.prefix_cache and kv_layout != "paged":
+            # config rejects explicit dense; this catches auto-resolved
+            # dense (model families the paged layout cannot serve)
+            raise ValueError(
+                f"prefix_cache needs the paged KV layout, but this model "
+                f"resolved kv_layout='dense' ({paged_reason})")
         if kv_layout == "paged":
             self.page_size = page_size
             # table width covers the largest prefill bucket (pow2 >= max_seq)
@@ -264,14 +291,20 @@ class ServingEngine:
             # contiguous block of pages
             n_pages = -(-n_pages // n_row_shards) * n_row_shards
             self.pool = PagePool(n_pages, page_size, n_shards=n_row_shards)
+            self.prefix = (PrefixCache(self.pool,
+                                       chunk_pages=config.prefix_chunk_pages,
+                                       trace=trace)
+                           if config.prefix_cache else None)
             self.scheduler = Scheduler(max_batch, pool=self.pool,
                                        table_pages=self.table_pages,
                                        trace=trace, max_queue=max_queue,
-                                       degrade_after_s=degrade_after_s)
+                                       degrade_after_s=degrade_after_s,
+                                       prefix=self.prefix)
             self.cache = init_paged_cache(cfg, n_pages, page_size,
                                           cache_dtype)
         else:
             self.pool = None
+            self.prefix = None
             self.scheduler = Scheduler(max_batch, trace=trace,
                                        max_queue=max_queue,
                                        degrade_after_s=degrade_after_s)
@@ -348,6 +381,30 @@ class ServingEngine:
                                                   bts)
                 return _rows(jnp.argmax(logits, -1).astype(jnp.int32)), cache
 
+        def _prefill_suffix_fn(tables, slots, bufs, tokens, lengths,
+                               prefix_lens, bts, dst, cache):
+            # suffix-only prefill for prefix-cache hits: the rows' prefix
+            # KV is already resident in shared pages reachable through
+            # bts; only the divergent suffix runs the model. Never
+            # sharded — prefix_cache + shard_serving is rejected at
+            # config time, so no _rows constraints here.
+            engine.prefill_retraces += 1
+            with named_scope("serve.prefill_suffix"):
+                ad = _gather(tables, slots, bufs)
+                with grouped_lora_backend(engine.lora_backend):
+                    logits, cache = prefill_paged_suffix(
+                        cfg, params, ad, acfg, tokens, lengths,
+                        prefix_lens, cache, bts, dst)
+                return jnp.argmax(logits, -1).astype(jnp.int32), cache
+
+        def _copy_page_fn(cache, src, dst):
+            # copy-on-write: duplicate physical page src into dst across
+            # every layer pool of every segment (one fused dispatch)
+            with named_scope("serve.cow_copy"):
+                return [{"k": e["k"].at[:, dst].set(e["k"][:, src]),
+                         "v": e["v"].at[:, dst].set(e["v"][:, src])}
+                        for e in cache]
+
         def _decode_dense_fn(tables, slots, bufs, toks, pos, cache):
             engine.decode_retraces += 1
             with named_scope("serve.decode_dense"):
@@ -410,6 +467,9 @@ class ServingEngine:
         # aliases; the dense scan-carried cache benefits where XLA can)
         if kv_layout == "paged":
             self._prefill = jax.jit(_prefill_paged_fn, donate_argnums=(6,))
+            self._prefill_suffix = jax.jit(_prefill_suffix_fn,
+                                           donate_argnums=(8,))
+            self._copy_page = jax.jit(_copy_page_fn, donate_argnums=(0,))
             self._decode = jax.jit(_decode_paged_fn, donate_argnums=(6,))
             self._decode_scan = jax.jit(_decode_scan_paged_fn,
                                         static_argnums=(8,),
@@ -432,6 +492,7 @@ class ServingEngine:
         self.finished = {}
         self.deadline_retired = 0
         self.degraded_served = 0
+        self.cow_copies = 0
         self.decoded_tokens = self.prefill_tokens = self.decode_steps = 0
         self.prefilled_requests = self.prefill_batch_count = 0
         self.host_syncs = 0             # steps that ran a decode phase
@@ -449,6 +510,11 @@ class ServingEngine:
         self._t0 = None
         self.registry.hits = self.registry.misses = 0
         self.registry.evictions = 0
+        s = self.scheduler
+        s.prefix_lookups = s.prefix_hits = 0
+        s.prefix_hit_tokens = s.pages_shared = 0
+        for k in self._prefix_seen:
+            self._prefix_seen[k] = 0
         if hasattr(self.registry, "reset_tier_stats"):
             self.registry.reset_tier_stats()
 
@@ -481,6 +547,24 @@ class ServingEngine:
                 self._c_shed.inc(d)
         self._shed_seen = self.scheduler.shed
 
+    def _sync_prefix_counters(self):
+        """Mirror the scheduler's/cache's lifetime prefix counters into
+        the obs counters by delta (hits/shares land inside admit, evicts
+        inside evict_for — neither holds the metrics handles)."""
+        if self.prefix is None:
+            return
+        s = self.scheduler
+        pairs = (("prefix_hits", s.prefix_hits, "_c_prefix_hits"),
+                 ("prefix_hit_tokens", s.prefix_hit_tokens,
+                  "_c_prefix_tokens"),
+                 ("pages_shared", s.pages_shared, "_c_pages_shared"),
+                 ("evictions", self.prefix.evictions, "_c_prefix_evict"))
+        for key, value, counter in pairs:
+            d = value - self._prefix_seen[key]
+            if d > 0 and self.metrics is not None:
+                getattr(self, counter).inc(d)
+            self._prefix_seen[key] = value
+
     # -- serving loop -------------------------------------------------------
     def step(self):
         """One scheduler tick: refresh adapters, admit/prefill new
@@ -500,6 +584,7 @@ class ServingEngine:
         self._refresh()
         admitted = self.scheduler.admit(self.registry)
         self._sync_shed_counter()      # admit's overdue sweep may shed
+        self._sync_prefix_counters()   # hits/shares/evictions in admit
         # the queue heads left behind are the NEXT admits: issue their
         # host-ward prefetches now, so the promotion I/O overlaps the
         # prefill + decode device work below instead of stalling a
@@ -605,6 +690,8 @@ class ServingEngine:
             self._pages_window_reserved += sum(
                 self.pool.pages_needed(s.pos + min(T, s.budget))
                 - self.pool.pages_needed(s.pos) for s in active.values())
+        if self.kv_layout == "paged":
+            self._cow_pass(T)
         pos_before = {row: s.pos for row, s in active.items()}
         with annotate("serve.decode_scan"):
             if self.kv_layout == "paged":
@@ -759,7 +846,25 @@ class ServingEngine:
 
     def _prefill_paged_groups(self, admitted):
         """Chunked batched prefill: one forward per length bucket, K/V
-        written straight into pages through the block table."""
+        written straight into pages through the block table. Prefix-cache
+        hits split off into suffix-only groups (the cached prefix KV is
+        already resident — only the divergent tail runs the model); after
+        prefill every admitted prompt's pages register in the cache so
+        later admissions can share them."""
+        misses = [s for s in admitted if s.prefix_len == 0]
+        hits = [s for s in admitted if s.prefix_len > 0]
+        self._prefill_paged_full(misses)
+        self._prefill_paged_suffix(hits)
+        if self.prefix is not None:
+            for seq in admitted:
+                if seq.prefix_ns is None:      # cache-bypass fallback row
+                    continue
+                n = len(seq.request.prompt)
+                self.prefix.insert(seq.prefix_ns, seq.request.prompt,
+                                   seq.pages[:self.pool.pages_needed(n)])
+            self._sync_prefix_counters()
+
+    def _prefill_paged_full(self, admitted):
         for L, group in prefill_batches(admitted, min_len=self.page_size):
             Gp = bucket_len(len(group))          # pad batch to pow2 too
             toks = np.zeros((Gp, L), np.int32)
@@ -788,6 +893,67 @@ class ServingEngine:
             if self.trace is not None:
                 self.trace.emit("prefill_batch", bucket=L, rows=len(group),
                                 wall_s=wall)
+            for g, seq in enumerate(group):
+                self._account_prefill(seq, int(tok0[g]))
+
+    def _prefill_paged_suffix(self, hits):
+        """Suffix-only prefill for prefix-cache hits, bucketed by suffix
+        length. A full-prompt hit re-runs only its LAST prompt token (the
+        logits for the first generated token need its hidden state; the
+        recomputed K/V lands on the write-off page — the cached copy
+        stays authoritative). Partial hits write suffix K/V into their
+        private pages via dst; the shared prefix pages are read-only."""
+        groups = {}
+        for seq in hits:
+            n = len(seq.request.prompt)
+            l = n - seq.prefix_len if seq.prefix_len < n else 1
+            groups.setdefault(bucket_len(l, self.page_size),
+                              []).append(seq)
+        for L, group in sorted(groups.items()):
+            Gp = bucket_len(len(group))
+            toks = np.zeros((Gp, L), np.int32)
+            lens = np.ones((Gp,), np.int32)
+            plens = np.zeros((Gp,), np.int32)
+            slots = np.zeros((Gp,), np.int32)
+            bufs = np.zeros((Gp,), np.int32)
+            dst = np.zeros((Gp, L // self.page_size), np.int32)
+            max_need = L
+            for g, seq in enumerate(group):
+                p = seq.request.prompt
+                n = len(p)
+                start = n - 1 if seq.prefix_len >= n else seq.prefix_len
+                suf = p[start:]
+                toks[g, :len(suf)] = suf
+                lens[g] = len(suf)
+                plens[g] = start
+                slots[g] = seq.slot
+                bufs[g] = seq.buf
+                if seq.prefix_len < n:
+                    # partial hit: suffix starts on a page boundary; its
+                    # pages (beyond the shared prefix) take the K/V
+                    pi0 = start // self.page_size
+                    own = seq.pages[pi0:self.pool.pages_needed(n)]
+                    dst[g, :len(own)] = own
+                max_need = max(max_need, start + L)
+            npg = self._bucketed_npages(max_need)
+            bts = np.zeros((Gp, npg), np.int32)
+            for g, seq in enumerate(group):
+                bts[g] = self.scheduler.block_tables[seq.row][:npg]
+            t0 = time.perf_counter()
+            with annotate("serve.prefill_suffix"):
+                tok0, self.cache = self._prefill_suffix(
+                    self.registry.tables, jnp.asarray(slots),
+                    jnp.asarray(bufs), jnp.asarray(toks),
+                    jnp.asarray(lens), jnp.asarray(plens),
+                    jnp.asarray(bts), jnp.asarray(dst), self.cache)
+                tok0 = np.asarray(tok0)
+            wall = time.perf_counter() - t0
+            self.prefill_batch_count += 1
+            if self.metrics is not None:
+                self._h_prefill.observe(wall)
+            if self.trace is not None:
+                self.trace.emit("prefill_batch", bucket=L,
+                                rows=len(group), wall_s=wall)
             for g, seq in enumerate(group):
                 self._account_prefill(seq, int(tok0[g]))
 
@@ -828,10 +994,54 @@ class ServingEngine:
         return min(-(-self.max_seq // self.page_size),
                    self._page_bucket(self.pool.pages_needed(n_tokens)))
 
+    def _cow_pass(self, T):
+        """Copy-on-write sweep: before a decode window writes positions
+        [pos, pos + min(T, budget)) for each active row, any touched page
+        whose refcount exceeds 1 (shared with the prefix cache or a
+        sibling row) is copied into a private page and the row's block
+        table repointed — the decode kernels then never mutate a shared
+        page. The page an admission can ever need to CoW is its partial
+        tail page, pre-reserved in ``cow_stash`` at admit; the alloc
+        fallback covers stash-less rows defensively."""
+        if self.prefix is None:
+            return
+        for seq in self.scheduler.active.values():
+            if seq.done or seq.budget <= 0:
+                continue
+            lo = seq.pos // self.page_size
+            hi = (seq.pos + min(T, seq.budget) - 1) // self.page_size
+            for pi in range(lo, min(hi, len(seq.pages) - 1) + 1):
+                phys = seq.pages[pi]
+                if phys == 0 or self.pool.refcount(phys) <= 1:
+                    continue
+                if seq.cow_stash:
+                    dst = seq.cow_stash.pop()
+                else:
+                    got = self.pool.alloc(1)
+                    if got is None:
+                        self.prefix.evict_for(self.pool, 1)
+                        got = self.pool.alloc(1)
+                    if got is None:
+                        raise RuntimeError(
+                            "copy-on-write found no free page — the "
+                            "admission stash invariant was violated")
+                    dst = got[0]
+                self.cache = self._copy_page(self.cache, jnp.int32(phys),
+                                             jnp.int32(dst))
+                self.pool.release([phys])        # drop this row's share
+                seq.pages[pi] = dst
+                self.scheduler.block_tables[seq.row, pi] = dst
+                self.cow_copies += 1
+                if self.metrics is not None:
+                    self._c_cow.inc()
+                if self.trace is not None:
+                    self.trace.emit("cow_copy", row=seq.row, page=phys)
+
     def _decode_paged_step(self):
         """Grouped decode through the block table, truncated to the page
         bucket covering the deepest active row (so short batches attend
         over a fraction of max_seq; bounded retraces)."""
+        self._cow_pass(1)
         max_pos = max(s.pos for s in self.scheduler.active.values())
         npg = self._bucketed_npages(max_pos + 1)
         bts = jnp.asarray(self.scheduler.block_tables[:, :npg])
@@ -976,7 +1186,20 @@ class ServingEngine:
             "tier_promotions": rs.get("promotions", 0),
             "tier_demotions": rs.get("demotions", 0),
             "prefetches": rs.get("prefetches", 0),
+            "tier_prestages": rs.get("tier_prestages", 0),
             "tier_occupancy": rs.get("tier_occupancy"),
+            # prefix cache (repro.serving.prefix; zeros/None when off)
+            "prefix_hits": self.scheduler.prefix_hits,
+            "prefix_hit_rate": (self.scheduler.prefix_hits
+                                / self.scheduler.prefix_lookups
+                                if self.scheduler.prefix_lookups else None),
+            "prefix_hit_tokens": self.scheduler.prefix_hit_tokens,
+            "pages_shared": self.scheduler.pages_shared,
+            "cow_copies": self.cow_copies,
+            "prefix_evictions": (self.prefix.evictions
+                                 if self.prefix is not None else 0),
+            "prefix_entries": (len(self.prefix)
+                               if self.prefix is not None else 0),
             # robustness accounting: every submitted request is exactly
             # one of finished (incl. deadline-retired), shed, or still
             # in flight — serving_chaos.py asserts the identity

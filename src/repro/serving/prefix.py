@@ -1,0 +1,157 @@
+"""Automatic prefix cache for the paged KV pool.
+
+Prompts are chunked into page-aligned spans of ``chunk_pages`` pages and
+chain-hashed: chunk ``i``'s key digests its parent's key plus its own
+token bytes, and the chain is rooted in a *namespace* — the adapter
+identity ``(client_id, store_seq)`` the row will decode under (degraded
+rows use a base-model sentinel). Two prompts therefore share cached
+pages only when BOTH the full token prefix AND the adapter bytes that
+produced the KV match; publishing new bytes for a client bumps its
+store sequence, so stale prefixes miss automatically — no invalidation
+sweep.
+
+Two entry kinds live in one LRU map:
+
+* **chunk** entries — ``chunk_pages`` whole pages of KV for one
+  page-aligned span. Hits shorten prefill to the divergent suffix.
+* **tail** entries — the final *partial* page(s) of a prompt, keyed by
+  (last chunk key, tail token bytes). A tail hit upgrades a chunk-level
+  hit to a full-prompt hit; the first decode token then lands in a
+  shared page and triggers the row's one copy-on-write.
+
+The cache holds its own ``PagePool`` reference on every cached page
+(``pool.share``), so a donor row retiring leaves its prefix resident.
+``evict_for`` walks LRU→MRU under pool pressure and reclaims entries no
+live row shares (refcount 1 == cache-only) — reclaim-before-shed.
+"""
+from __future__ import annotations
+
+import hashlib
+from collections import OrderedDict
+
+import numpy as np
+
+
+def _digest(parent, tokens, kind=b"C"):
+    """Chain key: parent key + this span's token bytes. ``kind`` keeps
+    chunk and tail keys disjoint even for identical token spans."""
+    h = hashlib.blake2b(kind + parent, digest_size=16)
+    h.update(np.ascontiguousarray(tokens, np.int32).tobytes())
+    return h.digest()
+
+
+def _root(ns):
+    return hashlib.blake2b(repr(ns).encode(), digest_size=16).digest()
+
+
+class PrefixCache:
+    """LRU map of chain-hash key → cached physical page ids."""
+
+    def __init__(self, pool, *, chunk_pages=1, trace=None):
+        assert chunk_pages >= 1
+        self.pool = pool
+        self.chunk_pages = chunk_pages
+        self.chunk_tokens = chunk_pages * pool.page_size
+        self.trace = trace
+        self._entries = OrderedDict()  # key → [page id, ...]
+        self.hits = 0                  # lookups that matched >= 1 chunk
+        self.misses = 0
+        self.inserts = 0               # new entries registered
+        self.evictions = 0             # entries reclaimed under pressure
+
+    def __len__(self):
+        return len(self._entries)
+
+    def _keys(self, ns, prompt):
+        """Chain keys for every full chunk of ``prompt``, plus the tail
+        key (or None when the prompt is chunk-aligned)."""
+        prompt = np.asarray(prompt, np.int32)
+        n, step = len(prompt), self.chunk_tokens
+        keys, parent = [], _root(ns)
+        for i in range(0, n - step + 1, step):
+            parent = _digest(parent, prompt[i:i + step])
+            keys.append(parent)
+        rem = n % step
+        tail = _digest(parent, prompt[n - rem:], kind=b"T") if rem else None
+        return keys, tail
+
+    def lookup(self, ns, prompt):
+        """(matched_tokens, shared_pages) for the longest cached prefix.
+
+        ``matched_tokens`` is either a whole number of chunks (page
+        aligned — prefill continues from that boundary) or the full
+        prompt length (tail hit — only the first decode token remains).
+        The caller owns taking its refs (``pool.share``) on the returned
+        pages before anything else touches the pool.
+        """
+        keys, tail = self._keys(ns, prompt)
+        pages, matched = [], 0
+        for j, k in enumerate(keys):
+            entry = self._entries.get(k)
+            if entry is None:
+                break
+            self._entries.move_to_end(k)
+            pages += entry
+            matched = (j + 1) * self.chunk_tokens
+        else:
+            # every full chunk matched — a tail entry completes the prompt
+            entry = tail and self._entries.get(tail)
+            if entry:
+                self._entries.move_to_end(tail)
+                pages += entry
+                matched = len(prompt)
+        self.hits += matched > 0
+        self.misses += matched == 0
+        return matched, pages
+
+    def insert(self, ns, prompt, pages):
+        """Register a freshly prefilled row's pages (chunk by chunk, plus
+        its partial tail). Spans already cached are touched, not
+        duplicated — the cache keeps ONE physical copy per span and takes
+        its own pool reference on each newly registered page."""
+        keys, tail = self._keys(ns, prompt)
+        for j, k in enumerate(keys):
+            if k in self._entries:
+                self._entries.move_to_end(k)
+                continue
+            span = pages[j * self.chunk_pages:(j + 1) * self.chunk_pages]
+            self.pool.share(span)
+            self._entries[k] = list(span)
+            self.inserts += 1
+        if tail is not None:
+            if tail in self._entries:
+                self._entries.move_to_end(tail)
+            else:
+                span = pages[len(keys) * self.chunk_pages:
+                             self.pool.pages_needed(len(prompt))]
+                self.pool.share(span)
+                self._entries[tail] = list(span)
+                self.inserts += 1
+
+    def evict_for(self, pool, needed):
+        """Reclaim cold entries (LRU→MRU) until ``needed`` pages are
+        free, skipping entries a live row still shares. A parent chunk is
+        always touched before its children, so it sits EARLIER in LRU
+        order and one walk reclaims whole stale chains parent-first.
+        Returns pages freed."""
+        freed, stale = 0, []
+        for k, pages in self._entries.items():
+            if pool.free_count + freed >= needed:
+                break
+            if all(pool.refcount(p) == 1 for p in pages):
+                stale.append(k)
+                freed += len(pages)
+        for k in stale:
+            pages = self._entries.pop(k)
+            pool.release(pages)
+            self.evictions += 1
+            if self.trace is not None:
+                self.trace.emit("prefix_evict", pages=len(pages))
+        return freed
+
+    def clear(self, pool):
+        """Drop every cache reference (pages shared by live rows just
+        lose the cache's hold)."""
+        for pages in self._entries.values():
+            pool.release(pages)
+        self._entries.clear()

@@ -193,6 +193,7 @@ class AdapterRegistry:
         # from the host ring (host-hit) or stalls on a cold npz load
         self.tier_host_hits = self.tier_cold_misses = 0
         self.prefetches = 0
+        self.tier_prestages = 0             # host→HBM pre-stages (free slot)
         self._tier_seen = {}                # store counter → obs diff base
         # exact per-acquire wall samples, (tier, seconds) — bounded so a
         # long-lived registry stays O(1); the tiering bench reads p99
@@ -344,6 +345,13 @@ class AdapterRegistry:
         tag would treat them as already-served)."""
         return (client_id, self._store_seq.get(client_id, 0))
 
+    def adapter_tag(self, client_id):
+        """Public adapter-bytes identity for ``client_id`` — the prefix
+        cache's namespace key. Changes whenever the bytes a NEW admission
+        would decode under change (ingest, or a publish once its flip
+        commits), so KV cached under old bytes can never be reused."""
+        return self._tag_of(client_id)
+
     def _write_slot(self, slot, client_id, buf=0):
         """Commit a client's stored leaves into table position
         ``buf*stride + slot`` as ONE jitted, donated device call.
@@ -376,14 +384,33 @@ class AdapterRegistry:
 
     # -- tiering / prefetch (repro.serving.store) ---------------------------
     def prefetch(self, client_id):
-        """Queue a background host-ward promotion for a cold client.
-        No-op (False) for HBM-resident, already-host, unknown, or
-        already-queued clients. The engine calls this with the
-        scheduler's admission lookahead at host-sync boundaries, so the
-        promotion I/O overlaps the device scan."""
+        """Stage a queued client one tier up before its admission.
+
+        Host-warm client + a FREE slot → pre-stage straight into HBM
+        now (``tier_prestage``): the slot write is one async jitted
+        dispatch that overlaps the device scan, so the later ``acquire``
+        is a resident hit with zero admission stall. Cold client → queue
+        a background host-ward promotion on the prefetcher thread (the
+        next lookahead pass then prestages it host→HBM). No-op (False)
+        for HBM-resident, unknown, already-queued, or host-warm-but-no-
+        free-slot clients — prestaging never evicts."""
         if client_id in self._lru:
             return False
-        if self._store.tier_of(client_id) != "cold":
+        tier = self._store.tier_of(client_id)
+        if tier == "host" and self._free:
+            slot = self._free.pop()
+            self._write_slot(slot, client_id, self.active_buf)
+            self._lru[client_id] = slot
+            self.tier_prestages += 1
+            if self.trace is not None:
+                self.trace.emit("tier_prestage", client=client_id,
+                                slot=slot)
+            if self.metrics is not None:
+                self.metrics.counter(
+                    "repro_adapter_tier_prestage_total",
+                    "host→HBM pre-stages into a free slot").inc()
+            return True
+        if tier != "cold":
             return False
         if self._prefetcher is None:
             self._prefetcher = Prefetcher(self._store)
@@ -460,6 +487,7 @@ class AdapterRegistry:
         self.hits = self.misses = self.evictions = 0
         self.tier_host_hits = self.tier_cold_misses = 0
         self.prefetches = 0
+        self.tier_prestages = 0
         self._admit_samples.clear()
         self._store.reset_counters()
         self._tier_seen = {}
@@ -684,6 +712,7 @@ class AdapterRegistry:
                "promotions": self._store.promotions,
                "demotions": self._store.demotions,
                "prefetches": self.prefetches,
+               "tier_prestages": self.tier_prestages,
                "mode": self.mode, "local_A": self.has_local_A,
                "clients": len(self._store), "version": self.version,
                "flips": self.flips, "deferred_flips": self.deferred_flips,

@@ -82,6 +82,7 @@ class PagePool:
         span = n_pages // n_shards
         self._frees = [list(range(max(1, s * span), (s + 1) * span))[::-1]
                        for s in range(n_shards)]
+        self._refs = {}                # page id → holder count (absent = free)
         self.cross_shard_allocs = 0    # allocs that stole >= 1 foreign page
 
     def pages_needed(self, n_tokens):
@@ -99,9 +100,13 @@ class PagePool:
     def used_count(self):
         return self.capacity - self.free_count
 
+    def refcount(self, page):
+        """Holders of a physical page (0 = free / the write-off page)."""
+        return self._refs.get(page, 0)
+
     def alloc(self, n, shard=0):
         """n physical page ids (shard-local first), or None if the pool
-        can't cover them."""
+        can't cover them. Every returned page starts at refcount 1."""
         if n > self.free_count:
             return None
         pages, stole = [], False
@@ -113,12 +118,35 @@ class PagePool:
             if len(pages) == n:
                 break
         self.cross_shard_allocs += stole
+        for p in pages:
+            self._refs[p] = 1
         return pages
 
+    def share(self, pages):
+        """Add a holder to already-allocated pages (prefix-cache sharing).
+        Sharing a free page is a bug — the free list would hand it out
+        again while the 'share' still points at it."""
+        for p in pages:
+            if p not in self._refs:
+                raise ValueError(f"share of free page {p}")
+            self._refs[p] += 1
+
     def release(self, pages):
+        """Drop one holder per page; a page returns to the free list only
+        when its last holder releases. Releasing an already-free page id
+        raises — silently re-appending it would put the SAME physical
+        page on the free list twice, and two later sequences would then
+        scribble over each other's KV."""
         span = self.n_pages // self.n_shards
         for p in pages:
-            self._frees[p // span].append(p)
+            refs = self._refs.get(p)
+            if refs is None:
+                raise ValueError(f"double release of page {p}")
+            if refs > 1:
+                self._refs[p] = refs - 1
+            else:
+                del self._refs[p]
+                self._frees[p // span].append(p)
 
 
 @dataclasses.dataclass
@@ -145,6 +173,11 @@ class Sequence:
     finished: bool = False             # early stop (engine saw eos_id)
     degraded: bool = False             # serving the base model (zero slot)
     deadline_hit: bool = False         # retired by the deadline sweep
+    prefix_len: int = 0                # prompt tokens served from the cache
+    prefix_ns: tuple = None            # prefix namespace (adapter identity)
+    cow_stash: list = dataclasses.field(default_factory=list)
+    # ^ page(s) reserved at admission for the one copy-on-write this row
+    #   can ever need (its partial tail page); released at retire if unused
     # latency trace stamps (perf_counter; see repro.obs):
     t_admit: float = 0.0               # left the queue for a batch row
     t_first: float = 0.0               # first token visible on the host
@@ -163,7 +196,7 @@ class Sequence:
 
 class Scheduler:
     def __init__(self, max_batch, *, pool=None, table_pages=0, trace=None,
-                 max_queue=None, degrade_after_s=None):
+                 max_queue=None, degrade_after_s=None, prefix=None):
         """max_queue: bound on the waiting queue — a submit past it is
         SHED (returns None, ``request_shed`` event) instead of growing
         host memory without bound. None = unbounded (legacy behavior).
@@ -177,12 +210,17 @@ class Scheduler:
         self.trace = trace             # optional repro.obs.TraceLog
         self.max_queue = max_queue
         self.degrade_after_s = degrade_after_s
+        self.prefix = prefix           # optional serving.prefix.PrefixCache
         self.queue = deque()
         self.active = {}               # row → Sequence
         self._free_rows = list(range(max_batch))[::-1]
         self._next_rid = 0
         self.shed = 0                  # requests refused or dropped unserved
         self.degraded_admits = 0
+        self.prefix_lookups = 0        # paged admissions with the cache on
+        self.prefix_hits = 0           # admissions that reused >= 1 page
+        self.prefix_hit_tokens = 0     # prompt tokens skipped via the cache
+        self.pages_shared = 0          # physical pages reused across rows
         self.block_tables = (np.zeros((max_batch, table_pages), np.int32)
                              if pool is not None else None)
 
@@ -260,33 +298,72 @@ class Scheduler:
             if got is None:
                 break
             slot, degraded = got
-            pages = []
+            pages, shared, stashed, matched, ns = [], [], [], 0, None
             if self.pool is not None:
-                needed = self.pool.pages_needed(
+                total = self.pool.pages_needed(
                     len(req.prompt) + req.max_new_tokens)
+                if self.prefix is not None:
+                    self.prefix_lookups += 1
+                    ns = (("base",) if degraded
+                          else registry.adapter_tag(req.client_id))
+                    matched, shared = self.prefix.lookup(ns, req.prompt)
+                    # hold this row's refs NOW so the cache eviction a few
+                    # lines down can never reclaim the pages it points at
+                    self.pool.share(shared)
+                # one spare page for the single CoW this row can ever
+                # need (its partial tail page turning shared) — reserved
+                # up front so the copy can't fail under a full pool
+                stash = (1 if self.prefix is not None
+                         and len(req.prompt) % self.pool.page_size
+                         else 0)
+                private = total - len(shared)
                 # rows partition over pool shards the same way GSPMD
                 # blocks the batch axis: row r → shard r*S/max_batch,
                 # so a sharded engine's KV writes stay shard-local
                 row_hint = self._free_rows[-1]
-                pages = self.pool.alloc(
-                    needed,
-                    shard=row_hint * self.pool.n_shards // self.max_batch)
+                shard = row_hint * self.pool.n_shards // self.max_batch
+                pages = self.pool.alloc(private + stash, shard=shard)
+                if pages is None and self.prefix is not None:
+                    # reclaim cold cached prefixes before shedding work
+                    self.prefix.evict_for(self.pool, private + stash)
+                    pages = self.pool.alloc(private + stash, shard=shard)
+                if pages is None and (shared or stash):
+                    # sharing + stash still don't fit — admit this row
+                    # cache-bypass (all-private pages, never inserted, so
+                    # no CoW can arise): a request the bare pool CAN hold
+                    # must never wait on the cache
+                    self.pool.release(shared)
+                    matched, shared, ns, stash = 0, [], None, 0
+                    private = total
+                    pages = self.pool.alloc(total, shard=shard)
                 if pages is None:      # pool exhausted: stay queued
+                    self.pool.release(shared)
                     if not degraded:
                         registry.release(req.client_id)
                     if self.trace is not None:
                         self.trace.emit("pool_exhausted",
                                         client=req.client_id,
-                                        needed=needed,
+                                        needed=private + stash,
                                         free=self.pool.free_count)
                     break
+                stashed = pages[private:]
+                pages = shared + pages[:private]
+                if matched:
+                    self.prefix_hits += 1
+                    self.prefix_hit_tokens += matched
+                    self.pages_shared += len(shared)
+                    if self.trace is not None:
+                        self.trace.emit("prefix_hit", rid=req.rid,
+                                        client=req.client_id,
+                                        tokens=matched, pages=len(shared))
             self.queue.popleft()
             row = self._free_rows.pop()
             now = time.perf_counter()
             seq = Sequence(req, row, slot, pos=len(req.prompt), pages=pages,
                            buf=registry.retain_buffer(),
                            version=registry.version, t_admit=now,
-                           degraded=degraded)
+                           degraded=degraded, prefix_len=matched,
+                           prefix_ns=ns, cow_stash=stashed)
             if self.trace is not None:
                 self.trace.emit("admit", rid=req.rid, client=req.client_id,
                                 row=row, slot=slot,
@@ -299,14 +376,16 @@ class Scheduler:
         return admitted
 
     def retire(self, row, registry):
-        """Free a finished row + its registry pin, buffer hold + pages."""
+        """Free a finished row + its registry pin, buffer hold + pages.
+        Page release is a refcounted recycle: pages the prefix cache (or
+        a sibling row) still holds merely drop this row's reference."""
         seq = self.active.pop(row)
         if not seq.degraded:           # degraded rows never pinned a slot
             registry.release(seq.request.client_id)
         registry.release_buffer(seq.buf)
         if self.pool is not None:
-            self.pool.release(seq.pages)
-            seq.pages = []
+            self.pool.release(seq.pages + seq.cow_stash)
+            seq.pages, seq.cow_stash = [], []
             self.block_tables[row] = 0
         self._free_rows.append(row)
         return seq

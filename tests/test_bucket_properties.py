@@ -1,0 +1,74 @@
+"""Property tests for the serving bucketing laws (hypothesis-backed;
+skip cleanly on bare environments via the conftest shim).
+
+Three functions carry every padding/retrace bound in the paged engine:
+``bucket_len`` (pow2 length buckets), ``ServingEngine._page_bucket``
+(the half-pow2 {2^k, 3·2^k} ladder), and ``PagePool.pages_needed``
+(ceil-div page counts). Their algebraic properties — minimality,
+monotonicity, ladder membership, alignment — are what the retrace and
+reservation arguments in engine.py actually rest on.
+"""
+import pytest
+
+from conftest import HAVE_HYPOTHESIS, given, settings, st  # noqa: F401
+
+from repro.serving import PagePool, ServingEngine, bucket_len
+
+
+@given(st.integers(0, 1 << 16), st.sampled_from([1, 2, 4, 8, 16, 64]))
+def test_bucket_len_is_minimal_pow2_cover(n, lo):
+    b = bucket_len(n, lo)
+    assert b >= max(n, lo)
+    assert b & (b - 1) == 0                  # a power of two
+    assert b == lo or b // 2 < max(n, lo)    # minimal: half would miss
+    assert b % lo == 0                       # whole multiples of the floor
+
+
+@given(st.integers(0, 1 << 16), st.integers(0, 1 << 16))
+def test_bucket_len_is_monotone(n, m):
+    if n <= m:
+        assert bucket_len(n) <= bucket_len(m)
+    else:
+        assert bucket_len(n) >= bucket_len(m)
+
+
+@given(st.integers(1, 1 << 16))
+def test_page_bucket_on_ladder_minimal_and_tight(n):
+    b = ServingEngine._page_bucket(n)
+    # membership: b is 2^k or 3·2^k
+    assert b & (b - 1) == 0 or (b % 3 == 0 and
+                                (b // 3) & (b // 3 - 1) == 0)
+    assert n <= b                            # covers the request
+    assert b <= max(2, -(-3 * n // 2))       # within 1.5x (except n=1→1,2)
+    # minimality: no smaller ladder rung covers n
+    smaller = {1 << k for k in range(17)} | {3 << k for k in range(16)}
+    assert not any(n <= r < b for r in smaller)
+
+
+@given(st.integers(0, 1 << 20), st.sampled_from([1, 2, 4, 8, 16, 128]))
+def test_pages_needed_is_ceil_div(n_tokens, page_size):
+    pool = PagePool(n_pages=4, page_size=page_size)
+    got = pool.pages_needed(n_tokens)
+    assert got * page_size >= n_tokens       # covers every token
+    assert (got - 1) * page_size < n_tokens or got == 0   # no slack page
+    assert got == (n_tokens + page_size - 1) // page_size
+
+
+# deterministic edge cases — these run even without hypothesis
+@pytest.mark.parametrize("page_size", [1, 4, 16])
+def test_pages_needed_edges(page_size):
+    pool = PagePool(n_pages=4, page_size=page_size)
+    assert pool.pages_needed(0) == 0                 # 0-token prompt
+    assert pool.pages_needed(1) == 1
+    for k in (1, 2, 7):                              # exact multiples
+        assert pool.pages_needed(k * page_size) == k
+        assert pool.pages_needed(k * page_size + 1) == k + 1
+    max_seq = 64
+    assert pool.pages_needed(max_seq) == -(-max_seq // page_size)
+
+
+def test_bucket_len_edges():
+    assert bucket_len(0) == 1 and bucket_len(1) == 1
+    assert bucket_len(0, 16) == 16
+    assert [bucket_len(n, 16) for n in (15, 16, 17, 32, 33)] == \
+        [16, 16, 32, 32, 64]

@@ -141,7 +141,7 @@ def test_trace_schema_round_trip():
             "version": 1, "blocking_rows": 1, "needed": 2, "free": 0,
             "from_ticks": 8, "to_ticks": 4, "tokens": 6, "ttft_s": 0.2,
             "e2e_s": 0.3, "kind": "dropout", "round": 2,
-            "reason": "queue_full", "tier": "cold"}
+            "reason": "queue_full", "tier": "cold", "pages": 3, "page": 7}
     for ev, required in EVENT_SCHEMA.items():
         log.emit(ev, **{k: fill[k] for k in required})
     n, errors = validate_trace(log.to_jsonl())

@@ -1,0 +1,317 @@
+"""Copy-on-write prefix caching for the paged KV pool (PR 10).
+
+Covers the refcount layer (double-release / share-of-free guards, shared
+pages recycling only at the last holder), the PrefixCache unit semantics
+(chain hashing, chunk + tail entries, namespace isolation, LRU eviction
+that skips live pages), and the engine-level acceptance matrix: token
+parity cache-on vs cache-off across decode and LoRA backends, the
+mid-decode CoW fork, a prefix hit surviving a live-refresh flip, and the
+poisoned-page invariant (shared page bytes never mutate).
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import AdapterConfig, get_config, reduced
+from repro.core.adapters import init_adapters
+from repro.models.transformer import init_model
+from repro.obs import TraceLog, validate_trace
+from repro.serving import (AdapterRegistry, PagePool, PrefixCache,
+                           ServingConfig, ServingEngine)
+from repro.serving.demo import synthetic_clients
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced(get_config("deepseek-7b"), n_layers=2, d_model=64)
+    acfg = AdapterConfig(mode="fedsa", rank=4)
+    params = init_model(KEY, cfg, jnp.float32)
+    base = init_adapters(KEY, cfg, acfg)
+    trees = [t["adapters"] for t in
+             synthetic_clients({"adapters": base}, 5, seed=50, scale=0.05)]
+    return cfg, acfg, params, base, trees
+
+
+def make_engine(setup, *, trace=None, versioned=False, **kw):
+    cfg, acfg, params, base, trees = setup
+    reg = AdapterRegistry({"adapters": base}, n_slots=kw.pop("n_slots", 2),
+                          versioned=versioned)
+    for i, t in enumerate(trees):
+        reg.ingest(i, {"adapters": t})
+    return ServingEngine(cfg, params, acfg, reg, ServingConfig(**kw),
+                         trace=trace)
+
+
+def shared_prefix_prompts(cfg, *, prefix_len=16, n=6, seed=1):
+    """n prompts sharing a prefix_len-token prefix with divergent
+    suffixes, plus one exact repeat of the first (full-prompt hit)."""
+    rng = np.random.default_rng(seed)
+    head = rng.integers(0, cfg.vocab_size, prefix_len)
+    out = [np.concatenate([head, rng.integers(0, cfg.vocab_size, 5 + i)])
+           for i in range(n)]
+    return out + [out[0].copy()]
+
+
+def serve(eng, prompts, *, n_clients=3, new_tokens=5):
+    for i, p in enumerate(prompts):
+        eng.submit(i % n_clients, p, max_new_tokens=new_tokens)
+    rep = eng.run()
+    return rep, {r: eng.finished[r]["tokens"].tolist() for r in eng.finished}
+
+
+COMMON = dict(max_batch=2, max_seq=32, kv_layout="paged", page_size=8,
+              n_pages=33)
+
+
+@pytest.fixture(scope="module")
+def baseline(setup):
+    """Cache-off tokens for the standard shared-prefix workload."""
+    prompts = shared_prefix_prompts(setup[0])
+    _, want = serve(make_engine(setup, **COMMON), prompts)
+    return prompts, want
+
+
+# ---------------------------------------------------------------------------
+# PagePool refcounts: guards + recycle-at-zero
+# ---------------------------------------------------------------------------
+
+def test_pool_double_release_raises():
+    pool = PagePool(n_pages=5, page_size=4)
+    pages = pool.alloc(2)
+    pool.release(pages)
+    with pytest.raises(ValueError, match="double release"):
+        pool.release(pages[:1])
+    # the free list holds each page exactly once
+    assert pool.free_count == pool.capacity
+    assert len(set(sum(pool._frees, []))) == pool.free_count
+
+
+def test_pool_share_of_free_page_raises():
+    pool = PagePool(n_pages=5, page_size=4)
+    with pytest.raises(ValueError, match="share of free page"):
+        pool.share([3])
+    page = pool.alloc(1)[0]
+    pool.release([page])
+    with pytest.raises(ValueError, match="share of free page"):
+        pool.share([page])
+
+
+def test_pool_shared_page_recycles_at_last_holder():
+    pool = PagePool(n_pages=5, page_size=4)
+    page = pool.alloc(1)[0]
+    pool.share([page])
+    assert pool.refcount(page) == 2
+    pool.release([page])                     # first holder drops
+    assert pool.refcount(page) == 1
+    assert pool.free_count == pool.capacity - 1   # still held
+    pool.release([page])                     # last holder → recycled
+    assert pool.refcount(page) == 0
+    assert pool.free_count == pool.capacity
+    assert pool.alloc(4) is not None         # whole pool allocatable again
+
+
+# ---------------------------------------------------------------------------
+# PrefixCache unit semantics
+# ---------------------------------------------------------------------------
+
+def test_prefix_cache_chunks_tail_and_namespaces():
+    pool = PagePool(n_pages=9, page_size=4)
+    cache = PrefixCache(pool, chunk_pages=1)
+    prompt = np.arange(10, dtype=np.int32)   # 2 full pages + 2-token tail
+    pages = pool.alloc(3)
+    cache.insert(("a", 0), prompt, pages)
+    assert len(cache) == 3                   # 2 chunks + 1 tail
+    assert all(pool.refcount(p) == 2 for p in pages)
+    # full-prompt hit (chunks + tail)
+    matched, got = cache.lookup(("a", 0), prompt)
+    assert matched == 10 and got == pages
+    # divergent continuation: chunk-aligned partial hit
+    other = np.concatenate([prompt[:8], [99, 98, 97]]).astype(np.int32)
+    matched, got = cache.lookup(("a", 0), other)
+    assert matched == 8 and got == pages[:2]
+    # first-token divergence and foreign namespace: clean misses
+    assert cache.lookup(("a", 0), np.array([7, 1, 2], np.int32))[0] == 0
+    assert cache.lookup(("b", 0), prompt)[0] == 0
+    # re-insert of an identical prompt registers nothing new
+    inserts = cache.inserts
+    cache.insert(("a", 0), prompt, pages)
+    assert cache.inserts == inserts and len(cache) == 3
+
+
+def test_prefix_evict_skips_live_pages():
+    pool = PagePool(n_pages=9, page_size=4)
+    cache = PrefixCache(pool, chunk_pages=1)
+    live = pool.alloc(2)
+    cache.insert(("live", 0), np.arange(8, dtype=np.int32), live)
+    pool.share(live)                         # a row still reads these
+    cold = pool.alloc(2)
+    cache.insert(("cold", 0), np.arange(100, 108, dtype=np.int32), cold)
+    pool.release(cold)                       # donor retired: cache-only
+    # live rows survive even under a demand the pool can't meet
+    freed = cache.evict_for(pool, needed=pool.capacity)
+    assert freed == 2                        # only the cold chain
+    assert cache.lookup(("live", 0), np.arange(8, dtype=np.int32))[0] == 8
+    assert cache.lookup(("cold", 0),
+                        np.arange(100, 108, dtype=np.int32))[0] == 0
+    assert cache.evictions == 2
+
+
+# ---------------------------------------------------------------------------
+# engine acceptance: parity matrix + counters
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("decode_backend", ["per-tick", "fused"])
+@pytest.mark.parametrize("lora_backend", ["bgmv", "sgmv"])
+def test_cache_on_off_token_parity(setup, baseline, decode_backend,
+                                   lora_backend):
+    """Cache-on must be token-identical to cache-off across the decode ×
+    LoRA backend matrix — while actually sharing pages (hits > 0)."""
+    prompts, want = baseline
+    rep, got = serve(make_engine(setup, **COMMON, prefix_cache=True,
+                                 decode_backend=decode_backend,
+                                 lora_backend=lora_backend), prompts)
+    assert got == want
+    assert rep["prefix_hits"] >= 3
+    assert rep["prefix_hit_tokens"] >= 3 * 16
+    assert rep["pages_shared"] >= 3
+    assert rep["cow_copies"] >= 1
+    assert rep["prefix_hit_rate"] > 0
+
+
+def test_mid_decode_cow_fork(setup, baseline):
+    """A full-prompt hit lands while the donor row is mid-decode: the
+    donor must have CoW'd its tail page (insert shared it), and both
+    rows — identical prompt, identical adapter — emit identical,
+    cache-off-identical tokens."""
+    cfg = setup[0]
+    p = shared_prefix_prompts(cfg)[0]        # 21 tokens: partial tail
+    eng = make_engine(setup, **COMMON, prefix_cache=True)
+    eng.submit(0, p, max_new_tokens=6)
+    eng.step()                               # donor prefilled + decoding
+    assert eng.scheduler.active, "donor should still be mid-decode"
+    assert eng.cow_copies >= 1               # tail CoW before first write
+    eng.submit(0, p, max_new_tokens=6)       # forks the live donor
+    rep = eng.run()
+    assert rep["prefix_hits"] == 1
+    assert rep["prefix_hit_tokens"] == len(p)
+    toks = [eng.finished[r]["tokens"].tolist() for r in sorted(eng.finished)]
+    assert toks[0] == toks[1]
+    off = make_engine(setup, **COMMON)
+    off.submit(0, p, max_new_tokens=6)
+    off.submit(0, p, max_new_tokens=6)
+    off.run()
+    want = [off.finished[r]["tokens"].tolist() for r in sorted(off.finished)]
+    assert toks == want
+
+
+def test_shared_pages_never_mutate(setup):
+    """The refcount invariant, checked on device bytes: every page the
+    cache holds is bit-identical before and after a wave of admissions
+    that hit, extend, and decode past the cached prefix."""
+    cfg = setup[0]
+    prompts = shared_prefix_prompts(cfg)
+    eng = make_engine(setup, **COMMON, prefix_cache=True)
+    eng.submit(0, prompts[0], max_new_tokens=5)
+    eng.run()                                # donor retired; cache holds it
+    pages = sorted({p for e in eng.prefix._entries.values() for p in e})
+    assert pages
+
+    def snap():
+        jax.block_until_ready(eng.cache)
+        return [np.asarray(e[k][:, pages]).tobytes()
+                for e in eng.cache for k in ("k", "v")]
+
+    before = snap()
+    for i, p in enumerate(prompts):          # hits + forks + decode churn
+        eng.submit(i % 3, p, max_new_tokens=5)
+    rep = eng.run()
+    assert rep["prefix_hits"] >= 1 and rep["cow_copies"] >= 1
+    # eviction would recycle (and legitimately rewrite) a page: the
+    # roomy pool above must not have needed any
+    assert rep["prefix_evictions"] == 0
+    assert snap() == before, "a shared page's KV bytes changed"
+
+
+def test_prefix_hit_across_refresh_flip(setup):
+    """Live refresh: a flip that does NOT touch a client's bytes keeps
+    its cached prefixes valid (hit), while publishing new bytes for the
+    client changes its adapter tag and the stale prefix misses — with
+    tokens matching a from-scratch engine holding the new bytes."""
+    cfg, acfg, params, base, trees = setup
+    p = shared_prefix_prompts(cfg)[0]
+    eng = make_engine(setup, **COMMON, versioned=True, prefix_cache=True)
+    reg = eng.registry
+
+    def serve_one(engine, cid):
+        rid = engine.submit(cid, p, max_new_tokens=4)
+        engine.run()
+        return engine.finished[rid]["tokens"].tolist()
+
+    t0 = serve_one(eng, 0)                   # miss + insert
+    t1 = serve_one(eng, 0)                   # full-prompt hit
+    assert eng.scheduler.prefix_hits == 1 and t1 == t0
+    new = synthetic_clients({"adapters": base}, 5, seed=99, scale=0.05)
+    # flip that leaves client 0 untouched → its tag (and prefixes) hold
+    assert reg.publish(reg.version + 1, {1: new[1]})
+    t2 = serve_one(eng, 0)
+    assert eng.scheduler.prefix_hits == 2 and t2 == t0
+    # flip client 0's own bytes → stale prefix must miss
+    tag_before = reg.adapter_tag(0)
+    assert reg.publish(reg.version + 1, {0: new[0]})
+    assert reg.adapter_tag(0) != tag_before
+    t3 = serve_one(eng, 0)
+    assert eng.scheduler.prefix_hits == 2    # no hit on stale KV
+    fresh = make_engine(setup, **COMMON, versioned=True)
+    fresh.registry.ingest(0, new[0])
+    assert serve_one(fresh, 0) == t3         # new-bytes tokens are right
+
+
+def test_trace_events_and_eviction_under_pressure(setup):
+    """A pool with no headroom: admissions reclaim cached prefixes
+    (prefix_evict) instead of stalling, hits/CoW still trace, and the
+    timeline validates against EVENT_SCHEMA."""
+    cfg = setup[0]
+    tr = TraceLog(validate=True)
+    prompts = shared_prefix_prompts(cfg)
+    eng = make_engine(setup, max_batch=2, max_seq=32, kv_layout="paged",
+                      page_size=8, n_pages=13, prefix_cache=True, trace=tr)
+    rep, got = serve(eng, prompts)
+    assert rep["requests"] == len(prompts)
+    _, want = serve(make_engine(setup, max_batch=2, max_seq=32,
+                                kv_layout="paged", page_size=8,
+                                n_pages=13), prompts)
+    assert got == want                       # pressure path stays exact
+    evs = {e["ev"] for e in tr.events}
+    assert "cow_copy" in evs and "prefix_evict" in evs
+    assert rep["prefix_evictions"] > 0
+    n, errors = validate_trace(tr.to_jsonl())
+    assert n == len(tr.events) and not errors
+
+
+def test_prefix_config_validation(setup):
+    with pytest.raises(ValueError, match="dense"):
+        ServingConfig(prefix_cache=True, kv_layout="dense")
+    with pytest.raises(ValueError, match="shard_serving"):
+        ServingConfig(prefix_cache=True, shard_serving=True)
+    with pytest.raises(ValueError, match="prefix_chunk_pages"):
+        ServingConfig(prefix_chunk_pages=0)
+    # auto-resolved dense (SSM family) rejects at engine construction
+    cfg, acfg, params, base, trees = setup
+    ssm_cfg = reduced(get_config("falcon-mamba-7b"))
+    reg = AdapterRegistry({"adapters": base}, n_slots=2)
+    with pytest.raises(ValueError, match="paged KV layout"):
+        ServingEngine(ssm_cfg, None, acfg, reg,
+                      ServingConfig(max_batch=2, max_seq=16,
+                                    prefix_cache=True))
+
+
+def test_prefix_cache_off_reports_zeros(setup, baseline):
+    prompts, _ = baseline
+    rep, _ = serve(make_engine(setup, **COMMON), prompts)
+    assert rep["prefix_hits"] == 0 and rep["pages_shared"] == 0
+    assert rep["cow_copies"] == 0 and rep["prefix_entries"] == 0
+    assert rep["prefix_hit_rate"] is None

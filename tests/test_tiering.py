@@ -207,6 +207,34 @@ def test_prefetch_converts_cold_miss_to_host_hit(tmp_path):
     assert tiers[-1] == "host"
 
 
+def test_prestage_host_warm_lands_hbm_no_stall(tmp_path):
+    """PR 8 gap closed: prefetch of a HOST-warm client with a free HBM
+    slot pre-stages it straight into the slot table, so the eventual
+    admission is a plain registry hit — no tier fetch, no stall."""
+    template, trees = fedsa_setup()
+    reg = AdapterRegistry(template, n_slots=3, host_ring_slots=4,
+                          cold_dir=str(tmp_path))
+    for i, t in enumerate(trees):
+        reg.ingest(i, t)
+    cid = next(i for i in range(len(trees))
+               if reg._store.tier_of(i) == "host")
+    assert reg._free                         # a free HBM slot exists
+    assert reg.prefetch(cid) is True
+    assert reg.stats["tier_prestages"] == 1
+    assert cid in reg._lru                   # resident before any acquire
+    hits, samples = reg.hits, len(reg.admission_samples)
+    tier_before = (reg.stats["tier_host_hits"],
+                   reg.stats["tier_cold_misses"])
+    reg.acquire(cid)
+    reg.release(cid)
+    assert reg.hits == hits + 1              # served as a resident hit
+    new = reg.admission_samples[samples:]
+    assert [t for t, _ in new] == ["hbm"]    # zero-stall HBM admission
+    assert (reg.stats["tier_host_hits"],     # no host/cold fetch ran
+            reg.stats["tier_cold_misses"]) == tier_before
+    assert reg.prefetch(cid) is False        # deduped once resident
+
+
 def test_cold_miss_under_all_pinned_table(tmp_path):
     """All slots pinned: admission still raises RuntimeError (the
     degraded-slot path stays the engine's call), and the FAILED acquire
